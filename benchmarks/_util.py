@@ -1,0 +1,28 @@
+"""Shared benchmark plumbing."""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+RESULTS_DIR = Path(__file__).resolve().parent.parent / "results"
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    """The repo-standard benchmark output line."""
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line)
+    return line
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0

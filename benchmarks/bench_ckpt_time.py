@@ -1,0 +1,46 @@
+"""Paper Tables 3 & 6, time columns: the checkpoint-time fraction of
+end-to-end training, per policy, sync vs async.
+
+Runs the real trainer (reduced llama3.2, synthetic data) for 60 steps with a
+checkpoint every 15, and reports save-seconds / total-seconds.  Paper
+reference points (Qwen2.5-7B): full 20.6% -> parity 12.8% (1.6x) ->
+filtered 7.3% (2.8x).
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+from _util import csv_row
+
+BASE = dict(arch="llama3.2-3b", total_steps=60, batch=8, seq_len=64,
+            ckpt_interval=15, seed=0, lr=1e-3)
+
+
+def run() -> dict:
+    from repro.launch.train import train
+
+    out = {}
+    for policy in ("full", "parity", "filtered"):
+        for async_save in (False, True):
+            tag = f"{policy}_{'async' if async_save else 'sync'}"
+            tmp = tempfile.mkdtemp(prefix=f"bench_time_{tag}_")
+            r = train(ckpt_dir=tmp, policy_name=policy,
+                      ckpt_async=async_save, **BASE)
+            shutil.rmtree(tmp, ignore_errors=True)
+            out[tag] = r
+            csv_row(f"ckpt_time_{tag}", r["save_seconds"] * 1e6 / 4,
+                    f"ckpt_fraction={r['ckpt_time_fraction']*100:.2f}%;"
+                    f"save_s={r['save_seconds']:.3f};"
+                    f"train_s={r['train_seconds']:.2f}")
+    base = out["full_sync"]["ckpt_time_fraction"]
+    for tag, r in out.items():
+        if tag != "full_sync" and r["ckpt_time_fraction"] > 0:
+            csv_row(f"ckpt_time_speedup_{tag}", 0.0,
+                    f"fraction_reduction="
+                    f"{base / r['ckpt_time_fraction']:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,100 @@
+"""Paper Table 7: Frankenstein assembly cost vs (#source checkpoints,
+access pattern).
+
+Scenarios (mirroring the paper's rows):
+- baseline_restore: plain restore of the newest full checkpoint,
+- merge_2: layers split across 2 checkpoints (contiguous halves),
+- merge_parity_2: 2 checkpoints interleaved odd/even (the paper's
+  pathological case — their monolithic optimizer file must be re-read per
+  layer; our per-layer chunks make it cost the same as merge_2),
+- merge_8: layers striped over 8 checkpoints,
+- merge_L: one layer per checkpoint (L sources),
+- implicit_restore_parity: LLMTailor-native path — no explicit merge at
+  all, the manifest chain restores directly.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from _util import Timer, csv_row
+
+
+def run() -> dict:
+    from repro.configs import get_config
+    from repro.core import LayerRegistry, Recipe, make_policy, merge
+    from repro.core.recipe import CheckpointRef, SelectRule
+    from repro.checkpoint.saver import CheckpointManager
+    from repro.launch import steps as steps_lib
+    from repro.models import build_model
+
+    cfg = get_config("llama3.2-3b", reduced=True)
+    model = build_model(cfg)
+    state = steps_lib.init_state(model, jax.random.key(0))
+    registry = LayerRegistry(model)
+    units = registry.unit_names()
+    blocks = [u for u in units if u.startswith("block")]
+
+    root = Path(tempfile.mkdtemp(prefix="bench_merge_"))
+    pol = make_policy("full", model.layer_units())
+    mgr = CheckpointManager(root / "ck", registry, pol, async_save=False,
+                            keep=64)
+    n_steps = max(8, len(blocks))
+    for i in range(n_steps):
+        mgr.save(state, step=(i + 1) * 100)
+
+    like = steps_lib.state_specs(model)
+    results = {}
+
+    with Timer() as t:
+        mgr.restore(like)
+    results["baseline_restore"] = t.seconds
+    csv_row("merge_baseline_restore", t.seconds * 1e6, "sources=1")
+
+    def merge_case(name: str, assign_steps):
+        """assign_steps: unit -> step for non-base units."""
+        rules = {}
+        for u, s in assign_steps.items():
+            rules.setdefault(s, []).append(u)
+        recipe = Recipe(
+            base=CheckpointRef(root / "ck", n_steps * 100),
+            output=root / f"out_{name}",
+            select=[SelectRule(units=us, source=CheckpointRef(root / "ck", s))
+                    for s, us in sorted(rules.items())])
+        with Timer() as t:
+            stats = merge(recipe, workers=2)
+        results[name] = t.seconds
+        csv_row(f"merge_{name}", t.seconds * 1e6,
+                f"sources={stats['sources']};chunks={stats['chunks']};"
+                f"MiB={stats['bytes']/2**20:.1f}")
+
+    half = len(blocks) // 2
+    merge_case("2", {b: 100 for b in blocks[:half]})
+    merge_case("parity_2", {b: 100 for b in blocks[::2]})
+    merge_case("8", {b: ((i % 8) + 1) * 100 for i, b in enumerate(blocks)})
+    merge_case("L", {b: ((i % n_steps) + 1) * 100
+                     for i, b in enumerate(blocks)})
+
+    # implicit restore across a parity chain (no merge step at all)
+    mgr2 = CheckpointManager(root / "ck2", registry,
+                             make_policy("parity", model.layer_units()),
+                             async_save=False)
+    for i in range(4):
+        mgr2.save(state, step=(i + 1) * 100)
+    with Timer() as t:
+        mgr2.restore(like)
+    results["implicit_restore_parity"] = t.seconds
+    csv_row("merge_implicit_restore_parity", t.seconds * 1e6,
+            "sources=manifest-chain")
+    mgr.close()
+    mgr2.close()
+    shutil.rmtree(root, ignore_errors=True)
+    return results
+
+
+if __name__ == "__main__":
+    run()

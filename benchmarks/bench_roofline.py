@@ -1,0 +1,62 @@
+"""Roofline table (EXPERIMENTS.md section Roofline): reads the dry-run JSON
+cells from results/dryrun and prints the 40-cell baseline table + the three
+hillclimb candidates (worst roofline fraction / most collective-bound / most
+representative)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List
+
+from _util import RESULTS_DIR, csv_row
+
+
+def load_cells(mesh: str = "16x16") -> List[dict]:
+    cells = []
+    for p in sorted((RESULTS_DIR / "dryrun").glob(f"*__{mesh}.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def run() -> dict:
+    cells = load_cells()
+    if not cells:
+        print("no dry-run results found; run "
+              "`python -m repro.launch.dryrun --all` first")
+        return {}
+    ok, skipped = [], []
+    for c in cells:
+        if c["status"] == "ok":
+            ok.append(c)
+        elif c["status"] == "skipped":
+            skipped.append(c)
+    for c in ok:
+        r = c["report"]
+        step_us = r["step_time_s"] * 1e6
+        csv_row(f"roofline_{c['arch']}__{c['shape']}", step_us,
+                f"dominant={r['dominant']};mfu={r['mfu']:.3f};"
+                f"roofline_frac={r['roofline_fraction']:.3f};"
+                f"compute_ms={r['compute_s']*1e3:.2f};"
+                f"memory_ms={r['memory_s']*1e3:.2f};"
+                f"collective_ms={r['collective_s']*1e3:.2f};"
+                f"useful={r['useful_flops_ratio']:.3f}")
+    for c in skipped:
+        csv_row(f"roofline_{c['arch']}__{c['shape']}", 0.0, "skipped")
+
+    # hillclimb candidates
+    trains = [c for c in ok if c["shape"] == "train_4k"]
+    worst = min(trains, key=lambda c: c["report"]["roofline_fraction"])
+    coll = max(ok, key=lambda c: (c["report"]["collective_s"]
+                                  / max(c["report"]["step_time_s"], 1e-12)))
+    csv_row("hillclimb_worst_roofline", 0.0,
+            f"{worst['arch']}__{worst['shape']}")
+    csv_row("hillclimb_most_collective", 0.0,
+            f"{coll['arch']}__{coll['shape']}")
+    csv_row("hillclimb_paper_representative", 0.0,
+            "llama3.2-3b__train_4k (paper's model family under training, "
+            "where checkpoint state lives)")
+    return {"ok": len(ok), "skipped": len(skipped)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Render the EXPERIMENTS.md dry-run/roofline tables from results/*.json.
+
+    PYTHONPATH=src python benchmarks/make_report.py [--dir results/dryrun_opt]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}"
+
+
+def load(dir_: Path, mesh: str):
+    rows = []
+    for p in sorted(dir_.glob(f"*__{mesh}.json")):
+        rows.append(json.loads(p.read_text()))
+    return rows
+
+
+def roofline_table(rows):
+    out = ["| arch | shape | dominant | compute ms | memory ms | collective ms | "
+           "step ms | MFU | useful | GiB/dev | fits |",
+           "|---|---|---|---:|---:|---:|---:|---:|---:|---:|---|"]
+    for c in rows:
+        if c["status"] == "skipped":
+            out.append(f"| {c['arch']} | {c['shape']} | *skipped (full attention "
+                       f"@500k)* | | | | | | | | |")
+            continue
+        if c["status"] != "ok":
+            out.append(f"| {c['arch']} | {c['shape']} | **{c['status']}** "
+                       f"| | | | | | | | |")
+            continue
+        r = c["report"]
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {r['dominant']} "
+            f"| {r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} "
+            f"| {r['collective_s']*1e3:.1f} | {r['step_time_s']*1e3:.1f} "
+            f"| {r['mfu']:.3f} | {r['useful_flops_ratio']:.3f} "
+            f"| {fmt_bytes(c.get('bytes_per_device'))} "
+            f"| {'y' if c.get('fits_hbm') else 'n'} |")
+    return "\n".join(out)
+
+
+def compile_table(rows):
+    ok = [c for c in rows if c["status"] == "ok"]
+    sk = [c for c in rows if c["status"] == "skipped"]
+    er = [c for c in rows if c["status"] == "error"]
+    return f"{len(ok)} ok / {len(sk)} skipped / {len(er)} failed"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun_opt")
+    args = ap.parse_args()
+    d = Path(args.dir)
+    single = load(d, "16x16")
+    multi = load(d, "2x16x16")
+    print("## single-pod 16x16:", compile_table(single))
+    print(roofline_table(single))
+    print()
+    print("## multi-pod 2x16x16:", compile_table(multi))
+    print(roofline_table(multi))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table.  Prints
+``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only ckpt_size,merge,...]
+
+Tables covered:
+  bench_ckpt_size    -> Tables 3 & 6 (storage, full vs parity vs filtered)
+  bench_ckpt_time    -> Tables 3 & 6 (checkpoint-time fraction, sync/async)
+  bench_merge        -> Table 7 (Frankenstein assembly cost)
+  bench_resume       -> Tables 1/2/4/5 (resume fidelity per policy)
+  bench_roofline     -> EXPERIMENTS.md roofline table (from dry-run cells)
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+MODULES = ["bench_ckpt_size", "bench_ckpt_time", "bench_merge",
+           "bench_resume", "bench_roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", help="comma-separated subset of: "
+                    + ",".join(m.removeprefix('bench_') for m in MODULES))
+    args = ap.parse_args()
+    selected = MODULES
+    if args.only:
+        want = {w.strip() for w in args.only.split(",")}
+        selected = [m for m in MODULES if m.removeprefix("bench_") in want]
+    print("name,us_per_call,derived")
+    for mod_name in selected:
+        t0 = time.time()
+        print(f"# --- {mod_name} ---")
+        mod = importlib.import_module(mod_name)
+        mod.run()
+        print(f"# {mod_name} done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

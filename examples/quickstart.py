@@ -1,0 +1,36 @@
+"""Quickstart: train a small LM with LLMTailor parity checkpointing, kill
+it, and resume from the Frankenstein merge.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch.train import SimulatedFailure, train  # noqa: E402
+
+
+def main() -> None:
+    ckpt_dir = tempfile.mkdtemp(prefix="quickstart_")
+    common = dict(arch="llama3.2-3b", total_steps=80, batch=8, seq_len=64,
+                  policy_name="parity", ckpt_interval=20, ckpt_dir=ckpt_dir,
+                  lr=2e-3)
+
+    print("== phase 1: train with parity checkpoints, fail at step 65 ==")
+    try:
+        train(fail_at=65, **common)
+    except SimulatedFailure as e:
+        print(f"  !! {e}")
+
+    print("== phase 2: resume from the implicit Frankenstein merge ==")
+    result = train(resume=True, **common)
+    print(f"  final loss      : {result['final_loss']:.4f}")
+    print(f"  ckpt bytes      : {result['ckpt_bytes']/2**20:.1f} MiB")
+    print(f"  ckpt time frac  : {result['ckpt_time_fraction']*100:.1f}%")
+    print(f"  checkpoints in  : {ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Serve a model from an LLMTailor checkpoint with batched prefill+decode.
+
+    PYTHONPATH=src python examples/serve_batched.py [arch]
+"""
+import json
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch.serve import serve  # noqa: E402
+from repro.launch.train import train  # noqa: E402
+
+
+def main() -> None:
+    arch = sys.argv[1] if len(sys.argv) > 1 else "llama3.2-3b"
+    ckpt = tempfile.mkdtemp(prefix="serve_demo_")
+    print(f"== training {arch} briefly to produce a servable checkpoint ==")
+    train(arch=arch, total_steps=40, batch=8, seq_len=64, policy_name="full",
+          ckpt_interval=40, ckpt_dir=ckpt, lr=2e-3)
+    print("== serving from the checkpoint ==")
+    out = serve(arch=arch, batch=4, prompt_len=32, new_tokens=16,
+                from_ckpt=ckpt)
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

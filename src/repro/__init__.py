@@ -1,0 +1,9 @@
+"""repro — LLMTailor (layer-wise selective checkpointing) on JAX/TPU.
+
+A production-grade multi-pod training/inference framework reproducing and
+extending the LLMTailor paper (SC Workshops '25): layer-separable optimizer
+state, selective checkpoint policies, and resumable "Frankenstein" checkpoint
+merging — plus the substrate (model zoo, optimizer, data, distribution,
+serving) it needs to run at scale.
+"""
+__version__ = "1.0.0"

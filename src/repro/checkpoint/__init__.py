@@ -1,0 +1,16 @@
+from repro.checkpoint.async_io import AsyncWriteError, AsyncWriter  # noqa: F401
+from repro.checkpoint.chunk_store import ChunkRef, ChunkStore  # noqa: F401
+from repro.checkpoint.serial import (  # noqa: F401
+    ChunkCorruption,
+    decode_chunk,
+    encode_chunk,
+)
+
+_LAZY = {"CheckpointManager", "RestoreError"}
+
+
+def __getattr__(name):  # lazy: saver imports repro.core (avoid import cycle)
+    if name in _LAZY:
+        from repro.checkpoint import saver
+        return getattr(saver, name)
+    raise AttributeError(name)

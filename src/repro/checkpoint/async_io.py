@@ -1,0 +1,83 @@
+"""Background checkpoint writer (CheckFreq-style compute/IO overlap).
+
+``AsyncWriter`` owns a bounded work queue and a thread pool; ``submit``
+enqueues chunk writes after the caller has snapshotted device arrays to host
+(the snapshot is the only synchronous cost on the training thread).  zstd
+compression and file IO release the GIL, so writes overlap training compute.
+
+Errors surface on ``wait()``/``drain()`` — a failed save must never be
+silently dropped (the manifest for that event is only committed after every
+chunk of the event has landed).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, List, Optional
+
+_SENTINEL = object()
+
+
+class AsyncWriteError(RuntimeError):
+    pass
+
+
+class AsyncWriter:
+    def __init__(self, num_threads: int = 2, max_queue: int = 64):
+        self._q: "queue.Queue" = queue.Queue(maxsize=max_queue)
+        self._errors: List[BaseException] = []
+        self._err_lock = threading.Lock()
+        self._threads = [
+            threading.Thread(target=self._run, name=f"ckpt-writer-{i}",
+                             daemon=True)
+            for i in range(num_threads)
+        ]
+        for t in self._threads:
+            t.start()
+        self._open = True
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            try:
+                if item is _SENTINEL:
+                    return
+                fn, args, kwargs = item
+                try:
+                    fn(*args, **kwargs)
+                except BaseException as e:  # noqa: BLE001
+                    with self._err_lock:
+                        self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def submit(self, fn: Callable, *args, **kwargs) -> None:
+        if not self._open:
+            raise AsyncWriteError("writer is closed")
+        self._q.put((fn, args, kwargs))
+
+    def drain(self) -> None:
+        """Block until all queued writes finish; raise collected errors."""
+        self._q.join()
+        with self._err_lock:
+            if self._errors:
+                errs, self._errors = self._errors, []
+                raise AsyncWriteError(
+                    f"{len(errs)} checkpoint write(s) failed: {errs[0]!r}"
+                ) from errs[0]
+
+    def close(self) -> None:
+        if not self._open:
+            return
+        self._open = False
+        self._q.join()
+        for _ in self._threads:
+            self._q.put(_SENTINEL)
+        for t in self._threads:
+            t.join(timeout=10)
+
+    def __enter__(self) -> "AsyncWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

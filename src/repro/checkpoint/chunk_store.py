@@ -1,0 +1,101 @@
+"""On-disk layout: one chunk file per (step, layer unit, kind).
+
+    root/
+      steps/step-00000100/
+        block_003.weights.chunk
+        block_003.opt.chunk
+        _meta.json              # step-level metadata (rng, data state, ...)
+      manifests/manifest-00000100.json
+      LATEST                    # atomic pointer to the newest manifest
+
+Chunk writes are atomic (tmp + rename + fsync) so a crash mid-save never
+corrupts a previous checkpoint — the manifest is committed last and only
+references fully-written chunks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+from repro.checkpoint import serial
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkRef:
+    step: int
+    unit: str
+    kind: str           # "weights" | "opt"
+    relpath: str
+    nbytes: int
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "ChunkRef":
+        return ChunkRef(**d)
+
+
+def _atomic_write(path: Path, data: bytes, *, fsync: bool = True) -> None:
+    tmp = path.with_suffix(path.suffix + ".tmp")
+    tmp.parent.mkdir(parents=True, exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(data)
+        if fsync:
+            f.flush()
+            os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+class ChunkStore:
+    def __init__(self, root: Path | str, *, codec: str = "zstd",
+                 fsync: bool = False):
+        self.root = Path(root)
+        self.codec = codec
+        self.fsync = fsync
+
+    # ---- paths ----
+    def step_dir(self, step: int) -> Path:
+        return self.root / "steps" / f"step-{step:08d}"
+
+    def chunk_path(self, step: int, unit: str, kind: str) -> Path:
+        return self.step_dir(step) / f"{unit}.{kind}.chunk"
+
+    def relpath(self, step: int, unit: str, kind: str) -> str:
+        return str(self.chunk_path(step, unit, kind).relative_to(self.root))
+
+    # ---- io ----
+    def write(self, step: int, unit: str, kind: str, tree: PyTree,
+              *, meta: Optional[Dict] = None, codec: Optional[str] = None
+              ) -> ChunkRef:
+        blob = serial.encode_chunk(
+            tree, meta=dict(meta or {}, step=step, unit=unit, kind=kind),
+            codec=codec or self.codec)
+        path = self.chunk_path(step, unit, kind)
+        _atomic_write(path, blob, fsync=self.fsync)
+        return ChunkRef(step=step, unit=unit, kind=kind,
+                        relpath=self.relpath(step, unit, kind),
+                        nbytes=len(blob))
+
+    def read(self, ref: ChunkRef, *, verify: bool = True
+             ) -> Tuple[PyTree, Dict]:
+        blob = (self.root / ref.relpath).read_bytes()
+        return serial.decode_chunk(blob, verify=verify)
+
+    def exists(self, ref: ChunkRef) -> bool:
+        return (self.root / ref.relpath).is_file()
+
+    def delete_step(self, step: int) -> int:
+        """Remove a step directory; returns bytes freed."""
+        d = self.step_dir(step)
+        freed = 0
+        if d.is_dir():
+            for f in d.iterdir():
+                freed += f.stat().st_size
+                f.unlink()
+            d.rmdir()
+        return freed

@@ -1,0 +1,108 @@
+"""Checkpoint codecs.
+
+- "none": raw little-endian bytes.
+- "zstd": lossless zstd (level tuned for throughput; decompression releases
+  the GIL so the async writer pool parallelizes).
+- "int8": blockwise symmetric int8 quantization (lossy; weights-only — the
+  numpy mirror of the Pallas kernel in ``repro.kernels.quantize``), then
+  zstd over the int8 payload.  Beyond-paper: composes checkpoint
+  *selectivity* (which layers) with *compression* (how many bytes per layer),
+  exactly the "not mutually exclusive" composition argued in §5.1.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+import zstandard as zstd
+
+ZSTD_LEVEL = 3
+QUANT_BLOCK = 256
+
+# zstd (de)compression contexts are NOT thread-safe; the async writer pool
+# compresses concurrently, so contexts are per-thread.
+import threading
+
+_tls = threading.local()
+
+
+def _cctx() -> zstd.ZstdCompressor:
+    c = getattr(_tls, "cctx", None)
+    if c is None:
+        c = _tls.cctx = zstd.ZstdCompressor(level=ZSTD_LEVEL)
+    return c
+
+
+def _dctx() -> zstd.ZstdDecompressor:
+    d = getattr(_tls, "dctx", None)
+    if d is None:
+        d = _tls.dctx = zstd.ZstdDecompressor()
+    return d
+
+
+def _to_bytes(arr: np.ndarray) -> bytes:
+    return np.ascontiguousarray(arr).tobytes()
+
+
+def quantize_int8(arr: np.ndarray, block: int = QUANT_BLOCK
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Blockwise symmetric quantization of the flattened array.
+    Returns (int8 values, f32 scales per block)."""
+    flat = np.asarray(arr, dtype=np.float32).reshape(-1)
+    pad = (-len(flat)) % block
+    if pad:
+        flat = np.concatenate([flat, np.zeros(pad, np.float32)])
+    blocks = flat.reshape(-1, block)
+    scales = np.max(np.abs(blocks), axis=1, keepdims=True) / 127.0
+    scales = np.where(scales == 0, 1.0, scales)
+    q = np.clip(np.rint(blocks / scales), -127, 127).astype(np.int8)
+    return q.reshape(-1), scales.astype(np.float32).reshape(-1)
+
+
+def dequantize_int8(q: np.ndarray, scales: np.ndarray, size: int,
+                    block: int = QUANT_BLOCK) -> np.ndarray:
+    blocks = q.astype(np.float32).reshape(-1, block)
+    out = blocks * scales.reshape(-1, 1)
+    return out.reshape(-1)[:size]
+
+
+def encode(arr: np.ndarray, codec: str) -> Tuple[bytes, str, Optional[Dict]]:
+    """Returns (payload, codec_used, extra_meta)."""
+    arr = np.asarray(arr)
+    if codec == "none":
+        return _to_bytes(arr), "none", None
+    if codec == "zstd":
+        return _cctx().compress(_to_bytes(arr)), "zstd", None
+    if codec == "int8":
+        # Only sensible for float weight tensors of meaningful size.
+        if arr.dtype.kind != "f" and str(arr.dtype) != "bfloat16":
+            return _cctx().compress(_to_bytes(arr)), "zstd", None
+        if arr.size < QUANT_BLOCK:
+            return _cctx().compress(_to_bytes(arr)), "zstd", None
+        q, scales = quantize_int8(arr)
+        blob = q.tobytes() + scales.tobytes()
+        return (_cctx().compress(blob), "int8",
+                {"n_q": int(q.size), "n_scale": int(scales.size),
+                 "block": QUANT_BLOCK})
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def decode(payload: bytes, codec: str, *, shape, dtype,
+           extra: Optional[Dict] = None) -> np.ndarray:
+    import ml_dtypes  # jax dependency; provides bfloat16 for numpy
+
+    np_dtype = np.dtype(dtype) if dtype != "bfloat16" else ml_dtypes.bfloat16
+    if codec == "none":
+        return np.frombuffer(payload, dtype=np_dtype).reshape(shape).copy()
+    if codec == "zstd":
+        raw = _dctx().decompress(payload)
+        return np.frombuffer(raw, dtype=np_dtype).reshape(shape).copy()
+    if codec == "int8":
+        raw = _dctx().decompress(payload)
+        n_q, n_scale = extra["n_q"], extra["n_scale"]
+        q = np.frombuffer(raw[:n_q], dtype=np.int8)
+        scales = np.frombuffer(raw[n_q:n_q + 4 * n_scale], dtype=np.float32)
+        size = int(np.prod(shape)) if shape else 1
+        out = dequantize_int8(q, scales, size, extra.get("block", QUANT_BLOCK))
+        return out.astype(np_dtype).reshape(shape)
+    raise ValueError(f"unknown codec {codec!r}")

@@ -1,0 +1,243 @@
+"""CheckpointManager — LLMTailor's selective, layer-wise checkpoint system.
+
+Save path:
+  1. the policy picks this event's layer units,
+  2. each selected unit's weights (bf16) and optimizer group content
+     (master/m/v, fp32) are snapshotted to host (jax.device_get) — the only
+     synchronous cost — and handed to the async writer,
+  3. after all chunks land, the manifest commits: every unit maps to the
+     newest chunk holding it (units skipped this event keep their previous
+     refs — the implicit Frankenstein merge),
+  4. retention GC deletes step dirs no retained manifest references.
+
+Restore path (= the paper's merge, done lazily):
+  read the manifest (latest or pinned), stream each unit from wherever it
+  newest-lives, verify crc32; on a corrupt/missing chunk fall back to that
+  unit's previous manifest entry (degraded-but-resumable, logged).
+"""
+from __future__ import annotations
+
+import logging
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.async_io import AsyncWriter
+from repro.checkpoint.chunk_store import ChunkRef, ChunkStore
+from repro.checkpoint.serial import ChunkCorruption
+from repro.core.layer_registry import OPT_KINDS, LayerRegistry
+from repro.core.manifest import Manifest, ManifestStore
+from repro.core.policies import CheckpointPolicy, PolicyContext
+
+log = logging.getLogger("repro.checkpoint")
+
+PyTree = Any
+
+
+class RestoreError(RuntimeError):
+    pass
+
+
+class CheckpointManager:
+    def __init__(
+        self,
+        root: Path | str,
+        registry: LayerRegistry,
+        policy: CheckpointPolicy,
+        *,
+        codec: str = "zstd",
+        async_save: bool = True,
+        keep: int = 8,
+        writer_threads: int = 2,
+    ):
+        self.root = Path(root)
+        self.registry = registry
+        self.policy = policy
+        self.store = ChunkStore(self.root, codec=codec)
+        self.manifests = ManifestStore(self.root)
+        self.keep = keep
+        self.async_save = async_save
+        self.writer = AsyncWriter(writer_threads) if async_save else None
+        self._event_index = self._infer_event_index()
+        self.last_save_stats: Dict[str, Any] = {}
+
+    def _infer_event_index(self) -> int:
+        return len(self.manifests.all_steps())
+
+    # ------------------------------------------------------------------ save
+    def save(self, state: Dict[str, PyTree], *, step: Optional[int] = None,
+             meta: Optional[Dict] = None,
+             drift_scores: Optional[Dict[str, float]] = None) -> Manifest:
+        t0 = time.time()
+        step = int(state["step"]) if step is None else int(step)
+        ctx = PolicyContext(event_index=self._event_index, step=step,
+                            drift_scores=drift_scores)
+        prev = self.manifests.load()
+        if prev is None:
+            # The very first event is always a full save: every later
+            # manifest must be able to reference a complete base.
+            selected = self.policy.all_units()
+        else:
+            selected = list(dict.fromkeys(self.policy.select(ctx)))
+        entries: Dict[str, Dict[str, ChunkRef]] = (
+            {u: dict(k) for u, k in prev.entries.items()} if prev else {})
+
+        # Snapshot selected units to host (sync) and enqueue writes (async).
+        snap_bytes = 0
+        pending: List[ChunkRef] = []
+        for name in selected:
+            w = jax.device_get(
+                self.registry.extract_unit(state["params"], name))
+            o = jax.device_get(
+                self.registry.extract_opt_unit(state["opt"], name))
+            snap_bytes += sum(np.asarray(x).nbytes
+                              for x in jax.tree.leaves((w, o)))
+            w_ref = ChunkRef(step, name, "weights",
+                             self.store.relpath(step, name, "weights"), 0)
+            o_ref = ChunkRef(step, name, "opt",
+                             self.store.relpath(step, name, "opt"), 0)
+            if self.writer is not None:
+                self.writer.submit(self.store.write, step, name, "weights", w)
+                self.writer.submit(self.store.write, step, name, "opt", o)
+            else:
+                w_ref = self.store.write(step, name, "weights", w)
+                o_ref = self.store.write(step, name, "opt", o)
+            entries.setdefault(name, {})
+            entries[name]["weights"] = w_ref
+            entries[name]["opt"] = o_ref
+            pending.append(w_ref)
+        t_snapshot = time.time() - t0
+
+        # All chunks must land before the manifest commits.
+        if self.writer is not None:
+            self.writer.drain()
+            # Fill in real chunk sizes now that the files exist.
+            for name in selected:
+                for kind in ("weights", "opt"):
+                    ref = entries[name][kind]
+                    p = self.root / ref.relpath
+                    entries[name][kind] = ChunkRef(
+                        ref.step, ref.unit, ref.kind, ref.relpath,
+                        p.stat().st_size if p.is_file() else 0)
+        manifest = Manifest(step=step, entries=entries,
+                            meta=dict(meta or {}, event_index=self._event_index,
+                                      policy=self.policy.name),
+                            saved_units=selected)
+        self.manifests.commit(manifest)
+        self._event_index += 1
+        self.gc()
+        self.last_save_stats = {
+            "step": step,
+            "selected_units": len(selected),
+            "total_units": len(self.registry.units),
+            "snapshot_bytes": snap_bytes,
+            "snapshot_seconds": t_snapshot,
+            "total_seconds": time.time() - t0,
+        }
+        return manifest
+
+    # --------------------------------------------------------------- restore
+    def _read_unit(self, manifest: Manifest, name: str, kind: str) -> PyTree:
+        ref = manifest.entries[name][kind]
+        try:
+            tree, _ = self.store.read(ref)
+            return tree
+        except (FileNotFoundError, ChunkCorruption) as e:
+            # Fault tolerance: fall back to an older manifest entry.
+            log.warning("chunk %s/%s at step %s unreadable (%s); "
+                        "falling back", name, kind, ref.step, e)
+            for s in reversed(self.manifests.all_steps()):
+                if s >= manifest.step:
+                    continue
+                older = self.manifests.load(s)
+                if older is None or name not in older.entries:
+                    continue
+                oref = older.entries[name][kind]
+                if oref.relpath == ref.relpath:
+                    continue
+                try:
+                    tree, _ = self.store.read(oref)
+                    log.warning("unit %s/%s restored from older step %s",
+                                name, kind, oref.step)
+                    return tree
+                except (FileNotFoundError, ChunkCorruption):
+                    continue
+            raise RestoreError(f"no readable chunk for unit {name}/{kind}")
+
+    def restore(self, state_like: Dict[str, PyTree], *,
+                step: Optional[int] = None,
+                shardings: Optional[Dict[str, PyTree]] = None
+                ) -> Dict[str, PyTree]:
+        """Rebuild a full train state from the manifest chain (the implicit
+        merge).  ``state_like`` supplies structure/dtypes (arrays or
+        ShapeDtypeStructs); ``shardings`` optionally places the result on a
+        mesh (elastic restart onto any device count)."""
+        manifest = self.manifests.load(step)
+        if manifest is None:
+            raise RestoreError(f"no manifest found in {self.root}")
+
+        params = jax.tree.map(lambda x: np.zeros(x.shape, x.dtype),
+                              state_like["params"])
+        opt = {k: jax.tree.map(lambda x: np.zeros(x.shape, x.dtype),
+                               state_like["opt"][k]) for k in OPT_KINDS}
+        for name in self.registry.unit_names():
+            if name not in manifest.entries:
+                raise RestoreError(f"manifest missing unit {name}")
+            w = self._read_unit(manifest, name, "weights")
+            o = self._read_unit(manifest, name, "opt")
+            params = self.registry.insert_unit(params, name, w)
+            opt = self.registry.insert_opt_unit(opt, name, o)
+
+        state = {"params": params, "opt": opt,
+                 "step": np.asarray(manifest.step, np.int32)}
+        if shardings is not None:
+            state = jax.tree.map(jax.device_put, state, shardings)
+        else:
+            state = jax.tree.map(jnp.asarray, state)
+        return state
+
+    def restore_meta(self, step: Optional[int] = None) -> Dict:
+        m = self.manifests.load(step)
+        return dict(m.meta) if m else {}
+
+    # ------------------------------------------------------------------- gc
+    def gc(self) -> int:
+        """Keep the last ``keep`` manifests; delete step dirs that no
+        retained manifest references.  Returns bytes freed."""
+        steps = self.manifests.all_steps()
+        retain = steps[-self.keep:]
+        referenced = set()
+        for s in retain:
+            m = self.manifests.load(s)
+            if m:
+                referenced.update(m.referenced_steps())
+        freed = 0
+        for s in steps[:-self.keep] if len(steps) > self.keep else []:
+            self.manifests.delete(s)
+        step_dirs = sorted((self.root / "steps").glob("step-*")) \
+            if (self.root / "steps").is_dir() else []
+        for d in step_dirs:
+            s = int(d.name.split("-")[1])
+            if s not in referenced:
+                freed += self.store.delete_step(s)
+        return freed
+
+    def close(self) -> None:
+        if self.writer is not None:
+            self.writer.close()
+
+    # -------------------------------------------------------------- metrics
+    def disk_usage(self) -> Dict[str, int]:
+        total = 0
+        per_step: Dict[int, int] = {}
+        if (self.root / "steps").is_dir():
+            for d in (self.root / "steps").glob("step-*"):
+                s = int(d.name.split("-")[1])
+                b = sum(f.stat().st_size for f in d.iterdir())
+                per_step[s] = b
+                total += b
+        return {"total": total, **{f"step_{k}": v for k, v in sorted(per_step.items())}}

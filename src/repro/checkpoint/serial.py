@@ -1,0 +1,83 @@
+"""Tensor (de)serialization for checkpoint chunks.
+
+A chunk payload is msgpack: header + per-tensor records (name, shape, dtype,
+codec, crc32, raw bytes).  Arrays are serialized device-count independent
+(global arrays), so a checkpoint written on one mesh restores onto any other
+— the basis of elastic restart.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Any, Dict, List, Tuple
+
+import msgpack
+import numpy as np
+
+from repro.checkpoint import compression
+
+PyTree = Any
+
+FORMAT_VERSION = 1
+
+
+def flatten_with_paths(tree: PyTree, prefix: str = "") -> List[Tuple[str, Any]]:
+    if isinstance(tree, dict):
+        out: List[Tuple[str, Any]] = []
+        for k in sorted(tree):
+            out.extend(flatten_with_paths(tree[k], f"{prefix}{k}/"))
+        return out
+    if isinstance(tree, (list, tuple)):
+        out = []
+        for i, v in enumerate(tree):
+            out.extend(flatten_with_paths(v, f"{prefix}{i}/"))
+        return out
+    return [(prefix.rstrip("/"), tree)]
+
+
+def unflatten_from_paths(items: Dict[str, Any]) -> PyTree:
+    root: Dict[str, Any] = {}
+    for path, value in items.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = value
+    return root
+
+
+def encode_chunk(tree: PyTree, *, meta: Dict[str, Any],
+                 codec: str = "zstd") -> bytes:
+    tensors = []
+    for path, arr in flatten_with_paths(tree):
+        arr = np.asarray(arr)
+        raw, used_codec, extra = compression.encode(arr, codec)
+        tensors.append({
+            "name": path,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "codec": used_codec,
+            "crc": zlib.crc32(raw) & 0xFFFFFFFF,
+            "extra": extra,
+            "data": raw,
+        })
+    payload = {"version": FORMAT_VERSION, "meta": meta, "tensors": tensors}
+    return msgpack.packb(payload, use_bin_type=True)
+
+
+class ChunkCorruption(RuntimeError):
+    pass
+
+
+def decode_chunk(blob: bytes, *, verify: bool = True) -> Tuple[PyTree, Dict]:
+    payload = msgpack.unpackb(blob, raw=False)
+    if payload.get("version") != FORMAT_VERSION:
+        raise ChunkCorruption(f"bad chunk version {payload.get('version')}")
+    items: Dict[str, np.ndarray] = {}
+    for t in payload["tensors"]:
+        if verify and (zlib.crc32(t["data"]) & 0xFFFFFFFF) != t["crc"]:
+            raise ChunkCorruption(f"crc mismatch for tensor {t['name']}")
+        arr = compression.decode(
+            t["data"], t["codec"], shape=tuple(t["shape"]),
+            dtype=t["dtype"], extra=t.get("extra"))
+        items[t["name"]] = arr
+    return unflatten_from_paths(items), payload["meta"]

@@ -1,0 +1,48 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` returns the full published config;
+``get_config(arch_id, reduced=True)`` returns the smoke-test variant.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401  (re-exported)
+    EncDecConfig,
+    HybridConfig,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+    TrainConfig,
+    VLMConfig,
+)
+from repro.configs.shapes import (  # noqa: F401
+    SHAPES,
+    ShapeConfig,
+    applicable_shapes,
+    shape_applies,
+)
+
+_ARCH_MODULES: Dict[str, str] = {
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+    "yi-9b": "repro.configs.yi_9b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "phi3-medium-14b": "repro.configs.phi3_medium_14b",
+    "llama3.2-3b": "repro.configs.llama3_2_3b",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+}
+
+ARCH_IDS: List[str] = list(_ARCH_MODULES)
+
+
+def get_config(arch: str, *, reduced: bool = False) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    cfg: ModelConfig = importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+    return cfg.reduced() if reduced else cfg

@@ -1,0 +1,23 @@
+"""llava-next-mistral-7b [vlm] — Mistral-7B backbone + anyres tiling STUB.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000.  The vision tower is
+a stub: ``input_specs()`` provides precomputed patch embeddings which pass
+through a trainable multimodal projector into the LM sequence.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+"""
+from repro.configs.base import ModelConfig, VLMConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    rope_theta=1_000_000.0,
+    vlm=VLMConfig(num_patches=2880, patch_embed_dim=1024),
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified",
+)

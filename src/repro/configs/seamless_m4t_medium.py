@@ -1,0 +1,22 @@
+"""seamless-m4t-medium [audio] — encoder-decoder transformer backbone.
+
+12L d_model=1024 16H d_ff=4096 vocab=256206.  The speech frontend is a STUB:
+``input_specs()`` provides precomputed frame embeddings fed to the encoder;
+the text decoder trains with cross-entropy.  [arXiv:2308.11596; hf]
+"""
+from repro.configs.base import EncDecConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="encdec",
+    num_layers=12,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256206,
+    rope_theta=10_000.0,
+    encdec=EncDecConfig(num_encoder_layers=12, num_decoder_layers=12),
+    source="arXiv:2308.11596; hf",
+)

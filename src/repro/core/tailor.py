@@ -1,0 +1,119 @@
+"""LLMTailor explicit merge engine (paper §4.2-§4.4) + CLI.
+
+Assembles a fully-resumable "Frankenstein" checkpoint from layer units of
+multiple source checkpoints per a YAML/JSON recipe: weights chunks AND the
+per-layer optimizer groups (master/m/v) AND the step-level config metadata
+(copied from the newest source, §4.4).  The output is a normal checkpoint
+root (one manifest + one step dir) that ``CheckpointManager.restore`` — or a
+fresh training run — consumes directly.
+
+Chunk-level copy: merging never deserializes tensors it doesn't have to —
+a unit is copied blob-for-blob (crc re-verified), so merge cost is pure IO,
+matching the paper's Table 7 cost model (size x #checkpoints x access
+order).  A thread pool overlaps reads and writes (§4.2's multiprocessing
+analogue; zstd + file IO release the GIL).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from repro.checkpoint.chunk_store import ChunkRef, ChunkStore, _atomic_write
+from repro.core.manifest import Manifest, ManifestStore
+from repro.core.recipe import CheckpointRef, Recipe
+
+
+class MergeError(RuntimeError):
+    pass
+
+
+def _load_manifest(ref: CheckpointRef) -> Tuple[Manifest, ChunkStore]:
+    ms = ManifestStore(ref.root)
+    m = ms.load(ref.step)
+    if m is None:
+        raise MergeError(f"no manifest at {ref}")
+    return m, ChunkStore(ref.root)
+
+
+def merge(recipe: Recipe, *, workers: int = 4,
+          verify: bool = True) -> Dict[str, float]:
+    """Execute a recipe.  Returns timing/size stats (Table 7 material)."""
+    t0 = time.time()
+    base_manifest, _ = _load_manifest(recipe.base)
+    all_units = sorted(base_manifest.entries)
+    assignment = recipe.assignment(all_units)
+
+    # Open every distinct source once.
+    sources: Dict[str, Tuple[Manifest, ChunkStore]] = {}
+    for ref in {str(r): r for r in assignment.values()}.values():
+        sources[str(ref)] = _load_manifest(ref)
+
+    out_root = Path(recipe.output)
+    out_store = ChunkStore(out_root)
+    out_step = base_manifest.step
+    kinds = ("weights", "opt") if recipe.optimizer else ("weights",)
+
+    stats = {"units": len(all_units), "bytes": 0, "chunks": 0,
+             "sources": len(sources)}
+
+    def copy_unit(unit: str) -> List[Tuple[str, str, ChunkRef]]:
+        src_manifest, src_store = sources[str(assignment[unit])]
+        if unit not in src_manifest.entries:
+            raise MergeError(f"unit {unit!r} missing from "
+                             f"{assignment[unit]}")
+        out_refs = []
+        for kind in kinds:
+            ref = src_manifest.entries[unit][kind]
+            blob = (src_store.root / ref.relpath).read_bytes()
+            if verify:
+                from repro.checkpoint.serial import decode_chunk
+                decode_chunk(blob, verify=True)  # crc check, then discard
+            dst = out_store.chunk_path(out_step, unit, kind)
+            _atomic_write(dst, blob)
+            out_refs.append((unit, kind, ChunkRef(
+                out_step, unit, kind,
+                out_store.relpath(out_step, unit, kind), len(blob))))
+        return out_refs
+
+    entries: Dict[str, Dict[str, ChunkRef]] = {}
+    with ThreadPoolExecutor(max_workers=workers) as pool:
+        for refs in pool.map(copy_unit, all_units):
+            for unit, kind, ref in refs:
+                entries.setdefault(unit, {})[kind] = ref
+                stats["bytes"] += ref.nbytes
+                stats["chunks"] += 1
+
+    # §4.4: configuration/metadata comes from the newest (base) checkpoint.
+    manifest = Manifest(
+        step=out_step,
+        entries=entries,
+        meta=dict(base_manifest.meta,
+                  merged_from={u: str(r) for u, r in assignment.items()},
+                  recipe_optimizer=recipe.optimizer),
+        saved_units=all_units,
+    )
+    ManifestStore(out_root).commit(manifest)
+    stats["seconds"] = time.time() - t0
+    return stats
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="LLMTailor: assemble a resumable Frankenstein checkpoint")
+    ap.add_argument("recipe", help="YAML or JSON recipe path")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--no-verify", action="store_true")
+    args = ap.parse_args()
+    recipe = Recipe.load(args.recipe)
+    stats = merge(recipe, workers=args.workers, verify=not args.no_verify)
+    print(f"[llmtailor] merged {stats['units']} units "
+          f"({stats['chunks']} chunks, {stats['bytes']/2**20:.1f} MiB) "
+          f"from {stats['sources']} checkpoints "
+          f"in {stats['seconds']:.2f}s -> {recipe.output}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Flash attention (online softmax) as a Pallas TPU kernel.
+
+Grid: (batch, q_head, q_blocks, k_blocks) — k is the minor (sequential)
+axis, so the running max / denominator / accumulator live in VMEM scratch
+across k iterations for a fixed (b, h, iq) and the output block is written
+once on the last k step.  Block shapes keep the MXU fed (q_block x d and
+k_block x d tiles, d = head_dim a multiple of 128 for full lanes) and the
+(q_block x k_block) score tile resident in VMEM — the memory win over the
+naive path is that scores never exist at (Sq x Sk).
+
+GQA: the kv-head index map folds H -> G (h * G // H), so grouped queries
+stream the same K/V blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  causal: bool, block_q: int, block_k: int, sk: int,
+                  scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+    if causal:
+        q_pos = iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                               # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)                      # (bq, 1)
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, G, Sk, D)
+    v: jax.Array,  # (B, G, Sk, D)
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    g, sk = k.shape[1], k.shape[2]
+    assert h % g == 0 and sq % 1 == 0
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, block_q, sk, block_k)
+    grid = (b, h, sq // block_q, sk // block_k)
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, block_q=block_q, block_k=block_k,
+        sk=sk, scale=d ** -0.5)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki, _g=g, _h=h:
+                         (bi, hi * _g // _h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki, _g=g, _h=h:
+                         (bi, hi * _g // _h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,23 @@
+"""jit'd public wrapper: (B, S, H, D) layout, GQA-aware flash attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Sk, G, D) -> (B, Sq, H, D)."""
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+    return jnp.transpose(out, (0, 2, 1, 3))

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-attention kernel: plain causal GQA
+attention with f32 softmax statistics (materializes the full score matrix —
+correct, memory-hungry; the kernel must match it to bf16 tolerance)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Sk, G, D), H % G == 0 -> (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    sk, g = k.shape[1], k.shape[2]
+    rep = h // g
+    qs = q.reshape(b, sq, g, rep, d).astype(jnp.float32) * (d ** -0.5)
+    ks = k.astype(jnp.float32)
+    vs = v.astype(jnp.float32)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qs, ks)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", w, vs)
+    return out.reshape(b, sq, h, d).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.fused_adamw.ops import fused_adamw  # noqa: F401
+from repro.kernels.fused_adamw.ref import adamw_ref  # noqa: F401

@@ -1,0 +1,72 @@
+"""Fused AdamW update as a Pallas TPU kernel.
+
+One pass over (g, master, m, v) producing (bf16 param, master', m', v') —
+4 reads + 4 writes instead of the ~12 kernel-boundary round trips the
+unfused update costs; the optimizer is pure HBM-bandwidth, so fusion is a
+direct memory-term win on the train roofline.  Scalars (lr and the
+bias-correction terms precomputed on host) arrive via a small SMEM-friendly
+(1, 8) operand.  Grid: 1-D tiles over the flattened parameter group.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adamw_kernel(sc_ref, g_ref, ma_ref, m_ref, v_ref,
+                  p_out, ma_out, m_out, v_out):
+    lr = sc_ref[0, 0]
+    b1 = sc_ref[0, 1]
+    b2 = sc_ref[0, 2]
+    eps = sc_ref[0, 3]
+    wd = sc_ref[0, 4]
+    c1 = sc_ref[0, 5]
+    c2 = sc_ref[0, 6]
+    g = g_ref[...].astype(jnp.float32)
+    m = b1 * m_ref[...] + (1.0 - b1) * g
+    v = b2 * v_ref[...] + (1.0 - b2) * g * g
+    upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+    ma = ma_ref[...] - lr * (upd + wd * ma_ref[...])
+    p_out[...] = ma.astype(p_out.dtype)
+    ma_out[...] = ma
+    m_out[...] = m
+    v_out[...] = v
+
+
+def fused_adamw_flat(
+    g: jax.Array, master: jax.Array, m: jax.Array, v: jax.Array, *,
+    lr, b1: float, b2: float, eps: float, wd: float, step,
+    tile: int = 2048, interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """All inputs flat 2-D (rows, 128-ish lanes).  Returns
+    (bf16 params, master, m, v)."""
+    rows, lanes = g.shape
+    t = min(tile, rows)
+    assert rows % t == 0, (rows, t)
+    tt = jnp.asarray(step, jnp.float32) + 1.0
+    scalars = jnp.stack([
+        jnp.asarray(lr, jnp.float32),
+        jnp.float32(b1), jnp.float32(b2), jnp.float32(eps), jnp.float32(wd),
+        1.0 - jnp.float32(b1) ** tt, 1.0 - jnp.float32(b2) ** tt,
+        jnp.float32(0.0),
+    ])[None]
+    grid = (rows // t,)
+    spec = pl.BlockSpec((t, lanes), lambda i: (i, 0))
+    return pl.pallas_call(
+        _adamw_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 8), lambda i: (0, 0)),
+                  spec, spec, spec, spec],
+        out_specs=[spec, spec, spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, lanes), jnp.bfloat16),
+            jax.ShapeDtypeStruct((rows, lanes), jnp.float32),
+            jax.ShapeDtypeStruct((rows, lanes), jnp.float32),
+            jax.ShapeDtypeStruct((rows, lanes), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scalars, g, master, m, v)

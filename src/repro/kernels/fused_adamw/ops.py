@@ -1,0 +1,44 @@
+"""jit'd wrapper: fused AdamW over an arbitrary-shaped tensor."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_adamw.kernel import fused_adamw_flat
+
+_LANES = 128
+
+
+@functools.partial(jax.jit, static_argnames=("b1", "b2", "eps", "wd",
+                                             "interpret"))
+def fused_adamw(g: jax.Array, master: jax.Array, m: jax.Array, v: jax.Array,
+                *, lr, step, b1: float = 0.9, b2: float = 0.95,
+                eps: float = 1e-8, wd: float = 0.0,
+                interpret: bool = False
+                ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    shape = master.shape
+    size = master.size
+    pad = (-size) % _LANES
+
+    def flat(x):
+        f = x.astype(jnp.float32).reshape(-1)
+        return jnp.pad(f, (0, pad)).reshape(-1, _LANES)
+
+    rows = (size + pad) // _LANES
+    tile = rows
+    for t in (2048, 1024, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if rows % t == 0:
+            tile = t
+            break
+    p, ma, mm, vv = fused_adamw_flat(
+        flat(g), flat(master), flat(m), flat(v), lr=lr, b1=b1, b2=b2,
+        eps=eps, wd=wd, step=step, tile=tile, interpret=interpret)
+
+    def unflat(x, dtype):
+        return x.reshape(-1)[:size].reshape(shape).astype(dtype)
+
+    return (unflat(p, jnp.bfloat16), unflat(ma, jnp.float32),
+            unflat(mm, jnp.float32), unflat(vv, jnp.float32))

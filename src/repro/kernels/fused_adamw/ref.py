@@ -1,0 +1,20 @@
+"""Oracle for the fused AdamW kernel: the unfused jnp update from
+repro.optim.adamw applied to a single flat tensor."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def adamw_ref(g, master, m, v, *, lr, b1, b2, eps, wd, step
+              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    t = jnp.asarray(step, jnp.float32) + 1.0
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+    g = g.astype(jnp.float32)
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * jnp.square(g)
+    upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+    new_master = master - lr * (upd + wd * master)
+    return new_master.astype(jnp.bfloat16), new_master, m, v

@@ -1,0 +1,2 @@
+from repro.kernels.quantize.ops import dequantize, quantize  # noqa: F401
+from repro.kernels.quantize.ref import dequantize_ref, quantize_ref  # noqa: F401

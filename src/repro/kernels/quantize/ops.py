@@ -1,0 +1,35 @@
+"""jit'd wrapper: quantize/dequantize an arbitrary-shaped array blockwise."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantize.kernel import dequantize_blocks, quantize_blocks
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def quantize(x: jax.Array, *, block: int = 256,
+             interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Flattens, zero-pads to a block multiple, returns (q, scales)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    return quantize_blocks(blocks, block=block, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("shape", "block", "out_dtype",
+                                    "interpret"))
+def dequantize(q: jax.Array, scales: jax.Array, *, shape: Tuple[int, ...],
+               block: int = 256, out_dtype=jnp.float32,
+               interpret: bool = False) -> jax.Array:
+    out = dequantize_blocks(q, scales, out_dtype=out_dtype,
+                            interpret=interpret)
+    size = 1
+    for d in shape:
+        size *= d
+    return out.reshape(-1)[:size].reshape(shape)

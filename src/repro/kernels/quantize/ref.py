@@ -1,0 +1,20 @@
+"""Oracle for the blockwise int8 quantizer: the numpy implementation used by
+the checkpoint codec (repro.checkpoint.compression) — the kernel must
+produce identical int8 values and scales."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.checkpoint.compression import dequantize_int8, quantize_int8
+
+
+def quantize_ref(arr: np.ndarray, block: int = 256
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    return quantize_int8(np.asarray(arr, np.float32), block)
+
+
+def dequantize_ref(q: np.ndarray, scales: np.ndarray, size: int,
+                   block: int = 256) -> np.ndarray:
+    return dequantize_int8(q, scales, size, block)

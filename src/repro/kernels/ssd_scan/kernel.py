@@ -1,0 +1,117 @@
+"""Mamba2 SSD chunk scan as a Pallas TPU kernel.
+
+Grid: (batch, head, n_chunks) — chunks are the minor (sequential) axis, so
+the running inter-chunk state (P x N) lives in VMEM scratch and carries
+across chunk iterations for a fixed (b, h); it is zero-initialized at chunk
+0 and written to the final-state output on the last chunk.
+
+Per chunk (Q = chunk length) everything is matmul-shaped for the MXU:
+  scores  = C . B^T            (Q x Q)
+  decay   = exp(L_i - L_j)     (causal-masked, from the dt cumsum)
+  y_intra = (scores * decay * dt_j) @ x
+  y_inter = (C @ state^T) * exp(L)
+  state   = exp(total) * state + ((w * x)^T @ B)   with w = exp(total - L) dt
+
+VMEM residency per grid step: x (Q x P), B/C (Q x N), state (P x N), the
+(Q x Q) score tile — all a few hundred KB at Q=128-256.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, y_ref, fin_ref,
+                state_ref, *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)         # (Q, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)[:, 0]  # (Q,)
+    a = -jnp.exp(alog_ref[0].astype(jnp.float32))  # scalar for this head
+    bmat = b_ref[0, 0, 0].astype(jnp.float32)      # (Q, N)
+    cmat = c_ref[0, 0, 0].astype(jnp.float32)      # (Q, N)
+
+    da = dt * a                                     # (Q,)
+    l = jnp.cumsum(da)                              # (Q,)
+    total = l[-1]
+
+    state = state_ref[...]                          # (P, N)
+    # inter-chunk: y_i += exp(L_i) * C_i . state
+    y_inter = jax.lax.dot_general(
+        cmat, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (Q, P)
+    y_inter = y_inter * jnp.exp(l)[:, None]
+
+    # intra-chunk
+    scores = jax.lax.dot_general(
+        cmat, bmat, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (Q, Q) = C_i . B_j
+    rel = jnp.minimum(l[:, None] - l[None, :], 0.0)  # masked entries overflow
+    iot = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jot = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    m = jnp.where(iot >= jot, scores * jnp.exp(rel), 0.0)
+    m = m * dt[None, :]
+    y_intra = jax.lax.dot_general(
+        m, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (Q, P)
+
+    y_ref[0, 0, 0] = (y_inter + y_intra).astype(y_ref.dtype)
+
+    # state update: exp(total)*state + sum_j exp(total - L_j) dt_j x_j^T B_j
+    w = jnp.exp(total - l) * dt                     # (Q,)
+    wx = x * w[:, None]                             # (Q, P)
+    s_chunk = jax.lax.dot_general(
+        wx, bmat, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (P, N)
+    state_ref[...] = state * jnp.exp(total) + s_chunk
+
+    @pl.when(ci == nc - 1)
+    def _fin():
+        fin_ref[0, 0] = state_ref[...]
+
+
+def ssd_scan_bhcqp(
+    x: jax.Array,      # (B, H, NC, Q, P)
+    dt: jax.Array,     # (B, H, NC, Q, 1) f32
+    a_log: jax.Array,  # (H,) f32
+    bs: jax.Array,     # (B, H, NC, Q, N)
+    cs: jax.Array,     # (B, H, NC, Q, N)
+    *,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    b, h, nc, q, p = x.shape
+    n = bs.shape[-1]
+    grid = (b, h, nc)
+    kernel = functools.partial(_ssd_kernel, chunk=q)
+    y, fin = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q, 1), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, 1, 1, q, n), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q, n), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, nc, q, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a_log, bs, cs)
+    return y, fin

@@ -1,0 +1,38 @@
+"""jit'd public wrapper for the SSD kernel: (B, S, H, ...) layout."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_bhcqp
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(xs: jax.Array,     # (B, S, H, P)
+             dt: jax.Array,     # (B, S, H) f32
+             a_log: jax.Array,  # (H,) f32
+             bs: jax.Array,     # (B, S, H, N)
+             cs: jax.Array,     # (B, S, H, N)
+             *, chunk: int = 128,
+             interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = xs.shape
+    n = bs.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    def to_chunks(t, feat):
+        # (B,S,H,F) -> (B,H,NC,Q,F)
+        return t.reshape(b, nc, chunk, h, feat).transpose(0, 3, 1, 2, 4)
+
+    xc = to_chunks(xs, p)
+    bc = to_chunks(bs, n)
+    cc = to_chunks(cs, n)
+    dtc = to_chunks(dt[..., None].astype(jnp.float32), 1)
+    y, fin = ssd_scan_bhcqp(xc, dtc, a_log.astype(jnp.float32), bc, cc,
+                            interpret=interpret)
+    y = y.transpose(0, 2, 3, 1, 4).reshape(b, s, h, p)
+    return y, fin

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the SSD kernel: the naive per-timestep recurrence
+  s_t = exp(dt_t * A) * s_{t-1} + dt_t * B_t (x) x_t ;  y_t = C_t . s_t
+(slow O(S) scan over single steps — unambiguous semantics)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(xs: jax.Array,    # (B, S, H, P)
+            dt: jax.Array,    # (B, S, H) f32
+            a_log: jax.Array, # (H,) f32
+            bs: jax.Array,    # (B, S, H, N)
+            cs: jax.Array,    # (B, S, H, N)
+            init_state=None,  # (B, H, P, N) f32
+            ) -> Tuple[jax.Array, jax.Array]:
+    b, s, h, p = xs.shape
+    n = bs.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    state0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+              else init_state.astype(jnp.float32))
+
+    def step(state, t):
+        x_t = xs[:, t].astype(jnp.float32)         # (B,H,P)
+        dt_t = dt[:, t].astype(jnp.float32)        # (B,H)
+        b_t = bs[:, t].astype(jnp.float32)         # (B,H,N)
+        c_t = cs[:, t].astype(jnp.float32)
+        decay = jnp.exp(dt_t * a)                  # (B,H)
+        upd = jnp.einsum("bh,bhn,bhp->bhpn", dt_t, b_t, x_t)
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhn,bhpn->bhp", c_t, state)
+        return state, y
+
+    final, ys = jax.lax.scan(step, state0, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3).astype(xs.dtype), final

@@ -1,0 +1,205 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: the SPMD
+partitioner must accept every sharding, the compiled module's
+memory_analysis shows per-device bytes, and the optimized HLO feeds the
+roofline account (FLOPs / HBM traffic / collective schedule).
+
+Usage:
+    python -m repro.launch.dryrun --arch yi-9b --shape train_4k [--multi-pod]
+    python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+
+Writes one JSON per cell to --out (incremental: existing cells are skipped
+unless --force).
+
+NOTE: the XLA_FLAGS line above MUST run before any other import that could
+initialize jax — this module is the only place that requests 512 host
+devices; tests and benchmarks see the real single CPU device.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applies
+from repro.configs.base import TrainConfig
+from repro.launch import steps
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.roofline import analyze_compiled, model_flops
+from repro.roofline.hw import HBM_BYTES
+
+
+def _attach(specs, shardings):
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        specs, shardings)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               layout: str = "fsdp_tp", remat: str = None):
+    """Returns (lowered, model, shape, mesh)."""
+    cfg = get_config(arch)
+    if remat:
+        cfg = cfg.model_copy(update={"remat": remat})
+    shape = SHAPES[shape_name]
+    if not shape_applies(cfg.family, shape):
+        return None
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.parallel import sharding as shd_ctx
+    with mesh, shd_ctx.use_mesh(mesh, layout=layout):
+        if shape.kind == "train":
+            tcfg = TrainConfig()
+            fn = steps.jit_train_step(model, tcfg, mesh, layout)
+            st = _attach(steps.state_specs(model),
+                         steps.state_shardings(model, mesh, layout))
+            bt = _attach(steps.batch_specs(model, shape),
+                         steps.batch_shardings(model, shape, mesh, layout))
+            lowered = fn.lower(st, bt)
+        else:
+            fn = steps.jit_serve_step(model, shape, mesh, layout)
+            import jax.numpy as jnp
+            pshapes = model.param_shapes()
+            bf16 = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16), pshapes)
+            from repro.parallel import sharding as shd
+            params = _attach(bf16,
+                             shd.param_shardings(bf16, model.param_axes(),
+                                                 mesh, layout=layout))
+            bt = _attach(steps.batch_specs(model, shape),
+                         steps.batch_shardings(model, shape, mesh, layout))
+            lowered = fn.lower(params, bt)
+    return lowered, model, shape, mesh
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: Path, force: bool = False, verbose: bool = True,
+             layout: str = "fsdp_tp", remat: str = None) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    suffix = "" if layout == "fsdp_tp" else f"__{layout}"
+    if remat:
+        suffix += f"__remat-{remat}"
+    out = out_dir / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+    if out.exists() and not force:
+        return json.loads(out.read_text())
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    result: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "chips": chips, "layout": layout}
+    if not shape_applies(cfg.family, shape):
+        result["status"] = "skipped"
+        result["reason"] = ("long_500k requires sub-quadratic attention; "
+                            f"family={cfg.family} is full-attention "
+                            "(DESIGN.md section 4)")
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(result, indent=2))
+        if verbose:
+            print(f"[dryrun] SKIP {arch} {shape_name} {mesh_name}")
+        return result
+    t0 = time.time()
+    try:
+        lowered, model, shape, mesh = lower_cell(arch, shape_name,
+                                                 multi_pod=multi_pod,
+                                                 layout=layout, remat=remat)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = None
+        try:
+            ma = compiled.memory_analysis()
+            mem = {k: getattr(ma, k) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes") if hasattr(ma, k)}
+        except Exception:  # pragma: no cover - backend dependent
+            pass
+        raw_cost = {}
+        try:
+            raw_cost = dict(compiled.cost_analysis())
+        except Exception:  # pragma: no cover
+            pass
+        hlo = compiled.as_text()
+        from repro.roofline.memory_model import estimate_hbm_bytes
+        hbm = estimate_hbm_bytes(model, shape, n_model=16, chips=chips)
+        report = analyze_compiled(
+            arch=arch, shape=shape_name, mesh_name=mesh_name, chips=chips,
+            hlo_text=hlo, model_flops=model_flops(model, shape),
+            hbm_model=hbm,
+            raw_cost={k: v for k, v in raw_cost.items()
+                      if isinstance(v, (int, float))},
+            memory_stats=mem, compile_seconds=t_compile)
+        result["status"] = "ok"
+        result["lower_seconds"] = round(t_lower, 2)
+        result["compile_seconds"] = round(t_compile, 2)
+        result["report"] = report.to_dict()
+        if mem:
+            live = (mem.get("argument_size_in_bytes", 0)
+                    + mem.get("output_size_in_bytes", 0)
+                    + mem.get("temp_size_in_bytes", 0)
+                    - mem.get("alias_size_in_bytes", 0))
+            result["fits_hbm"] = bool(live <= HBM_BYTES)
+            result["bytes_per_device"] = live
+        if verbose:
+            print(f"[dryrun] OK   {report.summary()} "
+                  f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[dryrun] FAIL {arch} {shape_name} {mesh_name}: "
+                  f"{result['error']}")
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(result, indent=2, default=float))
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--layout", default="fsdp_tp", choices=["fsdp_tp", "dp"])
+    ap.add_argument("--remat", choices=["none", "full"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                cells.append((a, s, mp))
+    n_ok = n_fail = n_skip = 0
+    for a, s, mp in cells:
+        r = run_cell(a, s, multi_pod=mp, out_dir=out_dir, force=args.force,
+                     layout=args.layout, remat=args.remat)
+        st = r.get("status")
+        n_ok += st == "ok"
+        n_fail += st == "error"
+        n_skip += st == "skipped"
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_fail} failed "
+          f"({len(cells)} cells)")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models.model_api import BaseLM, LayerUnit, build_model  # noqa: F401

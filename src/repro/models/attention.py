@@ -1,0 +1,321 @@
+"""Attention: GQA (llama-style) and MLA (DeepSeek-V2), with a blockwise
+(query-chunked) path that keeps activation memory sub-quadratic for long
+sequences — the jnp analogue of the Pallas flash-attention kernel in
+``repro.kernels.flash_attention`` (which is the TPU target for this hot-spot).
+
+KV caches are stacked over layers by the callers (scan-over-layers); this
+module works on a single layer's cache slice:
+  GQA cache: {"k": (B, S, G, Dh), "v": (B, S, G, Dh)}
+  MLA cache: {"latent": (B, S, R), "rope": (B, S, Dr)}
+Decode position is a scalar ``pos`` (uniform batched decode step).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models.modules import (
+    COMPUTE_DTYPE,
+    ParamBuilder,
+    apply_rope,
+    constrain_bsd,
+    constrain_heads,
+    rms_norm,
+)
+
+NEG_INF = -1e30
+
+
+def _rp_proj(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Decode-time row-parallel projection: (B, 1, D) x (D, A, C) ->
+    (B, 1, A, C) without gathering the FSDP-sharded weight — the data-shard
+    factor of D becomes an einsum batch dim; the sum over it lowers to a
+    tiny partial-sum all-reduce of the (B, 1, A, C) output instead of a
+    weight all-gather per layer per token (EXPERIMENTS.md §Perf)."""
+    from repro.parallel.sharding import current_layout, current_mesh, \
+        maybe_constrain
+    mesh = current_mesh()
+    b, s, d = x.shape
+    a, c = w.shape[1], w.shape[2]
+    ds = mesh.shape.get("data", 1) if (
+        mesh is not None and current_layout() == "fsdp_tp") else 1
+    if ds <= 1 or d % ds:
+        return jnp.einsum("bsd,dac->bsac", x, w)
+    xk = maybe_constrain(x.reshape(b, s, ds, d // ds),
+                         (None, None, "data", None))
+    wk = maybe_constrain(w.reshape(ds, d // ds, a, c),
+                         ("data", None, None, None))
+    y = jnp.einsum("bskd,kdac->kbsac", xk, wk)
+    return jnp.sum(y, axis=0)
+
+
+def _rp_out_proj(out: jax.Array, wo: jax.Array) -> jax.Array:
+    """Decode-time output projection: compute the d-sharded result locally
+    (wo's embed dim is the FSDP shard) and re-replicate the small (B, 1, D)
+    output instead of all-gathering wo."""
+    from repro.parallel.sharding import maybe_constrain
+    y = jnp.einsum("bshk,hkd->bsd", out, wo)
+    y = maybe_constrain(y, (None, None, "data"))
+    return maybe_constrain(y, (None, None, None))
+
+
+# ---------------------------------------------------------------------------
+# Core attend: grouped heads, optional causal mask, optional valid-length mask
+# ---------------------------------------------------------------------------
+
+def _attend_block(q, k, v, *, q_pos, k_valid, causal):
+    """q: (B, Sq, G, R, Dh); k/v: (B, Sk, G, Dh).
+
+    q_pos: (Sq,) absolute positions of the queries (for causal masking).
+    k_valid: scalar or None — number of valid kv positions (cache decode).
+    Returns (B, Sq, G, R, Dh).
+    """
+    scores = jnp.einsum(
+        "bqgrd,bkgd->bgrqk", q, k, preferred_element_type=jnp.float32
+    )
+    sk = k.shape[1]
+    k_idx = jnp.arange(sk)
+    mask = None
+    if causal:
+        mask = q_pos[:, None] >= k_idx[None, :]            # (Sq, Sk)
+    if k_valid is not None:
+        vm = k_idx[None, :] < k_valid                      # (1, Sk)
+        mask = vm if mask is None else (mask & vm)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bgrqk,bkgd->bqgrd", w, v)
+
+
+def attend(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_offset: jax.Array | int = 0,
+    k_valid: Optional[jax.Array] = None,
+    chunk: int = 0,
+) -> jax.Array:
+    """Grouped-query attention.
+
+    q: (B, Sq, H, Dh); k, v: (B, Sk, G, Dh) with H % G == 0.
+    chunk > 0 and Sq % chunk == 0 enables the blockwise path (scan over query
+    chunks) so the score matrix never materializes at (Sq, Sk).
+    Returns (B, Sq, H, Dh).
+    """
+    b, sq, h, dh = q.shape
+    g = k.shape[2]
+    dv = v.shape[-1]
+    assert h % g == 0, (h, g)
+    r = h // g
+    qg = q.reshape(b, sq, g, r, dh) * (dh ** -0.5)
+
+    if chunk and sq > chunk and sq % chunk == 0:
+        n = sq // chunk
+        qs = qg.reshape(b, n, chunk, g, r, dh).transpose(1, 0, 2, 3, 4, 5)
+
+        from repro.parallel.sharding import BATCH, maybe_constrain
+
+        def body(_, xs):
+            i, qc = xs
+            qc = maybe_constrain(qc, (BATCH, None, "model", None, None))
+            pos = q_offset + i * chunk + jnp.arange(chunk)
+            out = _attend_block(qc, k, v, q_pos=pos, k_valid=k_valid,
+                                causal=causal)
+            return None, maybe_constrain(out, (BATCH, None, "model", None, None))
+
+        _, out = jax.lax.scan(body, None, (jnp.arange(n), qs))
+        return out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, dv)
+
+    pos = q_offset + jnp.arange(sq)
+    out = _attend_block(qg, k, v, q_pos=pos, k_valid=k_valid, causal=causal)
+    return out.reshape(b, sq, h, dv)
+
+
+# ---------------------------------------------------------------------------
+# GQA layer
+# ---------------------------------------------------------------------------
+
+def init_gqa(b: ParamBuilder, cfg: ModelConfig, *, d_model: int = 0) -> None:
+    d = d_model or cfg.d_model
+    h, g, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    b.dense("wq", (d, h, dh), ("embed", "heads", None))
+    b.dense("wk", (d, g, dh), ("embed", "kv_heads", None))
+    b.dense("wv", (d, g, dh), ("embed", "kv_heads", None))
+    b.dense("wo", (h, dh, d), ("heads", None, "embed"))
+
+
+def gqa_forward(
+    p: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    cache: Optional[Dict] = None,
+    cache_pos: Optional[jax.Array] = None,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    causal: bool = True,
+    return_kv: bool = False,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """One attention layer.
+
+    Self-attention over ``x`` (train/prefill), over cache (decode when
+    ``cache``+``cache_pos`` given), or cross-attention when ``cross_kv``
+    (pre-projected (k, v)) is given.  ``return_kv`` returns the fresh k/v of
+    a prefill pass so the caller can build a decode cache.
+    Returns (output, updated_cache_or_None).
+    """
+    cd = COMPUTE_DTYPE
+    decode = cache is not None and x.shape[1] == 1
+    proj = _rp_proj if decode else \
+        (lambda xx, ww: jnp.einsum("bsd,dhk->bshk", xx, ww))
+    q = proj(x, p["wq"].astype(cd))
+    q = constrain_heads(q)
+    q = apply_rope(q, positions, cfg.rope_theta) if cross_kv is None else q
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = attend(q, k, v, causal=False, chunk=cfg.attn_chunk_size)
+        new_cache = None
+    elif cache is None:
+        k = jnp.einsum("bsd,dgk->bsgk", x, p["wk"].astype(cd))
+        v = jnp.einsum("bsd,dgk->bsgk", x, p["wv"].astype(cd))
+        k, v = constrain_heads(k), constrain_heads(v)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        out = attend(q, k, v, causal=causal, chunk=cfg.attn_chunk_size)
+        new_cache = {"k": k, "v": v} if return_kv else None
+    else:
+        # Decode: write this step's k/v at cache_pos, attend over the cache.
+        k_new = proj(x, p["wk"].astype(cd))
+        v_new = proj(x, p["wv"].astype(cd))
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+        out = attend(q, k, v, causal=False, k_valid=cache_pos + x.shape[1])
+        new_cache = {"k": k, "v": v}
+
+    out = constrain_heads(out)
+    if decode:
+        y = _rp_out_proj(out, p["wo"].astype(cd))
+    else:
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+    y = constrain_bsd(y)
+    return y, new_cache
+
+
+def gqa_cache_spec(cfg: ModelConfig, batch: int, seq: int, *, d_model: int = 0):
+    g, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (batch, seq, g, dh)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, COMPUTE_DTYPE),
+        "v": jax.ShapeDtypeStruct(shape, COMPUTE_DTYPE),
+    }
+
+
+def gqa_prefill_cache(k: jax.Array, v: jax.Array, pad_to: int) -> Dict:
+    """Pad prefill-produced k/v (B, S, G, Dh) out to the cache length."""
+    pad = pad_to - k.shape[1]
+    if pad > 0:
+        cfgpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k = jnp.pad(k, cfgpad)
+        v = jnp.pad(v, cfgpad)
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(b: ParamBuilder, cfg: ModelConfig) -> None:
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    b.dense("wq", (d, h, qk), ("embed", "heads", None))
+    b.dense("w_dkv", (d, m.kv_lora_rank), ("embed", None))
+    b.dense("w_kr", (d, m.qk_rope_head_dim), ("embed", None))
+    b.ones("latent_norm", (m.kv_lora_rank,), (None,))
+    b.dense("w_uk", (m.kv_lora_rank, h, m.qk_nope_head_dim), (None, "heads", None))
+    b.dense("w_uv", (m.kv_lora_rank, h, m.v_head_dim), (None, "heads", None))
+    b.dense("wo", (h, m.v_head_dim, d), ("heads", None, "embed"))
+
+
+def _mla_latent(p: Dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    cd = COMPUTE_DTYPE
+    latent = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(cd))
+    latent = rms_norm(latent, p["latent_norm"], cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["w_kr"].astype(cd))
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return latent, k_rope
+
+
+def mla_forward(
+    p: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    cache: Optional[Dict] = None,
+    cache_pos: Optional[jax.Array] = None,
+    return_kv: bool = False,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """MLA layer.  Train/prefill: latent-expanded attention.  Decode: the
+    *absorbed* form — queries are folded through w_uk so attention runs in
+    the compressed latent space (the MLA deployment win)."""
+    m: MLAConfig = cfg.mla
+    cd = COMPUTE_DTYPE
+    b_, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr = m.qk_nope_head_dim, m.qk_rope_head_dim
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    if cache is None:
+        latent, k_rope = _mla_latent(p, x, cfg, positions)
+        k_nope = jnp.einsum("bsr,rhk->bshk", latent, p["w_uk"].astype(cd))
+        v = jnp.einsum("bsr,rhk->bshk", latent, p["w_uv"].astype(cd))
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(
+            k_rope[:, :, None, :], (b_, s, h, dr))], axis=-1)
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = attend(qf, k, v, causal=True, chunk=cfg.attn_chunk_size)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+        kv = {"latent": latent, "rope": k_rope} if return_kv else None
+        return y, kv
+
+    # ---- absorbed decode ----
+    latent_new, k_rope_new = _mla_latent(p, x, cfg, positions)
+    latent = jax.lax.dynamic_update_slice(
+        cache["latent"], latent_new.astype(cache["latent"].dtype), (0, cache_pos, 0))
+    rope = jax.lax.dynamic_update_slice(
+        cache["rope"], k_rope_new.astype(cache["rope"].dtype), (0, cache_pos, 0))
+    k_valid = cache_pos + s
+
+    # Fold q through w_uk: (B,S,H,dn) x (r,H,dn) -> (B,S,H,r)
+    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"].astype(cd))
+    scale = (dn + dr) ** -0.5
+    scores = (
+        jnp.einsum("bshr,btr->bhst", q_abs, latent, preferred_element_type=jnp.float32)
+        + jnp.einsum("bshr,btr->bhst", q_rope, rope, preferred_element_type=jnp.float32)
+    ) * scale
+    t_idx = jnp.arange(latent.shape[1])
+    scores = jnp.where((t_idx < k_valid)[None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(cd)
+    ctx = jnp.einsum("bhst,btr->bshr", w, latent)            # (B,S,H,r)
+    out = jnp.einsum("bshr,rhk->bshk", ctx, p["w_uv"].astype(cd))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+    return y, {"latent": latent, "rope": rope}
+
+
+def mla_cache_spec(cfg: ModelConfig, batch: int, seq: int):
+    m: MLAConfig = cfg.mla
+    return {
+        "latent": jax.ShapeDtypeStruct((batch, seq, m.kv_lora_rank), COMPUTE_DTYPE),
+        "rope": jax.ShapeDtypeStruct((batch, seq, m.qk_rope_head_dim), COMPUTE_DTYPE),
+    }

@@ -1,0 +1,237 @@
+"""Encoder-decoder transformer (seamless-m4t-medium backbone).
+
+The speech frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings (B, S, D) consumed directly by the encoder.
+The decoder trains with teacher-forced cross-entropy; serving uses per-layer
+self KV caches plus cross K/V computed once at prefill from the encoder
+output.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import attention as attn
+from repro.models.model_api import BaseLM, LayerUnit
+from repro.models.modules import (
+    COMPUTE_DTYPE,
+    ParamBuilder,
+    constrain_bsd,
+    cross_entropy_loss,
+    embed_lookup,
+    rms_norm,
+    stack_axes,
+    stack_layer_params,
+    swiglu,
+    unembed_logits,
+)
+
+PyTree = Any
+
+
+class EncDecLM(BaseLM):
+    @property
+    def _le(self) -> int:
+        return self.cfg.encdec.num_encoder_layers
+
+    @property
+    def _ld(self) -> int:
+        return self.cfg.encdec.num_decoder_layers
+
+    def _init_mlp(self, b: ParamBuilder) -> None:
+        cfg = self.cfg
+        b.dense("w_gate", (cfg.d_model, cfg.d_ff), ("embed", "ffn"))
+        b.dense("w_up", (cfg.d_model, cfg.d_ff), ("embed", "ffn"))
+        b.dense("w_down", (cfg.d_ff, cfg.d_model), ("ffn", "embed"))
+
+    def _init_enc_block(self, b: ParamBuilder) -> None:
+        cfg = self.cfg
+        b.ones("ln1", (cfg.d_model,), ("embed",))
+        attn.init_gqa(b.child("attn"), cfg)
+        b.ones("ln2", (cfg.d_model,), ("embed",))
+        self._init_mlp(b.child("mlp"))
+
+    def _init_dec_block(self, b: ParamBuilder) -> None:
+        cfg = self.cfg
+        b.ones("ln1", (cfg.d_model,), ("embed",))
+        attn.init_gqa(b.child("self_attn"), cfg)
+        b.ones("ln_x", (cfg.d_model,), ("embed",))
+        attn.init_gqa(b.child("cross_attn"), cfg)
+        b.ones("ln2", (cfg.d_model,), ("embed",))
+        self._init_mlp(b.child("mlp"))
+
+    def init(self, rng: jax.Array) -> PyTree:
+        cfg = self.cfg
+        b = ParamBuilder(rng)
+        b.child("embed").dense(
+            "w", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), scale=0.02)
+        for stack, n, init_fn, salt in (
+            ("enc_blocks", self._le, self._init_enc_block, 0),
+            ("dec_blocks", self._ld, self._init_dec_block, 500),
+        ):
+            layers, axes0 = [], None
+            for i in range(n):
+                sub = ParamBuilder(jax.random.fold_in(rng, salt + i),
+                                   f"{stack}{i}/")
+                init_fn(sub)
+                layers.append(sub.params)
+                axes0 = sub.axes
+            b.params[stack] = stack_layer_params(layers)
+            b.axes[stack] = stack_axes(axes0)
+        b.child("enc_norm").ones("scale", (cfg.d_model,), ("embed",))
+        b.child("dec_norm").ones("scale", (cfg.d_model,), ("embed",))
+        b.child("lm_head").dense(
+            "w", (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), scale=0.02)
+        self._axes = b.axes
+        return b.params
+
+    # ---------------------------------------------------------------- encode
+    def _encode(self, params, frames: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        h = frames.astype(COMPUTE_DTYPE)
+        positions = jnp.arange(h.shape[1])
+
+        def body(hh, layer_p):
+            hh = constrain_bsd(hh)
+            a, _ = attn.gqa_forward(
+                layer_p["attn"], rms_norm(hh, layer_p["ln1"], cfg.norm_eps),
+                cfg, positions=positions, causal=False)
+            hh = hh + a
+            m = rms_norm(hh, layer_p["ln2"], cfg.norm_eps)
+            hh = hh + swiglu(m, layer_p["mlp"]["w_gate"], layer_p["mlp"]["w_up"],
+                             layer_p["mlp"]["w_down"])
+            return hh, None
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(body, prevent_cse=False)
+        h, _ = jax.lax.scan(body, h, params["enc_blocks"])
+        return rms_norm(h, params["enc_norm"]["scale"], cfg.norm_eps)
+
+    def _cross_kv(self, layer_p, enc_out):
+        cd = COMPUTE_DTYPE
+        k = jnp.einsum("bsd,dgk->bsgk", enc_out, layer_p["wk"].astype(cd))
+        v = jnp.einsum("bsd,dgk->bsgk", enc_out, layer_p["wv"].astype(cd))
+        return k, v
+
+    def _dec_block(self, layer_p, h, enc_out, *, positions, self_cache=None,
+                   cross_kv=None, cache_pos=None, return_kv=False):
+        cfg = self.cfg
+        h = constrain_bsd(h)
+        a, new_self = attn.gqa_forward(
+            layer_p["self_attn"], rms_norm(h, layer_p["ln1"], cfg.norm_eps),
+            cfg, positions=positions, cache=self_cache, cache_pos=cache_pos,
+            return_kv=return_kv)
+        h = h + a
+        kv = (self._cross_kv(layer_p["cross_attn"], enc_out)
+              if cross_kv is None else cross_kv)
+        x, _ = attn.gqa_forward(
+            layer_p["cross_attn"], rms_norm(h, layer_p["ln_x"], cfg.norm_eps),
+            cfg, positions=positions, cross_kv=kv)
+        h = h + x
+        m = rms_norm(h, layer_p["ln2"], cfg.norm_eps)
+        h = h + swiglu(m, layer_p["mlp"]["w_gate"], layer_p["mlp"]["w_up"],
+                       layer_p["mlp"]["w_down"])
+        return h, new_self, kv
+
+    # ------------------------------------------------------------------ API
+    def loss(self, params, batch):
+        cfg = self.cfg
+        enc_out = self._encode(params, batch["frames"])
+        h = embed_lookup(params["embed"]["w"], batch["tokens"])
+        positions = jnp.arange(h.shape[1])
+
+        def body(hh, layer_p):
+            hh, _, _ = self._dec_block(layer_p, hh, enc_out, positions=positions)
+            return hh, None
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(body, prevent_cse=False)
+        h, _ = jax.lax.scan(body, h, params["dec_blocks"])
+        h = rms_norm(h, params["dec_norm"]["scale"], cfg.norm_eps)
+        logits = unembed_logits(h, params["lm_head"]["w"])
+        ce = cross_entropy_loss(logits[:, :-1], batch["tokens"][:, 1:])
+        return ce, {"ce": ce, "aux_loss": jnp.zeros((), jnp.float32)}
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        enc_out = self._encode(params, batch["frames"])
+        h = embed_lookup(params["embed"]["w"], batch["tokens"])
+        positions = jnp.arange(h.shape[1])
+
+        def body(hh, layer_p):
+            hh, self_kv, cross = self._dec_block(
+                layer_p, hh, enc_out, positions=positions, return_kv=True)
+            return hh, (self_kv, cross)
+
+        h, (self_caches, cross_caches) = jax.lax.scan(body, h,
+                                                      params["dec_blocks"])
+        h = rms_norm(h[:, -1:], params["dec_norm"]["scale"], cfg.norm_eps)
+        logits = unembed_logits(h, params["lm_head"]["w"])
+        cache = {
+            "self": self_caches,
+            "cross_k": cross_caches[0],
+            "cross_v": cross_caches[1],
+        }
+        return logits[:, 0], cache
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        h = embed_lookup(params["embed"]["w"], batch["tokens"])
+        pos = batch["pos"]
+        positions = pos + jnp.arange(1)
+
+        def body(hh, xs):
+            layer_p, self_c, ck, cv = xs
+            hh, new_self, _ = self._dec_block(
+                layer_p, hh, None, positions=positions, self_cache=self_c,
+                cross_kv=(ck, cv), cache_pos=pos)
+            return hh, new_self
+
+        h, new_self = jax.lax.scan(
+            body, h, (params["dec_blocks"], cache["self"], cache["cross_k"],
+                      cache["cross_v"]))
+        h = rms_norm(h, params["dec_norm"]["scale"], cfg.norm_eps)
+        logits = unembed_logits(h, params["lm_head"]["w"])
+        new_cache = dict(cache, self=new_self)
+        return logits[:, 0], new_cache
+
+    # ---------------------------------------------------------------- specs
+    def cache_spec(self, batch: int, seq: int) -> PyTree:
+        cfg = self.cfg
+        g, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        self_one = attn.gqa_cache_spec(cfg, batch, seq)
+        stacked = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((self._ld,) + s.shape, s.dtype),
+            self_one)
+        cross = jax.ShapeDtypeStruct((self._ld, batch, seq, g, dh),
+                                     COMPUTE_DTYPE)
+        return {"self": stacked, "cross_k": cross, "cross_v": cross}
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32),
+                "cache": self.cache_spec(b, s),
+            }
+        return {
+            "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), COMPUTE_DTYPE),
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+
+    def layer_units(self) -> List[LayerUnit]:
+        units = [LayerUnit("embed", ("embed",), kind="aux")]
+        units += [LayerUnit(f"enc_block_{i:03d}", ("enc_blocks",), index=i)
+                  for i in range(self._le)]
+        units += [LayerUnit(f"dec_block_{i:03d}", ("dec_blocks",), index=i)
+                  for i in range(self._ld)]
+        units += [LayerUnit("enc_norm", ("enc_norm",), kind="aux"),
+                  LayerUnit("dec_norm", ("dec_norm",), kind="aux"),
+                  LayerUnit("lm_head", ("lm_head",), kind="aux")]
+        return units

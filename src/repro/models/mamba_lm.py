@@ -1,0 +1,274 @@
+"""Mamba2 LM (ssm family) and Zamba2-style hybrid LM (hybrid family).
+
+HybridLM: a Mamba2 backbone where, every ``shared_period`` layers, a single
+*shared-weight* transformer block runs on concat([h, embed_out]) (Zamba2's
+global shared attention; per-invocation LoRA deltas omitted — DESIGN.md §4).
+Each invocation keeps its own KV cache even though weights are shared.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import attention as attn
+from repro.models.model_api import BaseLM, LayerUnit
+from repro.models.modules import (
+    COMPUTE_DTYPE,
+    ParamBuilder,
+    constrain_bsd,
+    cross_entropy_loss,
+    embed_lookup,
+    rms_norm,
+    stack_axes,
+    stack_layer_params,
+    swiglu,
+    unembed_logits,
+)
+from repro.models.ssm import mamba2_cache_spec, mamba2_forward
+
+PyTree = Any
+
+
+class MambaLM(BaseLM):
+    """Pure SSM decoder (mamba2-370m)."""
+
+    def _init_block(self, b: ParamBuilder) -> None:
+        from repro.models.ssm import init_mamba2
+        b.ones("ln", (self.cfg.d_model,), ("embed",))
+        init_mamba2(b.child("mixer"), self.cfg)
+
+    def init(self, rng: jax.Array) -> PyTree:
+        cfg = self.cfg
+        b = ParamBuilder(rng)
+        b.child("embed").dense(
+            "w", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), scale=0.02)
+        layers, axes0 = [], None
+        for i in range(cfg.num_layers):
+            sub = ParamBuilder(jax.random.fold_in(rng, i), f"block{i}/")
+            self._init_block(sub)
+            layers.append(sub.params)
+            axes0 = sub.axes
+        b.params["blocks"] = stack_layer_params(layers)
+        b.axes["blocks"] = stack_axes(axes0)
+        b.child("final_norm").ones("scale", (cfg.d_model,), ("embed",))
+        if not cfg.tie_embeddings:
+            b.child("lm_head").dense(
+                "w", (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), scale=0.02)
+        self._axes = b.axes
+        return b.params
+
+    def _block(self, p, h, cache=None):
+        h = constrain_bsd(h)
+        out, new_cache = mamba2_forward(
+            p["mixer"], rms_norm(h, p["ln"], self.cfg.norm_eps), self.cfg,
+            cache=cache)
+        return h + out, new_cache
+
+    def _logits(self, params, h):
+        h = rms_norm(h, params["final_norm"]["scale"], self.cfg.norm_eps)
+        w = (params["embed"]["w"].T if self.cfg.tie_embeddings
+             else params["lm_head"]["w"])
+        return unembed_logits(h, w)
+
+    def loss(self, params, batch):
+        h = embed_lookup(params["embed"]["w"], batch["tokens"])
+
+        def body(hh, layer_p):
+            hh, _ = self._block(layer_p, hh)
+            return hh, None
+
+        if self.cfg.remat != "none":
+            body = jax.checkpoint(body, prevent_cse=False)
+        h, _ = jax.lax.scan(body, h, params["blocks"])
+        logits = self._logits(params, h)
+        ce = cross_entropy_loss(logits[:, :-1], batch["tokens"][:, 1:])
+        return ce, {"ce": ce, "aux_loss": jnp.zeros((), jnp.float32)}
+
+    def prefill(self, params, batch):
+        h = embed_lookup(params["embed"]["w"], batch["tokens"])
+
+        def body(hh, layer_p):
+            hh, c = self._block(layer_p, hh, cache={})
+            return hh, c
+
+        h, caches = jax.lax.scan(body, h, params["blocks"])
+        return self._logits(params, h[:, -1:])[:, 0], {"blocks": caches}
+
+    def decode_step(self, params, cache, batch):
+        h = embed_lookup(params["embed"]["w"], batch["tokens"])
+
+        def body(hh, xs):
+            layer_p, cache_l = xs
+            hh, c = self._block(layer_p, hh, cache=cache_l)
+            return hh, c
+
+        h, caches = jax.lax.scan(body, h, (params["blocks"], cache["blocks"]))
+        return self._logits(params, h)[:, 0], {"blocks": caches}
+
+    def cache_spec(self, batch: int, seq: int) -> PyTree:
+        one = mamba2_cache_spec(self.cfg, batch)
+        stacked = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                (self.cfg.num_layers,) + s.shape, s.dtype), one)
+        return {"blocks": stacked}
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        b = shape.global_batch
+        if shape.kind == "decode":
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32),
+                "cache": self.cache_spec(b, shape.seq_len),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32)}
+
+    def layer_units(self) -> List[LayerUnit]:
+        units = [LayerUnit("embed", ("embed",), kind="aux")]
+        units += [LayerUnit(f"block_{i:03d}", ("blocks",), index=i)
+                  for i in range(self.cfg.num_layers)]
+        units.append(LayerUnit("final_norm", ("final_norm",), kind="aux"))
+        if not self.cfg.tie_embeddings:
+            units.append(LayerUnit("lm_head", ("lm_head",), kind="aux"))
+        return units
+
+
+class HybridLM(MambaLM):
+    """Zamba2: Mamba2 backbone + one shared transformer block every
+    ``shared_period`` layers."""
+
+    @property
+    def _n_groups(self) -> int:
+        period = self.cfg.hybrid.shared_period
+        assert self.cfg.num_layers % period == 0, (self.cfg.num_layers, period)
+        return self.cfg.num_layers // period
+
+    def init(self, rng: jax.Array) -> PyTree:
+        params = super().init(rng)
+        cfg = self.cfg
+        d, h, g, dh = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                       cfg.resolved_head_dim)
+        ff = cfg.hybrid.shared_d_ff or cfg.d_ff
+        b = ParamBuilder(jax.random.fold_in(rng, 777), "shared/")
+        b.ones("ln1", (2 * d,), ("embed",))
+        a = b.child("attn")
+        a.dense("wq", (2 * d, h, dh), ("embed", "heads", None))
+        a.dense("wk", (2 * d, g, dh), ("embed", "kv_heads", None))
+        a.dense("wv", (2 * d, g, dh), ("embed", "kv_heads", None))
+        a.dense("wo", (h, dh, d), ("heads", None, "embed"))
+        b.ones("ln2", (d,), ("embed",))
+        m = b.child("mlp")
+        m.dense("w_gate", (d, ff), ("embed", "ffn"))
+        m.dense("w_up", (d, ff), ("embed", "ffn"))
+        m.dense("w_down", (ff, d), ("ffn", "embed"))
+        params["shared"] = b.params
+        self._axes["shared"] = b.axes
+        return params
+
+    def _shared_block(self, p, h, x0, *, positions, cache=None, cache_pos=None,
+                      return_kv=False):
+        xin = jnp.concatenate([h, x0], axis=-1)
+        a_out, new_cache = attn.gqa_forward(
+            p["attn"], rms_norm(xin, p["ln1"], self.cfg.norm_eps), self.cfg,
+            positions=positions, cache=cache, cache_pos=cache_pos,
+            return_kv=return_kv)
+        h = h + a_out
+        m_in = rms_norm(h, p["ln2"], self.cfg.norm_eps)
+        h = h + swiglu(m_in, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                       p["mlp"]["w_down"])
+        return h, new_cache
+
+    def _grouped(self, tree: PyTree) -> PyTree:
+        """(L, ...) stacked params/caches -> (G, P, ...)."""
+        g, p = self._n_groups, self.cfg.hybrid.shared_period
+        return jax.tree.map(lambda t: t.reshape((g, p) + t.shape[1:]), tree)
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        h = embed_lookup(params["embed"]["w"], batch["tokens"])
+        x0 = h
+        positions = jnp.arange(h.shape[1])
+        blocks_g = self._grouped(params["blocks"])
+
+        def group_body(hh, group_p):
+            def inner(hhh, layer_p):
+                hhh, _ = self._block(layer_p, hhh)
+                return hhh, None
+            hh, _ = jax.lax.scan(inner, hh, group_p)
+            hh, _ = self._shared_block(params["shared"], hh, x0,
+                                       positions=positions)
+            return hh, None
+
+        if cfg.remat != "none":
+            group_body = jax.checkpoint(group_body, prevent_cse=False)
+        h, _ = jax.lax.scan(group_body, h, blocks_g)
+        logits = self._logits(params, h)
+        ce = cross_entropy_loss(logits[:, :-1], batch["tokens"][:, 1:])
+        return ce, {"ce": ce, "aux_loss": jnp.zeros((), jnp.float32)}
+
+    def prefill(self, params, batch):
+        h = embed_lookup(params["embed"]["w"], batch["tokens"])
+        x0 = h
+        positions = jnp.arange(h.shape[1])
+        blocks_g = self._grouped(params["blocks"])
+
+        def group_body(hh, group_p):
+            def inner(hhh, layer_p):
+                hhh, c = self._block(layer_p, hhh, cache={})
+                return hhh, c
+            hh, m_caches = jax.lax.scan(inner, hh, group_p)
+            hh, a_cache = self._shared_block(params["shared"], hh, x0,
+                                             positions=positions,
+                                             return_kv=True)
+            return hh, (m_caches, a_cache)
+
+        h, (m_caches, a_caches) = jax.lax.scan(group_body, h, blocks_g)
+        cache = {"blocks": self._ungroup(m_caches), "shared": a_caches}
+        return self._logits(params, h[:, -1:])[:, 0], cache
+
+    def _ungroup(self, tree: PyTree) -> PyTree:
+        return jax.tree.map(
+            lambda t: t.reshape((-1,) + t.shape[2:]), tree)
+
+    def decode_step(self, params, cache, batch):
+        h = embed_lookup(params["embed"]["w"], batch["tokens"])
+        x0 = h
+        pos = batch["pos"]
+        positions = pos + jnp.arange(1)
+        blocks_g = self._grouped(params["blocks"])
+        m_cache_g = self._grouped(cache["blocks"])
+
+        def group_body(hh, xs):
+            group_p, m_cache, a_cache = xs
+
+            def inner(hhh, xs2):
+                layer_p, cache_l = xs2
+                hhh, c = self._block(layer_p, hhh, cache=cache_l)
+                return hhh, c
+
+            hh, new_m = jax.lax.scan(inner, hh, (group_p, m_cache))
+            hh, new_a = self._shared_block(params["shared"], hh, x0,
+                                           positions=positions,
+                                           cache=a_cache, cache_pos=pos)
+            return hh, (new_m, new_a)
+
+        h, (new_m, new_a) = jax.lax.scan(
+            group_body, h, (blocks_g, m_cache_g, cache["shared"]))
+        new_cache = {"blocks": self._ungroup(new_m), "shared": new_a}
+        return self._logits(params, h)[:, 0], new_cache
+
+    def cache_spec(self, batch: int, seq: int) -> PyTree:
+        spec = super().cache_spec(batch, seq)
+        one = attn.gqa_cache_spec(self.cfg, batch, seq)
+        spec["shared"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((self._n_groups,) + s.shape, s.dtype),
+            one)
+        return spec
+
+    def layer_units(self) -> List[LayerUnit]:
+        units = super().layer_units()
+        units.insert(-1, LayerUnit("shared_attn", ("shared",), kind="aux"))
+        return units

@@ -1,0 +1,92 @@
+"""Model API: every architecture exposes the same surface so the trainer,
+server, dry-run, checkpointing, and LLMTailor core are model-agnostic.
+
+A "layer unit" is the granularity of LLMTailor selectivity: one transformer/
+mamba block, or an auxiliary layer (embed, lm_head, final norm, shared block,
+multimodal projector).  Units over stacked (scanned) blocks address a slice
+along the leading 'layers' dim of the stacked params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerUnit:
+    """One independently checkpointable unit of model+optimizer state."""
+
+    name: str                      # e.g. "block_03", "embed", "lm_head"
+    path: Tuple[str, ...]          # path of the subtree in the params pytree
+    index: Optional[int] = None    # slice along leading 'layers' dim, or None
+    kind: str = "block"            # "block" | "aux"
+
+
+class BaseLM:
+    """Shared plumbing; concrete families implement the _ methods."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self._axes: Optional[PyTree] = None
+
+    # -- params ------------------------------------------------------------
+    def init(self, rng: jax.Array) -> PyTree:
+        raise NotImplementedError
+
+    def param_axes(self) -> PyTree:
+        """Logical sharding axes tree (recorded as a side effect of tracing
+        init — no device allocation happens)."""
+        if self._axes is None:
+            jax.eval_shape(self.init, jax.random.key(0))
+            assert self._axes is not None, "init() must record axes"
+        return self._axes
+
+    def param_shapes(self) -> PyTree:
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    # -- compute -----------------------------------------------------------
+    def loss(self, params: PyTree, batch: Dict[str, jax.Array]
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        raise NotImplementedError
+
+    def prefill(self, params: PyTree, batch: Dict[str, jax.Array]
+                ) -> Tuple[jax.Array, PyTree]:
+        raise NotImplementedError
+
+    def decode_step(self, params: PyTree, cache: PyTree,
+                    batch: Dict[str, jax.Array]) -> Tuple[jax.Array, PyTree]:
+        raise NotImplementedError
+
+    # -- specs ---------------------------------------------------------
+    def cache_spec(self, batch: int, seq: int) -> PyTree:
+        raise NotImplementedError
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def layer_units(self) -> List[LayerUnit]:
+        raise NotImplementedError
+
+
+def build_model(cfg: ModelConfig) -> BaseLM:
+    # Local imports: keep module import cheap and cycle-free.
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models.transformer import DecoderLM
+        return DecoderLM(cfg)
+    if cfg.family == "ssm":
+        from repro.models.mamba_lm import MambaLM
+        return MambaLM(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.mamba_lm import HybridLM
+        return HybridLM(cfg)
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecLM
+        return EncDecLM(cfg)
+    raise ValueError(f"unknown family {cfg.family}")

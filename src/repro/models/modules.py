@@ -1,0 +1,203 @@
+"""Minimal functional module framework + common layers.
+
+No flax in this environment, so params are plain nested dicts built by
+``ParamBuilder``, which simultaneously records a parallel tree of *logical
+sharding axes* per parameter (consumed by ``repro.parallel.sharding``).
+
+Conventions
+-----------
+- params: nested ``dict[str, dict | jax.Array]``.
+- axes:   same structure, leaves are tuples of logical axis names (one per
+  array dim) drawn from: "vocab", "embed", "ffn", "heads", "kv_heads", "qkv",
+  "experts", "layers", "state", "conv", None.
+- compute dtype is bf16; loss/softmax statistics in f32.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import BATCH, maybe_constrain
+
+PyTree = Any
+
+
+def constrain_bsd(x: jax.Array) -> jax.Array:
+    """(B, S, D) activations: batch over (pod, data)."""
+    return maybe_constrain(x, (BATCH, None, None))
+
+
+def constrain_heads(x: jax.Array) -> jax.Array:
+    """(B, S, H, Dh): batch over (pod, data), heads over model if divisible."""
+    return maybe_constrain(x, (BATCH, None, "model", None))
+
+
+def constrain_bsf(x: jax.Array) -> jax.Array:
+    """(B, S, F) ffn hidden: batch over (pod, data), F over model."""
+    return maybe_constrain(x, (BATCH, None, "model"))
+Axes = Tuple[Optional[str], ...]
+
+DEFAULT_PARAM_DTYPE = jnp.float32  # master params; cast to bf16 for compute
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def path_key(rng: jax.Array, path: str) -> jax.Array:
+    """Deterministic per-path RNG (stable across processes, unlike hash())."""
+    return jax.random.fold_in(rng, zlib.crc32(path.encode()) & 0x7FFFFFFF)
+
+
+class ParamBuilder:
+    """Builds a params pytree and the mirrored logical-axes pytree."""
+
+    def __init__(self, rng: jax.Array, prefix: str = ""):
+        self._rng = rng
+        self._prefix = prefix
+        self.params: Dict[str, Any] = {}
+        self.axes: Dict[str, Any] = {}
+
+    def child(self, name: str) -> "ParamBuilder":
+        sub = ParamBuilder(self._rng, f"{self._prefix}{name}/")
+        self.params[name] = sub.params
+        self.axes[name] = sub.axes
+        return sub
+
+    def add(self, name: str, value: jax.Array, axes: Axes) -> jax.Array:
+        assert len(axes) == value.ndim, (self._prefix + name, axes, value.shape)
+        self.params[name] = value
+        self.axes[name] = axes
+        return value
+
+    def dense(
+        self,
+        name: str,
+        shape: Sequence[int],
+        axes: Axes,
+        *,
+        scale: Optional[float] = None,
+        dtype: jnp.dtype = DEFAULT_PARAM_DTYPE,
+    ) -> jax.Array:
+        """Truncated-normal init with 1/sqrt(fan_in) default scale."""
+        if scale is None:
+            scale = 1.0 / np.sqrt(max(int(shape[0]), 1))
+        k = path_key(self._rng, self._prefix + name)
+        v = (jax.random.truncated_normal(k, -2.0, 2.0, tuple(shape), jnp.float32) * scale)
+        return self.add(name, v.astype(dtype), tuple(axes))
+
+    def zeros(self, name: str, shape: Sequence[int], axes: Axes,
+              dtype: jnp.dtype = DEFAULT_PARAM_DTYPE) -> jax.Array:
+        return self.add(name, jnp.zeros(tuple(shape), dtype), tuple(axes))
+
+    def ones(self, name: str, shape: Sequence[int], axes: Axes,
+             dtype: jnp.dtype = DEFAULT_PARAM_DTYPE) -> jax.Array:
+        return self.add(name, jnp.ones(tuple(shape), dtype), tuple(axes))
+
+
+def stack_layer_params(per_layer: Sequence[PyTree]) -> PyTree:
+    """Stack identical per-layer param trees along a leading 'layers' dim."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *per_layer)
+
+
+def stack_axes(axes: PyTree) -> PyTree:
+    """Prepend the 'layers' logical axis to every leaf of an axes tree."""
+    return jax.tree.map(
+        lambda a: ("layers",) + tuple(a),
+        axes,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Common layers (pure functions over param dicts)
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm with f32 statistics, output in input dtype."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta)                        # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv    # (..., S, d/2)
+    sin = jnp.sin(ang)[..., None, :]                        # (..., S, 1, d/2)
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embed_lookup(embedding: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Token embedding lookup; embedding (V, D) may be vocab-sharded."""
+    return jnp.take(embedding.astype(COMPUTE_DTYPE), tokens, axis=0)
+
+
+def unembed_logits(x: jax.Array, kernel: jax.Array) -> jax.Array:
+    """Project hidden states to vocab logits in f32.  kernel: (D, V)."""
+    logits = jnp.einsum(
+        "...d,dv->...v", x, kernel.astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32,
+    )
+    if logits.ndim == 3:
+        logits = maybe_constrain(logits, (BATCH, None, "model"))
+    return logits
+
+
+def _row_parallel_dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Decode-time (B, 1, D) x (D, F): expose the data-shard factor of D as
+    an einsum batch dim so the reduction over it is a tiny output
+    all-reduce rather than a weight all-gather (EXPERIMENTS.md §Perf)."""
+    from repro.parallel.sharding import current_layout, current_mesh
+    mesh = current_mesh()
+    b, s, d = x.shape
+    f = w.shape[1]
+    ds = mesh.shape.get("data", 1) if (
+        mesh is not None and current_layout() == "fsdp_tp") else 1
+    if ds <= 1 or d % ds:
+        return jnp.einsum("bsd,df->bsf", x, w)
+    xk = maybe_constrain(x.reshape(b, s, ds, d // ds),
+                         (None, None, "data", None))
+    wk = maybe_constrain(w.reshape(ds, d // ds, f), ("data", None, "model"))
+    return jnp.sum(jnp.einsum("bskd,kdf->kbsf", xk, wk), axis=0)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """SwiGLU MLP: silu(x@Wg) * (x@Wu) @ Wd.  Weights (D,F),(D,F),(F,D)."""
+    decode = x.ndim == 3 and x.shape[1] == 1
+    if decode:
+        g = _row_parallel_dense(x, w_gate.astype(x.dtype))
+        u = _row_parallel_dense(x, w_up.astype(x.dtype))
+    else:
+        g = jnp.einsum("...d,df->...f", x, w_gate.astype(x.dtype))
+        u = jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+    if g.ndim == 3 and not decode:
+        g, u = constrain_bsf(g), constrain_bsf(u)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down.astype(x.dtype))
+
+
+def cross_entropy_loss(logits: jax.Array, targets: jax.Array,
+                       mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token cross-entropy in f32.  logits (..., V) f32, targets (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

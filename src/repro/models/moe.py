@@ -1,0 +1,176 @@
+"""Mixture-of-experts FFN with capacity-based dispatch (GShard-style).
+
+Dispatch uses the einsum one-hot formulation (group-wise, so the cumsum that
+assigns capacity slots stays local to each data shard and GSPMD lowers the
+expert einsums to all-to-all over the `model` axis where experts live).
+
+Supports (a) DeepSeek-style shared experts, (b) Arctic-style dense residual
+MLP in parallel with the routed experts, (c) first-k dense layers handled by
+the caller, and (d) a load-balancing aux loss (Switch/GShard).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.modules import COMPUTE_DTYPE, ParamBuilder, swiglu
+from repro.parallel.sharding import (
+    BATCH,
+    current_layout,
+    current_mesh,
+    maybe_constrain,
+)
+
+
+def _row_parallel_expert_matmul(xt: jax.Array, w: jax.Array) -> jax.Array:
+    """(B, D) x (E, D, F) -> (B, E, F) without gathering the FSDP-sharded
+    weights: the data-shard factor of D becomes an explicit einsum batch dim
+    and the final sum over it lowers to a small partial-sum all-reduce of
+    the (B, E_local, F) output instead of a weight all-gather (GSPMD left to
+    itself picks the gather — EXPERIMENTS.md §Perf, arctic decode)."""
+    mesh = current_mesh()
+    b, d = xt.shape
+    e, _, f = w.shape
+    ds = mesh.shape.get("data", 1) if (
+        mesh is not None and current_layout() == "fsdp_tp") else 1
+    if ds <= 1 or d % ds:
+        return jnp.einsum("bd,edf->bef", xt, w)
+    xk = maybe_constrain(xt.reshape(b, ds, d // ds), (None, "data", None))
+    wk = maybe_constrain(w.reshape(e, ds, d // ds, f),
+                         ("model", "data", None, None))
+    y = jnp.einsum("bkd,ekdf->kbef", xk, wk)
+    y = maybe_constrain(y, ("data", None, "model", None))
+    return jnp.sum(y, axis=0)
+
+
+def init_moe(b: ParamBuilder, cfg: ModelConfig) -> None:
+    m: MoEConfig = cfg.moe
+    d, e, f = cfg.d_model, m.num_experts, m.d_ff_expert
+    b.dense("router", (d, e), ("embed", None), scale=0.02)
+    b.dense("we_gate", (e, d, f), ("experts", "embed", "ffn"))
+    b.dense("we_up", (e, d, f), ("experts", "embed", "ffn"))
+    b.dense("we_down", (e, f, d), ("experts", "ffn", "embed"))
+    if m.num_shared_experts:
+        fs = f * m.num_shared_experts
+        b.dense("ws_gate", (d, fs), ("embed", "ffn"))
+        b.dense("ws_up", (d, fs), ("embed", "ffn"))
+        b.dense("ws_down", (fs, d), ("ffn", "embed"))
+    if m.d_ff_dense_residual:
+        fd = m.d_ff_dense_residual
+        b.dense("wd_gate", (d, fd), ("embed", "ffn"))
+        b.dense("wd_up", (d, fd), ("embed", "ffn"))
+        b.dense("wd_down", (fd, d), ("ffn", "embed"))
+
+
+def _capacity(tokens_per_group: int, m: MoEConfig) -> int:
+    cap = int(tokens_per_group * m.top_k * m.capacity_factor / m.num_experts)
+    # Keep the MXU dimension aligned and nonzero.
+    return max(8, -(-cap // 8) * 8)
+
+
+def moe_decode_forward(p: Dict, x: jax.Array, cfg: ModelConfig
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Single-token (decode) MoE: dense-all-experts, no dispatch.
+
+    Capacity dispatch degenerates at seq==1 (one token per group, minimum
+    capacity buffers for every expert) and, worse, the FSDP-gather of every
+    expert's weights dominates the step (EXPERIMENTS.md §Perf, arctic
+    decode).  At serving batch sizes nearly every expert is hit by top-k
+    anyway, so the decode roofline is "read each expert's weights once" —
+    which is exactly what computing all experts densely does.  Experts stay
+    sharded on the model axis; the (tiny) token activations replicate.
+    """
+    m: MoEConfig = cfg.moe
+    cd = COMPUTE_DTYPE
+    bsz, seq, d = x.shape
+    assert seq == 1
+    xt = x[:, 0]                                                  # (B, D)
+    logits = jnp.einsum("bd,de->be", xt, p["router"].astype(cd))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # (B, E)
+    gate_vals, idx = jax.lax.top_k(probs, m.top_k)
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    gates = jnp.zeros_like(probs).at[
+        jnp.arange(bsz)[:, None], idx].set(gate_vals)             # (B, E)
+
+    g_ = _row_parallel_expert_matmul(xt, p["we_gate"].astype(cd))
+    g_ = maybe_constrain(g_, (None, "model", None))
+    u_ = _row_parallel_expert_matmul(xt, p["we_up"].astype(cd))
+    u_ = maybe_constrain(u_, (None, "model", None))
+    h = jax.nn.silu(g_.astype(jnp.float32)).astype(cd) * u_
+    y_e = jnp.einsum("bef,efd->bed", h, p["we_down"].astype(cd))
+    y_e = maybe_constrain(y_e, (None, "model", None))
+    out = jnp.einsum("bed,be->bd", y_e, gates.astype(cd))[:, None]
+
+    if m.num_shared_experts:
+        out = out + swiglu(x, p["ws_gate"], p["ws_up"], p["ws_down"])
+    if m.d_ff_dense_residual:
+        out = out + swiglu(x, p["wd_gate"], p["wd_up"], p["wd_down"])
+    return out.astype(x.dtype), jnp.zeros((), jnp.float32)
+
+
+def moe_forward(p: Dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar f32).
+
+    Tokens are grouped by batch row (the batch axis is the data-sharded axis)
+    so slot assignment is per-group and the dispatch einsum shards cleanly.
+    Single-token calls take the dense-all-experts decode path.
+    """
+    m: MoEConfig = cfg.moe
+    cd = COMPUTE_DTYPE
+    bsz, seq, d = x.shape
+    if seq == 1:
+        return moe_decode_forward(p, x, cfg)
+    e, k = m.num_experts, m.top_k
+    t = seq  # tokens per group (group == batch row)
+    c = _capacity(t, m)
+
+    xg = x  # (G=B, T=S, D)
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(cd)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                       # (G,T,E)
+    gate_vals, idx = jax.lax.top_k(probs, k)                      # (G,T,K)
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)         # renormalize
+
+    # Load-balancing aux loss (mean prob * mean assignment fraction).
+    me = jnp.mean(probs, axis=(0, 1))                             # (E,)
+    assign = jax.nn.one_hot(idx, e, dtype=jnp.float32)            # (G,T,K,E)
+    ce = jnp.mean(jnp.sum(assign, axis=2), axis=(0, 1))           # (E,)
+    aux = m.aux_loss_coef * e * jnp.sum(me * ce)
+
+    # Capacity slots: rank of each (t, k) choice within its expert, t-major.
+    flat = assign.reshape(bsz, t * k, e)                          # (G,TK,E)
+    pos = jnp.cumsum(flat, axis=1) * flat                         # 1-based slot
+    slot = (jnp.sum(pos, axis=-1) - 1.0).reshape(bsz, t, k)       # (G,T,K)
+    keep = (slot >= 0) & (slot < c)
+    slot = jnp.clip(slot, 0, c - 1).astype(jnp.int32)
+
+    # dispatch (G,T,E,C) = sum_k onehot_e * onehot_c, gated combine weights.
+    oh_slot = jax.nn.one_hot(slot, c, dtype=cd)                   # (G,T,K,C)
+    keep_f = keep.astype(cd)[..., None]                           # (G,T,K,1)
+    disp = jnp.einsum("gtke,gtkc->gtec", assign.astype(cd), oh_slot * keep_f)
+    comb = jnp.einsum("gtke,gtkc->gtec",
+                      (assign * gate_vals[..., None]).astype(cd),
+                      oh_slot * keep_f)
+
+    # Dispatch tokens to expert buffers: (G,E,C,D).  The dispatch einsum's
+    # output is constrained with experts on the model axis — GSPMD lowers the
+    # (batch-group -> expert) resharding to an all-to-all (EP).
+    buf = jnp.einsum("gtd,gtec->gecd", xg, disp)
+    buf = maybe_constrain(buf, (BATCH, "model", None, None))
+    g_ = jnp.einsum("gecd,edf->gecf", buf, p["we_gate"].astype(cd))
+    u_ = jnp.einsum("gecd,edf->gecf", buf, p["we_up"].astype(cd))
+    h = jax.nn.silu(g_.astype(jnp.float32)).astype(cd) * u_
+    h = jnp.einsum("gecf,efd->gecd", h, p["we_down"].astype(cd))
+    h = maybe_constrain(h, (BATCH, "model", None, None))
+    out = jnp.einsum("gecd,gtec->gtd", h, comb)
+    out = maybe_constrain(out, (BATCH, None, None))
+
+    if m.num_shared_experts:
+        out = out + swiglu(xg, p["ws_gate"], p["ws_up"], p["ws_down"])
+    if m.d_ff_dense_residual:
+        out = out + swiglu(xg, p["wd_gate"], p["wd_up"], p["wd_down"])
+    return out.astype(x.dtype), aux

@@ -1,0 +1,246 @@
+"""Mamba2 / SSD (state-space duality) blocks.
+
+The full-sequence path uses the chunked SSD algorithm (intra-chunk attention-
+like matmuls + inter-chunk recurrence carried by lax.scan), which is linear in
+sequence length and maps onto the MXU — the Pallas kernel in
+``repro.kernels.ssd_scan`` implements the per-chunk compute with explicit VMEM
+tiling; this module is the jnp production fallback and the shape/semantics
+reference for it.
+
+Decode is a single recurrent state update (constant memory — this is why the
+SSM archs run the ``long_500k`` cell).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.modules import (
+    COMPUTE_DTYPE,
+    ParamBuilder,
+    constrain_bsd,
+    constrain_bsf,
+    constrain_heads,
+    rms_norm,
+)
+from repro.parallel.sharding import BATCH, maybe_constrain
+
+
+def init_mamba2(b: ParamBuilder, cfg: ModelConfig, *, d_model: int = 0) -> None:
+    s: SSMConfig = cfg.ssm
+    d = d_model or cfg.d_model
+    d_in = s.d_inner(d)
+    h = d_in // s.head_dim
+    gn = s.ngroups * s.state_dim
+    conv_dim = d_in + 2 * gn
+    b.dense("w_z", (d, d_in), ("embed", "ffn"))
+    b.dense("w_x", (d, d_in), ("embed", "ffn"))
+    b.dense("w_B", (d, gn), ("embed", None))
+    b.dense("w_C", (d, gn), ("embed", None))
+    b.dense("w_dt", (d, h), ("embed", "heads"))
+    b.add("dt_bias", jnp.zeros((h,), jnp.float32), (None,))
+    # A in (-A_max, 0): init A_log so A ~ -[1, 16] (mamba2 default-ish).
+    b.add("A_log", jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)), (None,))
+    b.ones("D_skip", (h,), (None,))
+    b.dense("conv_w", (s.conv_kernel, conv_dim), ("conv", "ffn"), scale=0.2)
+    b.zeros("conv_b", (conv_dim,), ("ffn",))
+    b.ones("out_norm", (d_in,), ("ffn",))
+    b.dense("w_out", (d_in, d), ("ffn", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(
+    xs: jax.Array,      # (B, S, H, P) compute dtype
+    dt: jax.Array,      # (B, S, H) f32 (post-softplus)
+    a_log: jax.Array,   # (H,) f32
+    bs: jax.Array,      # (B, S, H, N) compute dtype (already head-broadcast)
+    cs: jax.Array,      # (B, S, H, N)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # (B, H, P, N) f32
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = xs.shape
+    n = bs.shape[-1]
+    if s % chunk:
+        # Pad time up to a chunk multiple with dt=0 steps (identity decay,
+        # zero input contribution) and slice the output back.
+        pad = chunk - s % chunk
+        pt = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        y, fs = ssd_chunked(pt(xs), pt(dt), a_log, pt(bs), pt(cs), chunk,
+                            init_state)
+        return y[:, :s], fs
+    nc = s // chunk
+    a = -jnp.exp(a_log)                                   # (H,) negative
+    d_a = dt * a                                          # (B,S,H) log-decay
+
+    def to_chunks(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).transpose(
+            1, 0, *range(2, t.ndim + 1))
+
+    xc, dtc, dac, bc, cc = map(to_chunks, (xs, dt, d_a, bs, cs))
+    state0 = (jnp.zeros((b, h, p, n), jnp.float32)
+              if init_state is None else init_state.astype(jnp.float32))
+
+    def body(carry, xs_):
+        x_, dt_, da_, b_, c_ = xs_                        # (B,Q,H,...)
+        x_ = maybe_constrain(x_, (BATCH, None, "model", None))
+        carry = maybe_constrain(carry, (BATCH, "model", None, None))
+        l_ = jnp.cumsum(da_, axis=1)                      # (B,Q,H) inclusive
+        total = l_[:, -1]                                 # (B,H)
+        # inter-chunk: contribution of the carried state.
+        y_inter = jnp.einsum("bqhn,bhpn->bqhp", c_.astype(jnp.float32),
+                             carry) * jnp.exp(l_)[..., None]
+        # intra-chunk: masked (Q,Q) SSD "attention".
+        scores = jnp.einsum("bihn,bjhn->bhij", c_, b_,
+                            preferred_element_type=jnp.float32)
+        lt = l_.transpose(0, 2, 1)                        # (B,H,Q)
+        rel = lt[:, :, :, None] - lt[:, :, None, :]       # L_i - L_j
+        # Valid (i >= j) entries always have rel <= 0; clamping keeps the
+        # masked upper triangle from overflowing exp (inf * 0 -> NaN grads).
+        rel = jnp.minimum(rel, 0.0)
+        q = x_.shape[1]
+        causal = jnp.tril(jnp.ones((q, q), bool))
+        m = jnp.where(causal[None, None], scores * jnp.exp(rel), 0.0)
+        m = m * dt_.transpose(0, 2, 1)[:, :, None, :]     # weight by dt_j
+        y_intra = jnp.einsum("bhij,bjhp->bihp", m, x_.astype(jnp.float32))
+        # state update.
+        w = jnp.exp(total[:, None] - l_) * dt_            # (B,Q,H)
+        s_chunk = jnp.einsum("bqh,bqhn,bqhp->bhpn", w, b_.astype(jnp.float32),
+                             x_.astype(jnp.float32))
+        new_state = carry * jnp.exp(total)[:, :, None, None] + s_chunk
+        return new_state, (y_inter + y_intra).astype(xs.dtype)
+
+    final_state, yc = jax.lax.scan(body, state0, (xc, dtc, dac, bc, cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y, final_state
+
+
+def ssd_decode_step(
+    x: jax.Array,    # (B, H, P)
+    dt: jax.Array,   # (B, H) f32
+    a_log: jax.Array,
+    b_: jax.Array,   # (B, H, N)
+    c_: jax.Array,   # (B, H, N)
+    state: jax.Array,  # (B, H, P, N) f32
+) -> Tuple[jax.Array, jax.Array]:
+    a = -jnp.exp(a_log)
+    da = jnp.exp(dt * a)                                  # (B,H)
+    upd = jnp.einsum("bh,bhn,bhp->bhpn", dt, b_.astype(jnp.float32),
+                     x.astype(jnp.float32))
+    new_state = state * da[..., None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", c_.astype(jnp.float32), new_state)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def _split_xbc(xbc: jax.Array, s: SSMConfig, d_in: int):
+    gn = s.ngroups * s.state_dim
+    xs = xbc[..., :d_in]
+    bs = xbc[..., d_in:d_in + gn]
+    cs = xbc[..., d_in + gn:]
+    return xs, bs, cs
+
+
+def _broadcast_groups(t: jax.Array, h: int, s: SSMConfig) -> jax.Array:
+    """(…, G*N) -> (…, H, N) by repeating each group over its heads."""
+    g, n = s.ngroups, s.state_dim
+    t = t.reshape(*t.shape[:-1], g, n)
+    rep = h // g
+    return jnp.repeat(t, rep, axis=-2)
+
+
+def mamba2_forward(
+    p: Dict,
+    x: jax.Array,                       # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    d_model: int = 0,
+    cache: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full-sequence when cache is None (optionally returning a fresh cache
+    via cache={} sentinel), single-step recurrent update when a cache with
+    state is given.
+
+    Cache: {"state": (B,H,P,N) f32, "conv": (B, K-1, conv_dim)}.
+    """
+    s: SSMConfig = cfg.ssm
+    d = d_model or cfg.d_model
+    d_in = s.d_inner(d)
+    h = d_in // s.head_dim
+    k = s.conv_kernel
+    cd = COMPUTE_DTYPE
+    bsz, seq, _ = x.shape
+
+    z = constrain_bsf(jnp.einsum("bsd,de->bse", x, p["w_z"].astype(cd)))
+    xbc = jnp.concatenate(
+        [constrain_bsf(jnp.einsum("bsd,de->bse", x, p["w_x"].astype(cd))),
+         jnp.einsum("bsd,de->bse", x, p["w_B"].astype(cd)),
+         jnp.einsum("bsd,de->bse", x, p["w_C"].astype(cd))], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(cd)).astype(jnp.float32)
+        + p["dt_bias"])
+
+    conv_w = p["conv_w"].astype(cd)                       # (K, conv_dim)
+    conv_b = p["conv_b"].astype(cd)
+    decode = cache is not None and "state" in cache
+
+    if decode:
+        window = jnp.concatenate([cache["conv"].astype(cd), xbc], axis=1)  # (B,K,C)
+        conv_out = jnp.einsum("bkc,kc->bc", window, conv_w) + conv_b
+        conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(cd)[:, None]
+        new_conv = window[:, 1:]
+        xs, bs, cs = _split_xbc(conv_out, s, d_in)
+        xh = xs.reshape(bsz, 1, h, s.head_dim)[:, 0]
+        bh = _broadcast_groups(bs, h, s)[:, 0]
+        ch = _broadcast_groups(cs, h, s)[:, 0]
+        y, new_state = ssd_decode_step(
+            xh, dt[:, 0], p["A_log"], bh, ch, cache["state"].astype(jnp.float32))
+        y = y + p["D_skip"].astype(cd)[None, :, None] * xh
+        y = y[:, None]                                    # (B,1,H,P)
+        new_cache = {"state": new_state, "conv": new_conv}
+    else:
+        # Causal depthwise conv along time.
+        pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+        conv_out = sum(
+            pad[:, i:i + seq] * conv_w[i][None, None] for i in range(k)
+        ) + conv_b
+        conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(cd)
+        xs, bs, cs = _split_xbc(conv_out, s, d_in)
+        xh = constrain_heads(xs.reshape(bsz, seq, h, s.head_dim))
+        bh = _broadcast_groups(bs, h, s)
+        ch = _broadcast_groups(cs, h, s)
+        chunk = min(s.chunk_size, seq)
+        y, final_state = ssd_chunked(xh, dt, p["A_log"], bh, ch, chunk)
+        y = constrain_heads(y)
+        y = y + p["D_skip"].astype(cd)[None, None, :, None] * xh
+        if cache is not None:  # prefill: build a decode cache
+            new_cache = {"state": final_state, "conv": xbc[:, -(k - 1):].astype(cd)}
+        else:
+            new_cache = None
+
+    y = y.reshape(bsz, -1, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(cd)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(cd))
+    return out, new_cache
+
+
+def mamba2_cache_spec(cfg: ModelConfig, batch: int, *, d_model: int = 0):
+    s: SSMConfig = cfg.ssm
+    d = d_model or cfg.d_model
+    d_in = s.d_inner(d)
+    h = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.ngroups * s.state_dim
+    return {
+        "state": jax.ShapeDtypeStruct((batch, h, s.head_dim, s.state_dim), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, s.conv_kernel - 1, conv_dim), COMPUTE_DTYPE),
+    }

@@ -1,0 +1,287 @@
+"""Decoder-only LM covering the dense, moe, and vlm families.
+
+Layers are stacked along a leading 'layers' dim and executed with
+``jax.lax.scan`` (one compiled block body regardless of depth — essential for
+compile time at 512 fake devices) with per-layer remat for training.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import attention as attn
+from repro.models.model_api import BaseLM, LayerUnit
+from repro.models.modules import (
+    COMPUTE_DTYPE,
+    ParamBuilder,
+    constrain_bsd,
+    cross_entropy_loss,
+    embed_lookup,
+    rms_norm,
+    stack_axes,
+    stack_layer_params,
+    swiglu,
+    unembed_logits,
+)
+from repro.models.moe import init_moe, moe_forward
+
+PyTree = Any
+
+
+class DecoderLM(BaseLM):
+    # ------------------------------------------------------------------ init
+    def _init_block(self, b: ParamBuilder) -> None:
+        cfg = self.cfg
+        b.ones("ln1", (cfg.d_model,), ("embed",))
+        b.ones("ln2", (cfg.d_model,), ("embed",))
+        if cfg.mla is not None:
+            attn.init_mla(b.child("attn"), cfg)
+        else:
+            attn.init_gqa(b.child("attn"), cfg)
+        if cfg.family == "moe":
+            init_moe(b.child("moe"), cfg)
+        else:
+            f = b.child("mlp")
+            f.dense("w_gate", (cfg.d_model, cfg.d_ff), ("embed", "ffn"))
+            f.dense("w_up", (cfg.d_model, cfg.d_ff), ("embed", "ffn"))
+            f.dense("w_down", (cfg.d_ff, cfg.d_model), ("ffn", "embed"))
+
+    def _init_dense_first(self, b: ParamBuilder) -> None:
+        """DeepSeek-style first-k dense layer (k=1 supported)."""
+        cfg = self.cfg
+        ff = cfg.moe.d_ff_first_dense or cfg.d_ff
+        b.ones("ln1", (cfg.d_model,), ("embed",))
+        b.ones("ln2", (cfg.d_model,), ("embed",))
+        if cfg.mla is not None:
+            attn.init_mla(b.child("attn"), cfg)
+        else:
+            attn.init_gqa(b.child("attn"), cfg)
+        f = b.child("mlp")
+        f.dense("w_gate", (cfg.d_model, ff), ("embed", "ffn"))
+        f.dense("w_up", (cfg.d_model, ff), ("embed", "ffn"))
+        f.dense("w_down", (ff, cfg.d_model), ("ffn", "embed"))
+
+    @property
+    def _n_dense_first(self) -> int:
+        if self.cfg.family == "moe" and self.cfg.moe.first_k_dense:
+            return self.cfg.moe.first_k_dense
+        return 0
+
+    @property
+    def _n_scanned(self) -> int:
+        return self.cfg.num_layers - self._n_dense_first
+
+    def init(self, rng: jax.Array) -> PyTree:
+        cfg = self.cfg
+        b = ParamBuilder(rng)
+        b.child("embed").dense(
+            "w", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), scale=0.02)
+        if cfg.family == "vlm":
+            mp = b.child("mm_proj")
+            mp.dense("w1", (cfg.vlm.patch_embed_dim, cfg.d_model), (None, "embed"))
+            mp.dense("w2", (cfg.d_model, cfg.d_model), ("embed", "embed2"))
+        for i in range(self._n_dense_first):
+            sub = ParamBuilder(jax.random.fold_in(rng, 1000 + i), f"dense_first_{i}/")
+            self._init_dense_first(sub)
+            b.params[f"dense_first_{i}"] = sub.params
+            b.axes[f"dense_first_{i}"] = sub.axes
+        layers, axes0 = [], None
+        for i in range(self._n_scanned):
+            sub = ParamBuilder(jax.random.fold_in(rng, i), f"block{i}/")
+            self._init_block(sub)
+            layers.append(sub.params)
+            axes0 = sub.axes
+        b.params["blocks"] = stack_layer_params(layers)
+        b.axes["blocks"] = stack_axes(axes0)
+        b.child("final_norm").ones("scale", (cfg.d_model,), ("embed",))
+        if not cfg.tie_embeddings:
+            b.child("lm_head").dense(
+                "w", (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), scale=0.02)
+        self._axes = b.axes
+        return b.params
+
+    # ------------------------------------------------------------- internals
+    def _attn(self, p, h, **kw):
+        if self.cfg.mla is not None:
+            kw.pop("cross_kv", None)
+            kw.pop("causal", None)
+            return attn.mla_forward(p, h, self.cfg, **kw)
+        return attn.gqa_forward(p, h, self.cfg, **kw)
+
+    def _block(self, p, h, *, positions, cache=None, cache_pos=None,
+               return_kv=False, dense_ffn=False):
+        cfg = self.cfg
+        h = constrain_bsd(h)
+        a_out, new_cache = self._attn(
+            p["attn"], rms_norm(h, p["ln1"], cfg.norm_eps),
+            positions=positions, cache=cache, cache_pos=cache_pos,
+            return_kv=return_kv)
+        h = h + a_out
+        m_in = rms_norm(h, p["ln2"], cfg.norm_eps)
+        if cfg.family == "moe" and not dense_ffn:
+            f_out, aux = moe_forward(p["moe"], m_in, cfg)
+        else:
+            f_out = swiglu(m_in, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                           p["mlp"]["w_down"])
+            aux = jnp.zeros((), jnp.float32)
+        return h + f_out, aux, new_cache
+
+    def _embed(self, params, batch) -> Tuple[jax.Array, jax.Array]:
+        """Returns (h, positions)."""
+        cfg = self.cfg
+        h = embed_lookup(params["embed"]["w"], batch["tokens"])
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(COMPUTE_DTYPE)
+            mp = params["mm_proj"]
+            pe = jnp.einsum("bpe,ed->bpd", pe, mp["w1"].astype(COMPUTE_DTYPE))
+            pe = jax.nn.gelu(pe.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+            pe = jnp.einsum("bpd,de->bpe", pe, mp["w2"].astype(COMPUTE_DTYPE))
+            h = jnp.concatenate([pe, h], axis=1)
+        h = constrain_bsd(h)
+        positions = jnp.arange(h.shape[1])
+        return h, positions
+
+    def _backbone_train(self, params, h, positions):
+        """Full-sequence forward through all layers; returns (h, aux_loss)."""
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(self._n_dense_first):
+            h, a, _ = self._block(params[f"dense_first_{i}"], h,
+                                  positions=positions, dense_ffn=True)
+            aux = aux + a
+
+        def body(carry, layer_p):
+            hh, ax = carry
+            hh, a, _ = self._block(layer_p, hh, positions=positions)
+            return (hh, ax + a), None
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(body, prevent_cse=False)
+        (h, aux), _ = jax.lax.scan(body, (h, aux), params["blocks"])
+        return h, aux
+
+    def _logits(self, params, h) -> jax.Array:
+        cfg = self.cfg
+        h = rms_norm(h, params["final_norm"]["scale"], cfg.norm_eps)
+        w = (params["embed"]["w"].T if cfg.tie_embeddings
+             else params["lm_head"]["w"])
+        return unembed_logits(h, w)
+
+    # ------------------------------------------------------------------ API
+    def loss(self, params, batch):
+        cfg = self.cfg
+        h, positions = self._embed(params, batch)
+        h, aux = self._backbone_train(params, h, positions)
+        logits = self._logits(params, h)
+        tokens = batch["tokens"]
+        n_text = tokens.shape[1]
+        # For VLM, loss applies only to the text positions (the tail).
+        logits = logits[:, -n_text:]
+        targets = tokens[:, 1:]
+        ce = cross_entropy_loss(logits[:, :-1], targets)
+        return ce + aux, {"ce": ce, "aux_loss": aux}
+
+    def prefill(self, params, batch):
+        h, positions = self._embed(params, batch)
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(self._n_dense_first):
+            h, _, kv = self._block(params[f"dense_first_{i}"], h,
+                                   positions=positions, return_kv=True,
+                                   dense_ffn=True)
+            first_kv = kv
+
+        def body(carry, layer_p):
+            hh = carry
+            hh, _, kv = self._block(layer_p, hh, positions=positions,
+                                    return_kv=True)
+            return hh, kv
+
+        h, caches = jax.lax.scan(body, h, params["blocks"])
+        logits = self._logits(params, h[:, -1:])
+        cache = {"blocks": caches}
+        if self._n_dense_first:
+            cache["dense_first_0"] = first_kv
+        return logits[:, 0], cache
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        tok = batch["tokens"]                      # (B, 1)
+        pos = batch["pos"]                         # scalar int32
+        h = embed_lookup(params["embed"]["w"], tok)
+        positions = pos + jnp.arange(1)
+        new_cache = {}
+        for i in range(self._n_dense_first):
+            h, _, c = self._block(params[f"dense_first_{i}"], h,
+                                  positions=positions,
+                                  cache=cache[f"dense_first_{i}"],
+                                  cache_pos=pos, dense_ffn=True)
+            new_cache[f"dense_first_{i}"] = c
+
+        def body(carry, xs):
+            hh = carry
+            layer_p, cache_l = xs
+            hh, _, c = self._block(layer_p, hh, positions=positions,
+                                   cache=cache_l, cache_pos=pos)
+            return hh, c
+
+        h, caches = jax.lax.scan(body, h, (params["blocks"], cache["blocks"]))
+        new_cache["blocks"] = caches
+        logits = self._logits(params, h)
+        return logits[:, 0], new_cache
+
+    # ---------------------------------------------------------------- specs
+    def _layer_cache_spec(self, batch: int, seq: int):
+        cfg = self.cfg
+        if cfg.mla is not None:
+            return attn.mla_cache_spec(cfg, batch, seq)
+        return attn.gqa_cache_spec(cfg, batch, seq)
+
+    def cache_spec(self, batch: int, seq: int) -> PyTree:
+        one = self._layer_cache_spec(batch, seq)
+        stacked = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((self._n_scanned,) + s.shape, s.dtype),
+            one)
+        spec = {"blocks": stacked}
+        for i in range(self._n_dense_first):
+            spec[f"dense_first_{i}"] = self._layer_cache_spec(batch, seq)
+        return spec
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        b = shape.global_batch
+        i32 = jnp.int32
+        if shape.kind == "decode":
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+                "pos": jax.ShapeDtypeStruct((), i32),
+                "cache": self.cache_spec(b, shape.seq_len),
+            }
+        s = shape.seq_len
+        specs: Dict[str, Any] = {}
+        if cfg.family == "vlm":
+            p = cfg.vlm.num_patches
+            assert s > p, (s, p)
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, p, cfg.vlm.patch_embed_dim), COMPUTE_DTYPE)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s - p), i32)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        return specs
+
+    def layer_units(self) -> List[LayerUnit]:
+        units = [LayerUnit("embed", ("embed",), kind="aux")]
+        if self.cfg.family == "vlm":
+            units.append(LayerUnit("mm_proj", ("mm_proj",), kind="aux"))
+        for i in range(self._n_dense_first):
+            units.append(LayerUnit(f"block_{i:03d}", (f"dense_first_{i}",)))
+        for i in range(self._n_scanned):
+            units.append(LayerUnit(
+                f"block_{i + self._n_dense_first:03d}", ("blocks",), index=i))
+        units.append(LayerUnit("final_norm", ("final_norm",), kind="aux"))
+        if not self.cfg.tie_embeddings:
+            units.append(LayerUnit("lm_head", ("lm_head",), kind="aux"))
+        return units

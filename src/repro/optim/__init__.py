@@ -1,0 +1,16 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    init_opt_state,
+)
+from repro.optim.groups import (  # noqa: F401
+    GroupSpec,
+    ParamGroup,
+    build_group_spec,
+    decay_mask,
+    get_at,
+    set_at,
+)
+from repro.optim.schedule import constant, warmup_cosine  # noqa: F401

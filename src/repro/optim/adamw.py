@@ -1,0 +1,95 @@
+"""AdamW with fp32 master weights and per-group weight decay.
+
+State layout reproduces the paper's §2.2 checkpoint anatomy: the servable
+model file is bf16 (2 B/param) while the optimizer holds fp32 master weights
++ first/second moments (12 B/param) — a full training checkpoint is ~7x the
+bf16 model, which is exactly the ratio LLMTailor's selectivity attacks.
+
+The decay mask comes from the 2L + x group spec (repro.optim.groups), so the
+update honors the same per-layer group structure the checkpoint layout uses.
+A Pallas fused-update kernel for the TPU target lives in
+``repro.kernels.fused_adamw``; this module is the jnp production fallback and
+its oracle.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+PyTree = Any
+
+
+class AdamWConfig(NamedTuple):
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    @staticmethod
+    def from_train(tc: TrainConfig) -> "AdamWConfig":
+        return AdamWConfig(b1=tc.adam_b1, b2=tc.adam_b2, eps=tc.adam_eps,
+                           weight_decay=tc.weight_decay)
+
+
+def init_opt_state(params: PyTree) -> Dict[str, PyTree]:
+    """master = fp32 copy of params; m, v zeros (all fp32)."""
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    zeros = lambda t: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), t)
+    return {"master": master, "m": zeros(master), "v": zeros(master)}
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float
+                        ) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(
+    grads: PyTree,
+    opt: Dict[str, PyTree],
+    *,
+    lr: jax.Array,
+    step: jax.Array,
+    cfg: AdamWConfig,
+    decay_mask: PyTree,
+    compute_dtype=jnp.bfloat16,
+) -> Tuple[PyTree, Dict[str, PyTree]]:
+    """Returns (new bf16 params, new opt state).  grads must be fp32."""
+    t = step.astype(jnp.float32) + 1.0
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, master, m, v, decay):
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        mhat = m / c1
+        vhat = v / c2
+        step_dir = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        wd = cfg.weight_decay if decay else 0.0
+        new_master = master - lr * (step_dir + wd * master)
+        return new_master, m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_master = treedef.flatten_up_to(opt["master"])
+    flat_m = treedef.flatten_up_to(opt["m"])
+    flat_v = treedef.flatten_up_to(opt["v"])
+    flat_mask = treedef.flatten_up_to(decay_mask)
+
+    out = [upd(g, ma, m, v, d) for g, ma, m, v, d in
+           zip(flat_g, flat_master, flat_m, flat_v, flat_mask)]
+    new_master = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(lambda p: p.astype(compute_dtype), new_master)
+    return new_params, {"master": new_master, "m": new_m, "v": new_v}

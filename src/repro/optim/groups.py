@@ -1,0 +1,166 @@
+"""Layer-aligned parameter groups — the JAX realization of LLMTailor §4.1.
+
+The paper re-partitions DeepSpeed's 2 coarse optimizer parameter groups
+(decay / no-decay) into ``2L + x`` groups that mirror the model's layer
+structure, making per-layer optimizer state separable on disk.  In JAX the
+optimizer state is already a pytree mirroring the params, so the group
+structure here is *metadata*: for every layer unit we materialize its
+(decay, no_decay) member paths, per-group hyperparameters, and a stable group
+index — the checkpoint layout and the AdamW decay masks both key off it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.models.model_api import BaseLM, LayerUnit
+
+PyTree = Any
+Path = Tuple[str, ...]
+
+
+def _leaf_paths(tree: PyTree, prefix: Path = ()) -> List[Path]:
+    if isinstance(tree, dict):
+        out: List[Path] = []
+        for k in sorted(tree):
+            out.extend(_leaf_paths(tree[k], prefix + (k,)))
+        return out
+    return [prefix]
+
+
+def get_at(tree: PyTree, path: Path) -> PyTree:
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def set_at(tree: PyTree, path: Path, value: PyTree) -> PyTree:
+    """Functional set — returns a new tree sharing unmodified subtrees."""
+    if not path:
+        return value
+    new = dict(tree)
+    new[path[0]] = set_at(tree[path[0]], path[1:], value)
+    return new
+
+
+def is_no_decay(path: Path, leaf: Any) -> bool:
+    """AdamW convention: norms / biases / scalars are exempt from decay."""
+    name = path[-1] if path else ""
+    if any(t in name for t in ("ln", "norm", "bias", "scale", "A_log",
+                               "D_skip", "dt_bias")):
+        return True
+    return getattr(leaf, "ndim", 2) <= 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamGroup:
+    """One optimizer parameter group (paper Fig. 3)."""
+
+    index: int
+    unit: str                  # owning layer unit name
+    decay: bool                # weight-decay group or exempt group
+    paths: Tuple[Path, ...]    # param subpaths relative to the unit subtree
+    weight_decay: float = 0.0
+    lr_scale: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    """The full 2L + x group table for a model."""
+
+    groups: Tuple[ParamGroup, ...]
+    units: Tuple[LayerUnit, ...]
+
+    @property
+    def num_groups(self) -> int:
+        return len(self.groups)
+
+    def groups_for_unit(self, unit: str) -> List[ParamGroup]:
+        return [g for g in self.groups if g.unit == unit]
+
+    def describe(self) -> str:
+        lines = [f"{self.num_groups} parameter groups "
+                 f"({len(self.units)} layer units):"]
+        for g in self.groups:
+            lines.append(
+                f"  [{g.index:3d}] {g.unit:14s} "
+                f"{'decay' if g.decay else 'no-decay':8s} "
+                f"wd={g.weight_decay:g} params={len(g.paths)}")
+        return "\n".join(lines)
+
+
+def build_group_spec(model: BaseLM, *, weight_decay: float) -> GroupSpec:
+    """Construct the 2L + x groups.
+
+    Per the paper: each transformer(-like) block contributes two groups (its
+    decay tensors, its no-decay tensors); auxiliary layers contribute a
+    single group (their params are homogeneous w.r.t. decay).  Ordering is
+    deterministic: no-decay groups of all blocks, then aux layers, then the
+    decay groups — matching Fig. 3's fixed layout so a group's index is
+    computable from (L, tying) alone.
+    """
+    units = tuple(model.layer_units())
+    shapes = model.param_shapes()
+
+    def unit_subtree(u: LayerUnit) -> PyTree:
+        sub = get_at(shapes, u.path)
+        if u.index is not None:
+            # Stacked unit: leaves have a leading layers dim; logically the
+            # same member paths apply.
+            pass
+        return sub
+
+    block_units = [u for u in units if u.kind == "block"]
+    aux_units = [u for u in units if u.kind != "block"]
+
+    groups: List[ParamGroup] = []
+
+    def split_paths(u: LayerUnit) -> Tuple[List[Path], List[Path]]:
+        sub = unit_subtree(u)
+        decay_paths, nodecay_paths = [], []
+        for p in _leaf_paths(sub):
+            leaf = get_at(sub, p)
+            ndim = len(leaf.shape) - (1 if u.index is not None else 0)
+            fake = type("L", (), {"ndim": ndim})()
+            (nodecay_paths if is_no_decay(p, fake) else decay_paths).append(p)
+        return decay_paths, nodecay_paths
+
+    # 1) no-decay groups of every block (paper: norm segments first)
+    pending_decay: List[Tuple[LayerUnit, List[Path]]] = []
+    for u in block_units:
+        dec, nodec = split_paths(u)
+        groups.append(ParamGroup(len(groups), u.name, False, tuple(nodec),
+                                 weight_decay=0.0))
+        pending_decay.append((u, dec))
+    # 2) auxiliary layers (embed / lm_head / norms / projectors / shared)
+    for u in aux_units:
+        dec, nodec = split_paths(u)
+        paths = tuple(dec + nodec)
+        decay = bool(dec)
+        groups.append(ParamGroup(
+            len(groups), u.name, decay, paths,
+            weight_decay=weight_decay if decay else 0.0))
+    # 3) decay groups of every block
+    for u, dec in pending_decay:
+        groups.append(ParamGroup(len(groups), u.name, True, tuple(dec),
+                                 weight_decay=weight_decay))
+    return GroupSpec(groups=tuple(groups), units=units)
+
+
+def decay_mask(model: BaseLM, spec: Optional[GroupSpec] = None) -> PyTree:
+    """Pytree of bool: True where weight decay applies (from the groups)."""
+    shapes = model.param_shapes()
+    units = {u.name: u for u in (spec.units if spec else model.layer_units())}
+    groups = (spec.groups if spec
+              else build_group_spec(model, weight_decay=1.0).groups)
+    mask = jax.tree.map(lambda _: False, shapes)
+    for g in groups:
+        if not g.decay:
+            continue
+        u = units[g.unit]
+        for p in g.paths:
+            full = u.path + p
+            mask = set_at(mask, full, True)
+    return mask

@@ -1,0 +1,312 @@
+"""Logical-axis sharding rules -> concrete NamedShardings.
+
+Parameters carry *logical* axis names recorded at init time (see
+``repro.models.modules.ParamBuilder``).  This module resolves them against a
+mesh with divisibility checks (an axis that doesn't divide its dim is
+silently replicated — e.g. glm4's 2 KV heads on a 16-way model axis).
+
+Sharding strategy (DESIGN.md section 5):
+- bf16 compute params: FSDP over ``data`` (the "embed" dim), TP over
+  ``model`` (heads/ffn/vocab/experts), replicated over ``pod``.
+- optimizer state (fp32 master, m, v): same, plus the FSDP dim additionally
+  sharded over ``pod`` (ZeRO-over-DP; XLA inserts the pod-axis
+  reduce-scatter/all-gather around the update).
+- activations/batch: batch over (``pod``, ``data``).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# Two selectable layouts (the "dp" layout is the beyond-paper §Perf win for
+# models too small to amortize 16-way tensor parallelism — see
+# EXPERIMENTS.md §Perf):
+#   fsdp_tp: params FSDP over `data` + TP over `model`; batch over
+#            (pod, data).  The paper-faithful ZeRO-3-style baseline.
+#   dp:      batch over (pod, data, model) — pure data parallel compute;
+#            weights replicated on `model` (experts stay EP-sharded);
+#            optimizer state ZeRO-sharded over every axis.
+PARAM_RULES_BY_LAYOUT: Dict[str, Dict[str, Tuple[str, ...]]] = {
+    "fsdp_tp": {
+        "vocab": ("model",),
+        "embed": ("data",),      # FSDP shard
+        "embed2": (),            # second d_model dim of square weights
+        "ffn": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "experts": ("model",),
+        "layers": (),
+        "state": (),
+        "conv": (),
+    },
+    "dp": {
+        "vocab": (),
+        "embed": ("data",),      # FSDP over data only (AG inside the scan)
+        "embed2": (),
+        "ffn": (),
+        "heads": (),
+        "kv_heads": (),
+        "experts": ("model",),   # EP still pays for itself
+        "layers": (),
+        "state": (),
+        "conv": (),
+    },
+}
+PARAM_RULES = PARAM_RULES_BY_LAYOUT["fsdp_tp"]  # back-compat alias
+
+# Optimizer-state override: the ZeRO dims pick up more mesh axes.
+OPT_EXTRA_BY_LAYOUT: Dict[str, Dict[str, Tuple[str, ...]]] = {
+    "fsdp_tp": {"embed": ("data", "pod")},
+    "dp": {"embed": ("data", "model", "pod"), "ffn": ("model",)},
+}
+
+# Mesh axes carrying the batch dim of activations, per layout.
+BATCH_AXES_BY_LAYOUT: Dict[str, Tuple[str, ...]] = {
+    "fsdp_tp": ("pod", "data"),
+    "dp": ("pod", "data", "model"),
+}
+
+_CURRENT_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_mesh", default=None)
+_CURRENT_LAYOUT: contextvars.ContextVar[str] = contextvars.ContextVar(
+    "repro_layout", default="fsdp_tp")
+
+# Sentinel resolved against the active layout inside maybe_constrain.
+BATCH = "__batch__"
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, layout: str = "fsdp_tp"):
+    """Activate a mesh (+ layout) for ``maybe_constrain`` hints during
+    tracing."""
+    tok = _CURRENT_MESH.set(mesh)
+    tok2 = _CURRENT_LAYOUT.set(layout)
+    try:
+        yield mesh
+    finally:
+        _CURRENT_MESH.reset(tok)
+        _CURRENT_LAYOUT.reset(tok2)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CURRENT_MESH.get()
+
+
+def current_layout() -> str:
+    return _CURRENT_LAYOUT.get()
+
+
+def maybe_constrain(x: jax.Array, spec: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint if a mesh is active (no-op otherwise).
+
+    GSPMD's propagation loses activation shardings inside nested scans (the
+    while-carry join defaults to replicated), so the model code pins the
+    batch/TP layout of major intermediates through these hints — they are
+    no-ops in single-device tests.  Axes that don't exist on the mesh or
+    don't divide the dim are dropped (e.g. 24 q-heads on a 16-way model
+    axis -> replicated).
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    layout = current_layout()
+    resolved = []
+    used: set = set()
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            resolved.append(None)
+            continue
+        if ax == BATCH:
+            axes = BATCH_AXES_BY_LAYOUT[layout]
+        elif ax == "model" and layout == "dp":
+            # dp layout: the model axis belongs to the batch dim; hidden
+            # dims stay replicated (except experts, handled via param rules).
+            resolved.append(None)
+            continue
+        else:
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+        # Prefix fallback: shard over as many leading axes as divide the dim
+        # (e.g. batch 256 on a 2x16x16 mesh -> (pod, data) = 32-way).
+        picked: Optional[Tuple[str, ...]] = None
+        for cut in range(len(axes), 0, -1):
+            size = int(np.prod([mesh.shape[a] for a in axes[:cut]]))
+            if dim % size == 0:
+                picked = axes[:cut]
+                break
+        resolved.append(picked)
+        if picked:
+            used.update(picked)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))
+
+
+def _resolve_dim(dim: int, logical: Optional[str], mesh: Mesh,
+                 extra: Dict[str, Tuple[str, ...]],
+                 rules: Optional[Dict[str, Tuple[str, ...]]] = None
+                 ) -> Optional[Tuple[str, ...]]:
+    if logical is None:
+        return None
+    rules = rules if rules is not None else PARAM_RULES
+    axes = extra.get(logical, rules.get(logical, ()))
+    axes = tuple(a for a in axes if a in mesh.shape)
+    if not axes:
+        return None
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    if dim % size == 0:
+        return axes
+    # Try a prefix of the axes (e.g. drop the pod axis but keep data).
+    for cut in range(len(axes) - 1, 0, -1):
+        size = int(np.prod([mesh.shape[a] for a in axes[:cut]]))
+        if dim % size == 0:
+            return axes[:cut]
+    return None
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]], mesh: Mesh,
+             *, opt_state: bool = False, layout: str = "fsdp_tp") -> P:
+    rules = PARAM_RULES_BY_LAYOUT[layout]
+    extra = OPT_EXTRA_BY_LAYOUT[layout] if opt_state else {}
+    if opt_state and "pod" not in mesh.shape:
+        extra = {k: tuple(a for a in v if a != "pod")
+                 for k, v in extra.items()}
+    parts, used = [], set()
+    for dim, logical in zip(shape, axes):
+        r = _resolve_dim(int(dim), logical, mesh, extra, rules)
+        if r is not None and any(a in used for a in r):
+            r = tuple(a for a in r if a not in used) or None
+            if r is not None:
+                size = int(np.prod([mesh.shape[a] for a in r]))
+                if int(dim) % size != 0:
+                    r = None
+        parts.append(r if r else None)
+        if r:
+            used.update(r)
+    return P(*parts)
+
+
+def param_shardings(shapes: PyTree, axes: PyTree, mesh: Mesh,
+                    *, opt_state: bool = False,
+                    layout: str = "fsdp_tp") -> PyTree:
+    """Map (ShapeDtypeStruct tree, logical-axes tree) -> NamedSharding tree."""
+
+    def one(s, a):
+        return NamedSharding(
+            mesh, spec_for(s.shape, a, mesh, opt_state=opt_state,
+                           layout=layout))
+
+    return _tree_map_axes(one, shapes, axes)
+
+
+def _tree_map_axes(fn, shapes: PyTree, axes: PyTree) -> PyTree:
+    """tree.map where the axes tree's leaves are tuples."""
+    if isinstance(shapes, dict):
+        return {k: _tree_map_axes(fn, shapes[k], axes[k]) for k in shapes}
+    if isinstance(shapes, (list, tuple)):
+        return type(shapes)(
+            _tree_map_axes(fn, s, a) for s, a in zip(shapes, axes))
+    return fn(shapes, axes)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh: Mesh, layout: str = "fsdp_tp") -> Tuple[str, ...]:
+    return tuple(a for a in BATCH_AXES_BY_LAYOUT[layout] if a in mesh.shape)
+
+
+def data_sharding(shape: Sequence[int], mesh: Mesh, batch_dim: int = 0,
+                  layout: str = "fsdp_tp") -> NamedSharding:
+    """Shard dim ``batch_dim`` over the layout's batch axes, dropping
+    trailing axes until the dim divides."""
+    baxes = batch_axes(mesh, layout)
+    parts: list = [None] * len(shape)
+    dim = int(shape[batch_dim])
+    for cut in range(len(baxes), 0, -1):
+        size = int(np.prod([mesh.shape[a] for a in baxes[:cut]]))
+        if dim % size == 0:
+            parts[batch_dim] = baxes[:cut]
+            break
+    return NamedSharding(mesh, P(*parts))
+
+
+_CACHE_LEAF_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    # trailing-dims convention per leaf name (leading dims replicated):
+    # attention k/v:   (..., B, S, G, Dh)
+    "k": (None, "batch", None, "kv_heads", None),
+    "v": (None, "batch", None, "kv_heads", None),
+    "cross_k": (None, "batch", None, "kv_heads", None),
+    "cross_v": (None, "batch", None, "kv_heads", None),
+    # MLA: (..., B, S, R)
+    "latent": (None, "batch", None, None),
+    "rope": (None, "batch", None, None),
+    # SSD: state (..., B, H, P, N), conv (..., B, K-1, C)
+    "state": (None, "batch", "heads", None, None),
+    "conv": (None, "batch", None, "ffn"),
+}
+
+
+def cache_shardings(cache_spec: PyTree, mesh: Mesh,
+                    layout: str = "fsdp_tp") -> PyTree:
+    """Shardings for a decode cache: batch over the layout's batch axes,
+    heads over model (fsdp_tp only)."""
+    baxes = batch_axes(mesh, layout)
+
+    def resolve(path_leaf_name: str, s: jax.ShapeDtypeStruct) -> NamedSharding:
+        template = _CACHE_LEAF_AXES.get(path_leaf_name)
+        parts: list = [None] * len(s.shape)
+        used_model = False
+        if template is not None:
+            offset = len(s.shape) - len(template)
+            for i, ax in enumerate(template):
+                dim_i = i + offset
+                if dim_i < 0 or ax is None:
+                    continue
+                dim = int(s.shape[dim_i])
+                if ax == "batch":
+                    for cut in range(len(baxes), 0, -1):
+                        size = int(np.prod([mesh.shape[a]
+                                            for a in baxes[:cut]]))
+                        if dim % size == 0:
+                            parts[dim_i] = baxes[:cut]
+                            used_model = "model" in baxes[:cut]
+                            break
+                elif ax in ("kv_heads", "heads", "ffn") and not used_model \
+                        and layout != "dp":
+                    if "model" in mesh.shape and dim % mesh.shape["model"] == 0:
+                        parts[dim_i] = ("model",)
+                        used_model = True
+            # Fallback: when the head dim couldn't shard (kv_heads < model,
+            # e.g. arctic's 8 KV heads on a 16-way axis), shard the cache
+            # SEQUENCE dim over model instead — decode attention reduces over
+            # it with small partial-sum collectives, and without this a long
+            # cache replicates 16x and blows past HBM.
+            if (template and not used_model and layout != "dp"
+                    and "model" in mesh.shape
+                    and path_leaf_name in ("k", "v", "cross_k", "cross_v",
+                                           "latent", "rope")):
+                seq_axis = (len(s.shape) - 3
+                            if path_leaf_name in ("k", "v", "cross_k",
+                                                  "cross_v")
+                            else len(s.shape) - 2)
+                if (parts[seq_axis] is None
+                        and int(s.shape[seq_axis]) % mesh.shape["model"] == 0):
+                    parts[seq_axis] = ("model",)
+        return NamedSharding(mesh, P(*parts))
+
+    def walk(node, name=""):
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, name) for v in node)
+        return resolve(name, node)
+
+    return walk(cache_spec)

@@ -1,0 +1,4 @@
+from repro.roofline import hw  # noqa: F401
+from repro.roofline.analysis import RooflineReport, analyze_compiled  # noqa: F401
+from repro.roofline.flops import count_active_params, model_flops  # noqa: F401
+from repro.roofline.hlo_parse import HloAccount, account  # noqa: F401

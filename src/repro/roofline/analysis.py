@@ -1,0 +1,138 @@
+"""Roofline terms from a compiled (dry-run) artifact.
+
+compute term    = HLO_FLOPs / (chips x peak FLOP/s)
+memory term     = HLO_bytes / (chips x HBM bandwidth)
+collective term = collective_bytes / (chips x ICI link bandwidth)
+
+Two FLOP/byte sources are recorded:
+- ``raw_*``: ``compiled.cost_analysis()`` verbatim (per-device under SPMD —
+  verified in tests/test_roofline.py — but while bodies count ONCE, so
+  scan-over-layers programs are undercounted by ~L x);
+- primary numbers: the loop-aware HLO account (``roofline.hlo_parse``) which
+  multiplies through ``known_trip_count`` — these feed the three terms.
+
+collective_bytes uses per-op ring-schedule wire factors with parsed
+replica-group sizes ((g-1)/g, all-reduce 2x).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.roofline import hw
+from repro.roofline.hlo_parse import HloAccount, account
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # loop-aware per-chip accounting (primary)
+    hlo_flops: float
+    hlo_bytes: float            # analytic TPU kernel-boundary model
+    hlo_bytes_parsed: float     # HLO-parsed upper bound (CPU fusion bounds)
+    collective_bytes: float
+    # roofline terms (seconds)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    # analytic
+    model_flops: float          # global 6*N_active*D
+    # raw cost_analysis (while bodies counted once)
+    raw_flops: float = 0.0
+    raw_bytes: float = 0.0
+    collectives: Optional[Dict[str, Dict[str, float]]] = None
+    bytes_per_device: Optional[float] = None   # memory_analysis total
+    memory_breakdown: Optional[Dict[str, float]] = None
+    hbm_model: Optional[Dict[str, float]] = None  # analytic traffic breakdown
+    compile_seconds: Optional[float] = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline lower bound on step time (perfect overlap of the three
+        engines => max; no overlap => sum.  We report max)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        t = self.step_time_s
+        if not t:
+            return 0.0
+        return self.model_flops / (self.chips * hw.PEAK_FLOPS_BF16 * t)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the compiled program sits to the hardware roofline:
+        compute term / max term (1.0 = compute-bound at peak)."""
+        t = self.step_time_s
+        return self.compute_s / t if t else 0.0
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.update(dominant=self.dominant, step_time_s=self.step_time_s,
+                 useful_flops_ratio=self.useful_flops_ratio, mfu=self.mfu,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+    def summary(self) -> str:
+        return (f"{self.arch:24s} {self.shape:12s} {self.mesh:10s} "
+                f"compute={self.compute_s*1e3:9.3f}ms "
+                f"memory={self.memory_s*1e3:9.3f}ms "
+                f"collective={self.collective_s*1e3:9.3f}ms "
+                f"dominant={self.dominant:10s} mfu={self.mfu:6.3f} "
+                f"useful={self.useful_flops_ratio:6.3f}")
+
+
+def analyze_compiled(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    hlo_text: str,
+    model_flops: float,
+    hbm_model: Optional[Dict[str, float]] = None,
+    raw_cost: Optional[Dict[str, float]] = None,
+    memory_stats: Optional[Dict[str, float]] = None,
+    compile_seconds: Optional[float] = None,
+) -> RooflineReport:
+    acc: HloAccount = account(hlo_text, num_devices=chips)
+    raw_cost = raw_cost or {}
+    mem_total = None
+    if memory_stats:
+        mem_total = (memory_stats.get("argument_size_in_bytes", 0)
+                     + memory_stats.get("output_size_in_bytes", 0)
+                     + memory_stats.get("temp_size_in_bytes", 0)
+                     - memory_stats.get("alias_size_in_bytes", 0))
+    hbm_bytes = (hbm_model or {}).get("total", acc.traffic_bytes)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=acc.flops,
+        hlo_bytes=hbm_bytes,
+        hlo_bytes_parsed=acc.traffic_bytes,
+        collective_bytes=acc.collective_wire_bytes,
+        compute_s=acc.flops / hw.PEAK_FLOPS_BF16,
+        memory_s=hbm_bytes / hw.HBM_BW,
+        collective_s=acc.collective_wire_bytes / hw.ICI_BW_PER_LINK,
+        model_flops=model_flops,
+        raw_flops=float(raw_cost.get("flops", 0.0)),
+        raw_bytes=float(raw_cost.get("bytes accessed", 0.0)),
+        collectives=acc.collectives,
+        bytes_per_device=mem_total,
+        memory_breakdown=memory_stats,
+        hbm_model=hbm_model,
+        compile_seconds=compile_seconds,
+    )

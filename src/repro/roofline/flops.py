@@ -1,0 +1,64 @@
+"""Analytic MODEL_FLOPS (the 6*N*D convention) per (arch, shape, step kind).
+
+N_active counts matmul-participating params once per token:
+- token embedding tables are gathers (excluded) unless tied to the LM head
+  (then the table participates in the unembed matmul);
+- routed-expert tensors are scaled by top_k / num_experts (6*N_active*D for
+  MoE per the brief); shared experts / dense residuals count fully.
+Attention score/context FLOPs are *excluded* (standard 6ND convention); the
+HLO account (roofline.hlo_parse) captures them, which is one reason the
+useful-flops ratio sits below 1 for long sequences.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models.model_api import BaseLM
+
+
+def count_active_params(model: BaseLM) -> Tuple[float, float]:
+    """Returns (total_params, matmul_active_params)."""
+    cfg: ModelConfig = model.cfg
+    shapes = model.param_shapes()
+    total = 0.0
+    active = 0.0
+
+    def walk(tree, path):
+        nonlocal total, active
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                walk(v, path + (k,))
+            return
+        size = 1.0
+        for d in tree.shape:
+            size *= d
+        total += size
+        name = path[-1]
+        if path[0] == "embed":
+            if cfg.tie_embeddings:
+                active += size  # participates in the unembed matmul
+            return
+        if name.startswith("we_") and cfg.moe is not None:
+            active += size * cfg.moe.top_k / cfg.moe.num_experts
+            return
+        active += size
+
+    walk(shapes, ())
+    return total, active
+
+
+def model_flops(model: BaseLM, shape: ShapeConfig) -> float:
+    """Global MODEL_FLOPS for one step of the given shape."""
+    _, active = count_active_params(model)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    # decode: one token per sequence
+    return 2.0 * active * shape.global_batch

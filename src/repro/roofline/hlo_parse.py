@@ -1,0 +1,339 @@
+"""Loop-aware accounting over optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, which undercounts
+scan-over-layers programs by ~L x.  XLA annotates every while with
+``known_trip_count``, so we parse the optimized HLO, propagate trip-count
+multipliers through the computation graph (while bodies, fusion calls), and
+account per executed op:
+
+- FLOPs: dot ops (2 x result x contraction) — matmuls dominate every
+  assigned arch; elementwise flops are charged at 1 flop/output element.
+- HBM traffic: for every top-level non-trivial op, operands + result bytes
+  (post-fusion ops are exactly the kernel-boundary traffic a TPU would see).
+- Collectives: result bytes weighted by ring-schedule wire factors with the
+  replica-group size parsed per op.
+
+Everything is per-device (the SPMD module is the per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1, "f8e8m0fnu": 1, "s4": 1, "u4": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.-]+)\s*\(.*\)\s*->.*\{")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# Ops with zero kernel cost (aliases / metadata).
+_FREE_OPS = {"bitcast", "get-tuple-element", "tuple", "parameter", "constant",
+             "after-all", "partition-id", "replica-id", "iota",
+             "get-dimension-size", "opt-barrier"}
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    total = 0
+    for _, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op] = dataclasses.field(default_factory=list)
+    shapes: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+def _split_type_and_op(rhs: str) -> Tuple[str, str, str]:
+    """rhs like 'f32[4,32]{1,0} dot(%a, %b), attrs' or
+    '(s32[], f32[..]) while(%t), ...'.  Returns (type, opcode, rest)."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth, i = 0, 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        type_str, rest = rhs[:i + 1], rhs[i + 1:].strip()
+    else:
+        # type is dtype[dims]{layout}?; ends at first space
+        sp = rhs.find(" ")
+        type_str, rest = rhs[:sp], rhs[sp + 1:].strip()
+    m = re.match(r"([\w-]+)\s*\(", rest)
+    if not m:
+        return type_str, rest.split("(")[0].strip(), ""
+    opcode = m.group(1)
+    # balanced-paren operand group
+    start = rest.find("(")
+    depth, j = 0, start
+    for j in range(start, len(rest)):
+        if rest[j] == "(":
+            depth += 1
+        elif rest[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    args = rest[start + 1:j]
+    attrs = rest[j + 1:]
+    return type_str, opcode, args + "|" + attrs
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        hdr = _COMP_HDR_RE.match(line.strip())
+        if hdr and ("->" in line):
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            # header also declares params
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        if "(" not in rhs:
+            continue
+        type_str, opcode, packed = _split_type_and_op(rhs)
+        args, _, attrs = packed.partition("|")
+        operands = re.findall(r"%([\w.-]+)", args)
+        op = Op(name, type_str, opcode, operands, attrs)
+        cur.ops.append(op)
+        cur.shapes[name] = type_str
+    return comps
+
+
+def _entry_name(comps: Dict[str, Computation], text: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.-]+)", text, re.MULTILINE)
+    if m:
+        return m.group(1)
+    return next(iter(comps))
+
+
+def _call_edges(comps: Dict[str, Computation]) -> List[Tuple[str, str, float]]:
+    """(caller, callee, trips) for every call site."""
+    edges: List[Tuple[str, str, float]] = []
+    for cname, comp in comps.items():
+        for op in comp.ops:
+            if op.opcode == "while":
+                t = _TRIP_RE.search(op.attrs)
+                trips = float(t.group(1)) if t else 1.0
+                for key in ("body", "condition"):
+                    mm = re.search(key + r"=%?([\w.-]+)", op.attrs)
+                    if mm:
+                        edges.append((cname, mm.group(1), trips))
+            else:
+                for mm in re.finditer(
+                        r"(?:calls|to_apply|body|condition)=%?([\w.-]+)",
+                        op.attrs):
+                    edges.append((cname, mm.group(1), 1.0))
+    return edges
+
+
+def _multipliers(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
+    """Executed-times multiplier per computation (while trips, fusion calls).
+
+    The call graph is a DAG (HLO cannot recurse); iterate to fixpoint so
+    contributions propagate regardless of discovery order."""
+    edges = _call_edges(comps)
+    incoming: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    for caller, callee, trips in edges:
+        incoming[callee].append((caller, trips))
+    mult: Dict[str, float] = {entry: 1.0}
+    for _ in range(len(comps) + 2):
+        changed = False
+        for cname in comps:
+            if cname == entry:
+                continue
+            total = sum(mult.get(caller, 0.0) * trips
+                        for caller, trips in incoming.get(cname, ()))
+            if total != mult.get(cname, 0.0):
+                mult[cname] = total
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    """2 x result elems x contraction size."""
+    result = _shape_elems(op.type_str)
+    lhs = comp.shapes.get(op.operands[0]) if op.operands else None
+    contract = 1
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    if lhs and m:
+        dims = _shape_dims(lhs)
+        if dims:
+            _, lhs_dims = dims[0]
+            for d in m.group(1).split(","):
+                if d and int(d) < len(lhs_dims):
+                    contract *= lhs_dims[int(d)]
+    return 2.0 * result * contract
+
+
+def _group_size(attrs: str, default: int) -> int:
+    m = _GROUPS_RE.search(attrs)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(attrs)
+    if m:  # explicit groups {{0,1},{2,3}}: size = members of first group
+        first = m.group(1).split("},{")[0]
+        return max(1, len([x for x in first.replace("{", "").split(",") if x]))
+    return default
+
+
+_WIRE_FACTOR = {
+    "all-gather": lambda g: (g - 1) / g,
+    "reduce-scatter": lambda g: (g - 1) / g,
+    "all-reduce": lambda g: 2.0 * (g - 1) / g,
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+
+@dataclasses.dataclass
+class HloAccount:
+    flops: float = 0.0                 # per device, trip-aware
+    dot_flops: float = 0.0             # matmul-only subset
+    traffic_bytes: float = 0.0         # per device kernel-boundary bytes
+    collective_wire_bytes: float = 0.0  # per device
+    collective_result_bytes: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=lambda: defaultdict(lambda: {"count": 0.0, "bytes": 0.0,
+                                                     "wire_bytes": 0.0}))
+    dot_count: float = 0.0
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["collectives"] = {k: dict(v) for k, v in self.collectives.items()}
+        return d
+
+
+def _called_comps(comps: Dict[str, Computation]) -> Tuple[set, set]:
+    """(fusion/apply-called comps, loop body/cond comps)."""
+    fused, loops = set(), set()
+    for comp in comps.values():
+        for op in comp.ops:
+            for mm in re.finditer(r"(?:calls|to_apply)=%?([\w.-]+)", op.attrs):
+                fused.add(mm.group(1))
+            for mm in re.finditer(r"(?:body|condition)=%?([\w.-]+)", op.attrs):
+                loops.add(mm.group(1))
+    return fused, loops
+
+
+def account(text: str, *, num_devices: int) -> HloAccount:
+    comps = parse_module(text)
+    entry = _entry_name(comps, text)
+    mult = _multipliers(comps, entry)
+    fused, loops = _called_comps(comps)
+    acc = HloAccount()
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        # Fusion bodies: their cost is charged at the call site (operands +
+        # result of the fusion op); only real dots inside them are added.
+        fusion_body_only = cname in fused and cname not in loops
+        for op in comp.ops:
+            if fusion_body_only and op.opcode != "dot":
+                continue
+            base = op.opcode.removesuffix("-start").removesuffix("-done")
+            if base in _COLLECTIVES:
+                if op.opcode.endswith("-done"):
+                    continue
+                b = _shape_bytes(op.type_str)
+                g = _group_size(op.attrs, num_devices)
+                wire = _WIRE_FACTOR[base](max(g, 1)) * b
+                acc.collectives[base]["count"] += m
+                acc.collectives[base]["bytes"] += m * b
+                acc.collectives[base]["wire_bytes"] += m * wire
+                acc.collective_wire_bytes += m * wire
+                acc.collective_result_bytes += m * b
+                acc.traffic_bytes += m * b
+                continue
+            if op.opcode in _FREE_OPS:
+                continue
+            if op.opcode == "dot":
+                f = m * _dot_flops(op, comp)
+                acc.flops += f
+                acc.dot_flops += f
+                acc.dot_count += m
+            elif op.opcode in ("while", "call", "conditional"):
+                continue  # callee ops accounted via multipliers
+            elif op.opcode == "fusion":
+                # charge elementwise flops for the fused body at 1/output elem
+                # (copies / converts / slices are traffic, not flops)
+                acc.flops += m * _shape_elems(op.type_str)
+                # dots inside fused computations are charged via multipliers
+            # kernel-boundary traffic: operands + result.  Slicing ops touch
+            # only the slice, not the full operand buffer.
+            res = _shape_bytes(op.type_str)
+            if op.opcode == "dynamic-slice":
+                acc.traffic_bytes += m * 2 * res
+                continue
+            if op.opcode == "dynamic-update-slice":
+                upd = (_shape_bytes(comp.shapes.get(op.operands[1], ""))
+                       if len(op.operands) > 1 else res)
+                acc.traffic_bytes += m * 2 * upd
+                continue
+            ob = sum(_shape_bytes(comp.shapes.get(o, "")) for o in op.operands)
+            acc.traffic_bytes += m * (ob + res)
+    acc.collectives = {k: dict(v) for k, v in acc.collectives.items()}
+    return acc

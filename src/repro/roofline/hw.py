@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants (the TARGET platform for this framework;
+the container executes on CPU, so these feed the analytic roofline only)."""
+from __future__ import annotations
+
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW_PER_LINK = 50e9       # bytes/s per ICI link
+HBM_BYTES = 16 * 2**30       # 16 GiB per chip

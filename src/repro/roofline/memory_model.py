@@ -1,0 +1,102 @@
+"""Analytic per-chip HBM traffic model for the TPU target.
+
+The HLO-parsed traffic (roofline.hlo_parse) reflects *CPU-backend* fusion
+boundaries — e.g. it materializes f32 attention scores that the Pallas flash
+kernel keeps in VMEM on the TPU target — so the memory roofline term uses
+this analytic model of kernel-boundary traffic, and the parsed value is
+recorded alongside as an upper bound.
+
+Conventions: mesh (pod x data x model); params FSDP-sharded over data, TP
+over model; per-chip compute reads TP-sharded weight columns after the FSDP
+all-gather (so weight IO scales with 1/n_model, not 1/chips); optimizer
+state is fully sharded (1/chips).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models.model_api import BaseLM
+from repro.roofline.flops import count_active_params
+
+
+def _state_bytes_per_seq(cfg: ModelConfig) -> float:
+    """Constant-size decode state per sequence (SSD state + conv), all layers."""
+    if cfg.family not in ("ssm", "hybrid"):
+        return 0.0
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    h = d_in // s.head_dim
+    per_layer = (h * s.head_dim * s.state_dim * 4
+                 + (s.conv_kernel - 1) * (d_in + 2 * s.ngroups * s.state_dim) * 2)
+    return cfg.num_layers * per_layer
+
+
+def _kv_bytes_per_token(cfg: ModelConfig) -> float:
+    """Attention-cache bytes per (sequence, token), summed over layers."""
+    if cfg.family == "ssm":
+        return 0.0
+    if cfg.mla is not None:
+        return cfg.num_layers * (cfg.mla.kv_lora_rank
+                                 + cfg.mla.qk_rope_head_dim) * 2.0
+    g, dh = max(cfg.num_kv_heads, 1), cfg.resolved_head_dim
+    if cfg.family == "hybrid":
+        n_attn = cfg.num_layers // cfg.hybrid.shared_period
+        return n_attn * 2 * g * dh * 2.0
+    if cfg.family == "encdec":
+        ld = cfg.encdec.num_decoder_layers
+        return ld * 2 * 2 * g * dh * 2.0  # self + cross caches
+    return cfg.num_layers * 2 * g * dh * 2.0
+
+
+def estimate_hbm_bytes(model: BaseLM, shape: ShapeConfig,
+                       *, n_model: int = 16, chips: int = 256) -> Dict[str, float]:
+    cfg = model.cfg
+    total_p, active_p = count_active_params(model)
+    d = cfg.d_model
+    l = cfg.num_layers
+    f = cfg.d_ff if cfg.d_ff else (cfg.ssm.d_inner(d) * 2 if cfg.ssm else 0)
+    chunk = min(cfg.attn_chunk_size, shape.seq_len)
+
+    if shape.kind == "decode":
+        bsz = shape.global_batch
+        # FSDP all-gather write + TP-sharded read of every active weight.
+        weights = 2.0 * active_p * 2.0 / n_model
+        kv_global = bsz * (shape.seq_len * _kv_bytes_per_token(cfg)
+                           + _state_bytes_per_seq(cfg))
+        kv = kv_global / chips
+        acts = bsz * l * 8.0 * d * 2.0 / chips
+        out = {"weights": weights, "kv_cache": kv, "activations": acts}
+        out["total"] = sum(out.values())
+        return out
+
+    tokens = float(shape.global_batch * shape.seq_len)
+    tok_chip = tokens / chips
+    act_mult = 4.0 if shape.kind == "train" else 1.0   # fwd + remat + bwd(2x)
+    w_mult = 4.0 if shape.kind == "train" else 1.0     # AG write + 3 reads
+
+    weights = w_mult * total_p * 2.0 / n_model
+    optimizer = (12.0 + 12.0 + 4.0 + 2.0) * total_p / chips \
+        if shape.kind == "train" else 0.0
+    grads = 8.0 * total_p / chips if shape.kind == "train" else 0.0
+    # Block kernel-boundary IO per token per layer (bf16): ~8 x d for norms /
+    # attention in-out / residuals, 4 x f for the MLP hidden write+read.
+    acts = act_mult * tok_chip * l * (8.0 * d + 4.0 * f) * 2.0
+    # Flash attention: K/V re-read once per query chunk + Q/O streams.
+    if cfg.family != "ssm" and cfg.num_heads:
+        g, dh = max(cfg.num_kv_heads, 1), cfg.resolved_head_dim
+        n_attn = (l // cfg.hybrid.shared_period if cfg.family == "hybrid" else l)
+        s = float(shape.seq_len)
+        per_seq_kv_reread = (s / chunk) * s * g * dh * 2.0 * 2.0
+        kv_reread = per_seq_kv_reread * shape.global_batch / chips
+        attn = act_mult * n_attn * (kv_reread
+                                    + 4.0 * tok_chip * cfg.num_heads * dh * 2.0)
+    else:
+        attn = 0.0
+    logits_mult = 3.0 if shape.kind == "train" else 1.0
+    logits = logits_mult * tokens * cfg.vocab_size * 4.0 / chips
+    out = {"weights": weights, "optimizer": optimizer, "grads": grads,
+           "activations": acts, "attention": attn, "logits": logits}
+    out["total"] = sum(out.values())
+    return out

@@ -1,0 +1,19 @@
+import os
+import sys
+from pathlib import Path
+
+# Tests must see the single real CPU device (the 512-device flag is set ONLY
+# inside launch/dryrun.py); keep any inherited flag out of the environment.
+os.environ.pop("XLA_FLAGS", None)
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import jax
+    return jax.random.PRNGKey(0)

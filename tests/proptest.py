@@ -1,0 +1,27 @@
+"""Lightweight property-based testing helpers (hypothesis is not installed
+in this offline container — see DESIGN.md §8).
+
+``cases(n, gen, seed)`` deterministically samples n random cases from a
+generator function of a numpy RandomState; failures report the case for
+reproduction.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterator, TypeVar
+
+import numpy as np
+
+T = TypeVar("T")
+
+
+def cases(n: int, gen: Callable[[np.random.RandomState], T],
+          seed: int = 1234) -> Iterator[T]:
+    for i in range(n):
+        rs = np.random.RandomState(seed + i * 7919)
+        yield gen(rs)
+
+
+def rand_shape(rs: np.random.RandomState, ndim_max: int = 3,
+               dim_max: int = 9) -> tuple:
+    nd = rs.randint(1, ndim_max + 1)
+    return tuple(int(rs.randint(1, dim_max + 1)) for _ in range(nd))

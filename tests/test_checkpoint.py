@@ -1,0 +1,203 @@
+"""Checkpoint substrate: chunk roundtrips, atomic commit, corruption
+fallback, GC, codecs, async writer error propagation."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import cases, rand_shape
+
+from repro.checkpoint import (
+    AsyncWriteError,
+    AsyncWriter,
+    ChunkCorruption,
+    ChunkStore,
+    decode_chunk,
+    encode_chunk,
+)
+from repro.checkpoint.saver import CheckpointManager, RestoreError
+from repro.configs import get_config
+from repro.core import LayerRegistry, make_policy
+from repro.launch import steps as steps_lib
+from repro.models import build_model
+
+
+# ------------------------------------------------------------------- serial
+def test_chunk_roundtrip_bitwise():
+    def gen(rs):
+        dtype = rs.choice([np.float32, np.int32, np.float16])
+        return {
+            "a": rs.standard_normal(rand_shape(rs)).astype(dtype),
+            "b": {"c": rs.standard_normal(rand_shape(rs)).astype(np.float32)},
+        }
+
+    for tree in cases(8, gen):
+        blob = encode_chunk(tree, meta={"x": 1}, codec="zstd")
+        out, meta = decode_chunk(blob)
+        assert meta["x"] == 1
+        np.testing.assert_array_equal(out["a"], tree["a"])
+        np.testing.assert_array_equal(out["b"]["c"], tree["b"]["c"])
+
+
+def test_chunk_roundtrip_bf16():
+    x = jnp.asarray(np.random.RandomState(0).standard_normal((33, 7)),
+                    jnp.bfloat16)
+    blob = encode_chunk({"w": np.asarray(x)}, meta={}, codec="zstd")
+    out, _ = decode_chunk(blob)
+    assert str(out["w"].dtype) == "bfloat16"
+    np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                  np.asarray(out["w"], np.float32))
+
+
+def test_chunk_crc_detects_corruption(tmp_path):
+    store = ChunkStore(tmp_path)
+    ref = store.write(1, "u", "weights", {"w": np.ones((4, 4), np.float32)})
+    path = tmp_path / ref.relpath
+    raw = bytearray(path.read_bytes())
+    raw[-20] ^= 0xFF  # flip a byte inside the tensor payload
+    path.write_bytes(bytes(raw))
+    with pytest.raises((ChunkCorruption, Exception)):
+        store.read(ref)
+
+
+def test_int8_codec_bounded_error():
+    rs = np.random.RandomState(0)
+    x = (rs.standard_normal((512, 16)) * 3).astype(np.float32)
+    blob = encode_chunk({"w": x}, meta={}, codec="int8")
+    out, _ = decode_chunk(blob)
+    amax_per_block = np.abs(x.reshape(-1, 256)).max(axis=1)
+    assert np.max(np.abs(out["w"] - x)) <= amax_per_block.max() / 127 + 1e-6
+    assert len(blob) < x.nbytes / 2.5  # ~4x smaller before zstd
+
+
+# -------------------------------------------------------------- async writer
+def test_async_writer_runs_and_propagates_errors(tmp_path):
+    w = AsyncWriter(num_threads=2)
+    hits = []
+    w.submit(lambda: hits.append(1))
+    w.drain()
+    assert hits == [1]
+
+    def boom():
+        raise ValueError("disk on fire")
+
+    w.submit(boom)
+    with pytest.raises(AsyncWriteError):
+        w.drain()
+    w.close()
+
+
+def test_async_writer_concurrent_compression(tmp_path):
+    """Regression: zstd contexts must be thread-safe (per-thread)."""
+    store = ChunkStore(tmp_path)
+    w = AsyncWriter(num_threads=4)
+    rs = np.random.RandomState(0)
+    for i in range(24):
+        w.submit(store.write, i, f"u{i}", "weights",
+                 {"w": rs.standard_normal((64, 64)).astype(np.float32)})
+    w.drain()
+    w.close()
+    assert len(list((tmp_path / "steps").glob("*/*.chunk"))) == 24
+
+
+# ----------------------------------------------------------------- manager
+@pytest.fixture(scope="module")
+def small_setup():
+    cfg = get_config("llama3.2-3b", reduced=True)
+    model = build_model(cfg)
+    state = steps_lib.init_state(model, jax.random.key(0))
+    registry = LayerRegistry(model)
+    return model, state, registry
+
+
+def test_full_save_restore_bitwise(tmp_path, small_setup):
+    model, state, registry = small_setup
+    mgr = CheckpointManager(tmp_path, registry,
+                            make_policy("full", model.layer_units()),
+                            async_save=True)
+    mgr.save(state, step=10)
+    restored = mgr.restore(steps_lib.state_specs(model))
+    for key in ("params", "opt"):
+        for a, b in zip(jax.tree.leaves(state[key]),
+                        jax.tree.leaves(restored[key])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(restored["step"]) == 10
+    mgr.close()
+
+
+def test_parity_manifest_staleness(tmp_path, small_setup):
+    model, state, registry = small_setup
+    mgr = CheckpointManager(tmp_path, registry,
+                            make_policy("parity", model.layer_units()),
+                            async_save=False)
+    mgr.save(state, step=10)
+    m1 = mgr.save(state, step=20)
+    m2 = mgr.save(state, step=30)
+    # alternate halves: at event 2 even blocks are fresh, odd from event 1
+    stale = m2.staleness()
+    assert stale["block_000"] == 0
+    assert stale["block_001"] == 10
+    assert set(m1.saved_units) != set(m2.saved_units)
+    mgr.close()
+
+
+def test_corruption_falls_back_to_older_chunk(tmp_path, small_setup):
+    model, state, registry = small_setup
+    mgr = CheckpointManager(tmp_path, registry,
+                            make_policy("full", model.layer_units()),
+                            async_save=False, keep=8)
+    mgr.save(state, step=10)
+    state2 = jax.tree.map(
+        lambda x: x * 2 if x.dtype != jnp.int32 else x, state)
+    mgr.save(state2, step=20)
+    # corrupt block_000 weights at step 20
+    victim = tmp_path / "steps" / "step-00000020" / "block_000.weights.chunk"
+    raw = bytearray(victim.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    victim.write_bytes(bytes(raw))
+    restored = mgr.restore(steps_lib.state_specs(model))
+    # block_000 fell back to step 10 values; block_001 is step 20
+    exp_fallback = registry.extract_unit(state["params"], "block_000")
+    got = registry.extract_unit(restored["params"], "block_000")
+    for a, b in zip(jax.tree.leaves(exp_fallback), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    mgr.close()
+
+
+def test_restore_error_when_everything_gone(tmp_path, small_setup):
+    model, state, registry = small_setup
+    mgr = CheckpointManager(tmp_path, registry,
+                            make_policy("full", model.layer_units()),
+                            async_save=False)
+    mgr.save(state, step=10)
+    for f in (tmp_path / "steps" / "step-00000010").glob("block_000*"):
+        f.unlink()
+    with pytest.raises(RestoreError):
+        mgr.restore(steps_lib.state_specs(model))
+    mgr.close()
+
+
+def test_gc_retention(tmp_path, small_setup):
+    model, state, registry = small_setup
+    mgr = CheckpointManager(tmp_path, registry,
+                            make_policy("full", model.layer_units()),
+                            async_save=False, keep=2)
+    for i, s in enumerate([10, 20, 30, 40]):
+        mgr.save(state, step=s)
+    steps = mgr.manifests.all_steps()
+    assert steps == [30, 40]
+    dirs = sorted(d.name for d in (tmp_path / "steps").glob("step-*"))
+    assert dirs == ["step-00000030", "step-00000040"]
+    mgr.close()
+
+
+def test_first_event_is_always_full(tmp_path, small_setup):
+    model, state, registry = small_setup
+    mgr = CheckpointManager(tmp_path, registry,
+                            make_policy("parity", model.layer_units()),
+                            async_save=False)
+    m0 = mgr.save(state, step=10)
+    assert set(m0.saved_units) == set(registry.unit_names())
+    mgr.close()

@@ -1,0 +1,226 @@
+"""LLMTailor core: 2L+x groups, policies, recipes, explicit merge engine,
+delta tracker, yamlish."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    DeltaTracker,
+    LayerRegistry,
+    Recipe,
+    make_policy,
+    merge,
+)
+from repro.core.policies import PolicyContext
+from repro.core.recipe import CheckpointRef, SelectRule
+from repro.core import yamlish
+from repro.checkpoint.saver import CheckpointManager
+from repro.launch import steps as steps_lib
+from repro.models import build_model
+from repro.optim import build_group_spec, decay_mask
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("llama3.2-3b", reduced=True)
+    model = build_model(cfg)
+    state = steps_lib.init_state(model, jax.random.key(0))
+    return model, state, LayerRegistry(model)
+
+
+# --------------------------------------------------------------- 2L+x groups
+def test_group_spec_is_2l_plus_x(setup):
+    model, _, registry = setup
+    cfg = model.cfg
+    spec = registry.group_spec
+    blocks = [u for u in registry.units if u.kind == "block"]
+    aux = [u for u in registry.units if u.kind != "block"]
+    # paper §4.1: 2 groups per transformer layer + 1 per aux layer
+    assert spec.num_groups == 2 * len(blocks) + len(aux)
+    # fixed ordering: no-decay block groups, aux, decay block groups (Fig. 3)
+    kinds = [(g.unit.startswith("block"), g.decay) for g in spec.groups]
+    nb = len(blocks)
+    assert all(k == (True, False) for k in kinds[:nb])
+    assert all(k == (True, True) for k in kinds[-nb:])
+
+
+def test_decay_mask_excludes_norms_and_biases(setup):
+    model, state, _ = setup
+    mask = decay_mask(model)
+    flat = dict(__import__("repro.checkpoint.serial", fromlist=["x"])
+                .flatten_with_paths(mask))
+    for path, v in flat.items():
+        if any(t in path for t in ("ln", "norm", "scale", "A_log", "D_skip",
+                                   "dt_bias")):
+            assert v is False, path
+    # weights decay
+    assert any(v for v in flat.values())
+
+
+def test_group_indices_deterministic(setup):
+    model, _, _ = setup
+    s1 = build_group_spec(model, weight_decay=0.1)
+    s2 = build_group_spec(model, weight_decay=0.1)
+    assert [(g.index, g.unit, g.decay) for g in s1.groups] == \
+        [(g.index, g.unit, g.decay) for g in s2.groups]
+
+
+# ------------------------------------------------------------------ policies
+def _mk_policy(name, model, **kw):
+    return make_policy(name, model.layer_units(), **kw)
+
+
+def test_parity_covers_everything_in_two_events(setup):
+    model, _, registry = setup
+    pol = _mk_policy("parity", model)
+    s0 = set(pol.select(PolicyContext(0, 0)))
+    s1 = set(pol.select(PolicyContext(1, 0)))
+    assert s0 | s1 == set(registry.unit_names())
+    blocks0 = {u for u in s0 if u.startswith("block")}
+    blocks1 = {u for u in s1 if u.startswith("block")}
+    assert not (blocks0 & blocks1)
+    assert "embed" in s1 and "embed" not in s0  # embed rides the odd class
+
+
+def test_filtered_policy_saves_important_every_event(setup):
+    model, _, _ = setup
+    pol = _mk_policy("filtered", model, first_k=1, last_k=1, rest_every=3)
+    nblocks = len(pol.blocks)
+    for ev in range(7):
+        sel = pol.select(PolicyContext(ev, 0))
+        assert pol.blocks[0] in sel and pol.blocks[-1] in sel
+        if ev % 3:
+            assert len([u for u in sel if u.startswith("block")]) == 2
+    # over 2 rest cycles, all blocks get covered
+    union = set()
+    for ev in range(7):
+        union |= set(pol.select(PolicyContext(ev, 0)))
+    assert union == set(pol.all_units())
+
+
+def test_interval_policy_stripes(setup):
+    model, _, _ = setup
+    pol = _mk_policy("interval", model, stride=4)
+    union = set()
+    for ev in range(4):
+        union |= {u for u in pol.select(PolicyContext(ev, 0))
+                  if u.startswith("block")}
+    assert union == set(pol.blocks)
+
+
+def test_topk_delta_uses_scores(setup):
+    model, _, _ = setup
+    pol = _mk_policy("topk_delta", model, frac=0.5)
+    scores = {b: float(i) for i, b in enumerate(pol.blocks)}
+    sel = pol.select(PolicyContext(3, 0, drift_scores=scores))
+    chosen = [u for u in sel if u.startswith("block")]
+    assert chosen == sorted(pol.blocks, key=lambda b: -scores[b])[:2]
+
+
+# --------------------------------------------------------------------- delta
+def test_delta_tracker_detects_drift(setup):
+    model, state, registry = setup
+    tracker = DeltaTracker(registry)
+    tracker.reset(state["params"])
+    scores0 = tracker.scores(state["params"])
+    assert all(v == 0 for v in scores0.values())
+    # perturb one block only
+    changed = registry.insert_unit(
+        state["params"], "block_002",
+        jax.tree.map(lambda x: np.asarray(x) * 1.5,
+                     registry.extract_unit(state["params"], "block_002")))
+    scores = tracker.scores(changed)
+    top = max(scores, key=scores.get)
+    assert top == "block_002"
+    assert scores["block_000"] < 1e-6
+
+
+# ------------------------------------------------------------------- yamlish
+def test_yamlish_roundtrip_recipe():
+    text = """
+# a recipe
+base: /ckpt/a@1000
+output: /out/dir
+optimizer: true
+select:
+  - units: block_000..block_003
+    from: /ckpt/b@900
+  - units: [embed, lm_head]
+    from: /ckpt/b@900
+"""
+    d = yamlish.loads(text)
+    assert d["base"] == "/ckpt/a@1000"
+    assert d["optimizer"] is True
+    assert d["select"][0]["units"] == "block_000..block_003"
+    assert d["select"][1]["units"] == ["embed", "lm_head"]
+    out = yamlish.dumps(d)
+    d2 = yamlish.loads(out)
+    assert d2 == d
+
+
+def test_yamlish_scalars():
+    d = yamlish.loads("a: 3\nb: 3.5\nc: null\nd: 'x y'\ne: false")
+    assert d == {"a": 3, "b": 3.5, "c": None, "d": "x y", "e": False}
+
+
+# ------------------------------------------------------------ explicit merge
+def test_recipe_range_expansion(setup):
+    model, _, registry = setup
+    rule = SelectRule(units=["block_000..block_002", "embed"],
+                      source=CheckpointRef("/x", 1))
+    names = rule.expand(registry.unit_names())
+    assert names == ["block_000", "block_001", "block_002", "embed"]
+    with pytest.raises(KeyError):
+        SelectRule(units=["nope"], source=CheckpointRef("/x", 1)).expand(
+            registry.unit_names())
+
+
+def test_explicit_merge_and_resume_equivalence(tmp_path, setup):
+    """Frankenstein via recipe == manual unit mixing (weights AND opt)."""
+    model, state, registry = setup
+    pol = make_policy("full", model.layer_units())
+    mgr = CheckpointManager(tmp_path / "ck", registry, pol, async_save=False)
+    mgr.save(state, step=100)
+    state2 = jax.tree.map(lambda x: x * 1.5 if x.dtype != jnp.int32 else x,
+                          state)
+    mgr.save(state2, step=200)
+
+    recipe = Recipe(
+        base=CheckpointRef(tmp_path / "ck", 200),
+        output=tmp_path / "merged",
+        select=[SelectRule(units=["block_001", "embed"],
+                           source=CheckpointRef(tmp_path / "ck", 100))])
+    stats = merge(recipe, workers=2)
+    assert stats["units"] == len(registry.unit_names())
+
+    mgr2 = CheckpointManager(tmp_path / "merged", registry, pol,
+                             async_save=False)
+    got = mgr2.restore(steps_lib.state_specs(model))
+    # block_001 + embed come from state (step 100), rest from state2
+    for unit, src in [("block_001", state), ("embed", state),
+                      ("block_000", state2), ("final_norm", state2)]:
+        exp_w = registry.extract_unit(src["params"], unit)
+        got_w = registry.extract_unit(got["params"], unit)
+        for a, b in zip(jax.tree.leaves(exp_w), jax.tree.leaves(got_w)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        exp_o = registry.extract_opt_unit(src["opt"], unit)
+        got_o = registry.extract_opt_unit(got["opt"], unit)
+        for a, b in zip(jax.tree.leaves(exp_o), jax.tree.leaves(got_o)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    mgr.close()
+    mgr2.close()
+
+
+def test_merge_weights_only_mode(tmp_path, setup):
+    model, state, registry = setup
+    pol = make_policy("full", model.layer_units())
+    mgr = CheckpointManager(tmp_path / "ck", registry, pol, async_save=False)
+    mgr.save(state, step=10)
+    recipe = Recipe(base=CheckpointRef(tmp_path / "ck", 10),
+                    output=tmp_path / "wonly", select=[], optimizer=False)
+    merge(recipe, workers=1)
+    files = list((tmp_path / "wonly" / "steps").glob("*/*.chunk"))
+    assert files and all("opt" not in f.name for f in files)
+    mgr.close()

@@ -1,0 +1,107 @@
+"""Property-style invariants: policy coverage, yamlish roundtrips, memory
+model sanity, int8 end-to-end resume quality."""
+import numpy as np
+import pytest
+
+from proptest import cases
+
+from repro.configs import SHAPES, get_config
+from repro.core import make_policy
+from repro.core.policies import PolicyContext
+from repro.core import yamlish
+from repro.models import build_model
+
+
+# ----------------------------------------------------- policy coverage
+@pytest.mark.parametrize("policy,kw,horizon", [
+    ("parity", {}, 2),
+    ("interval", {"stride": 3}, 3),
+    ("filtered", {"first_k": 1, "last_k": 1, "rest_every": 2}, 4),
+])
+def test_any_policy_covers_all_units_within_horizon(policy, kw, horizon):
+    """Invariant: within `horizon` consecutive events every unit is saved at
+    least once — the manifest chain can never reference unboundedly stale
+    chunks."""
+    model = build_model(get_config("yi-9b", reduced=True))
+    pol = make_policy(policy, model.layer_units(), **kw)
+    for start in range(5):
+        union = set()
+        for ev in range(start, start + horizon):
+            union |= set(pol.select(PolicyContext(ev, ev * 100)))
+        assert union == set(pol.all_units()), (policy, start)
+
+
+def test_policy_selection_is_deterministic():
+    model = build_model(get_config("llama3.2-3b", reduced=True))
+    for name in ("full", "parity", "filtered", "interval"):
+        pol = make_policy(name, model.layer_units())
+        a = [pol.select(PolicyContext(e, e)) for e in range(6)]
+        b = [pol.select(PolicyContext(e, e)) for e in range(6)]
+        assert a == b
+
+
+# ------------------------------------------------------------- yamlish
+def _rand_value(rs, depth=0):
+    kind = rs.randint(0, 6 if depth < 2 else 4)
+    if kind == 0:
+        return int(rs.randint(-100, 100))
+    if kind == 1:
+        return bool(rs.randint(2))
+    if kind == 2:
+        return None
+    if kind == 3:
+        return "v" + str(rs.randint(1000))
+    if kind == 4:
+        return {f"k{i}": _rand_value(rs, depth + 1)
+                for i in range(rs.randint(1, 4))}
+    return [_rand_value(rs, depth + 1) for _ in range(rs.randint(1, 4))]
+
+
+def test_yamlish_roundtrip_property():
+    for doc in cases(10, lambda rs: {f"k{i}": _rand_value(rs)
+                                     for i in range(rs.randint(1, 5))}):
+        out = yamlish.loads(yamlish.dumps(doc))
+        assert out == doc, (doc, out)
+
+
+# ------------------------------------------------------- memory model
+def test_hbm_model_scales_sanely():
+    from repro.roofline.memory_model import estimate_hbm_bytes
+    m_small = build_model(get_config("llama3.2-3b"))
+    m_big = build_model(get_config("yi-9b"))
+    tr = SHAPES["train_4k"]
+    a = estimate_hbm_bytes(m_small, tr)["total"]
+    b = estimate_hbm_bytes(m_big, tr)["total"]
+    assert b > a  # bigger model, more traffic
+    de = estimate_hbm_bytes(m_small, SHAPES["decode_32k"])
+    assert de["weights"] > 0 and de["kv_cache"] > 0
+    # decode traffic per step far below train traffic per step
+    assert de["total"] < a / 10
+
+
+# --------------------------------------------- int8 checkpoint resume
+def test_int8_checkpoint_resume_trains_on(tmp_path):
+    """Beyond-paper compression composes with selectivity: resuming from a
+    lossy int8 checkpoint still trains (loss within a band of the lossless
+    resume)."""
+    from repro.launch.train import SimulatedFailure, train
+
+    base = dict(arch="llama3.2-3b", total_steps=60, batch=4, seq_len=32,
+                ckpt_interval=20, seed=7, lr=2e-3)
+    try:
+        train(ckpt_dir=str(tmp_path / "z"), policy_name="parity",
+              codec="zstd", fail_at=50, **base)
+    except SimulatedFailure:
+        pass
+    r_z = train(ckpt_dir=str(tmp_path / "z"), policy_name="parity",
+                codec="zstd", resume=True, **base)
+    try:
+        train(ckpt_dir=str(tmp_path / "q"), policy_name="parity",
+              codec="int8", fail_at=50, **base)
+    except SimulatedFailure:
+        pass
+    r_q = train(ckpt_dir=str(tmp_path / "q"), policy_name="parity",
+                codec="int8", resume=True, **base)
+    assert abs(r_q["final_loss"] - r_z["final_loss"]) < 0.5
+    # and the int8 checkpoint is materially smaller
+    assert r_q["ckpt_bytes"] < 0.55 * r_z["ckpt_bytes"]

@@ -1,0 +1,134 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import cases
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.fused_adamw import adamw_ref, fused_adamw
+from repro.kernels.quantize import dequantize, quantize, quantize_ref
+from repro.kernels.ssd_scan import ssd_ref, ssd_scan
+
+
+# ---------------------------------------------------------------- flash attn
+@pytest.mark.parametrize("b,s,h,g,d,blk,dtype", [
+    (1, 128, 4, 4, 64, 64, jnp.bfloat16),
+    (2, 128, 4, 2, 64, 32, jnp.bfloat16),
+    (1, 256, 8, 1, 128, 128, jnp.bfloat16),
+    (2, 64, 2, 2, 32, 64, jnp.float32),
+])
+def test_flash_attention_causal(b, s, h, g, d, blk, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(s + h), 3)
+    q = jax.random.normal(k1, (b, s, h, d), dtype)
+    k = jax.random.normal(k2, (b, s, g, d), dtype)
+    v = jax.random.normal(k3, (b, s, g, d), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=blk, block_k=blk,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(out.astype(np.float32),
+                               ref.astype(np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_non_causal_cross_len():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (2, 64, 4, 64), jnp.bfloat16)
+    k = jax.random.normal(k2, (2, 192, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(k3, (2, 192, 2, 64), jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out.astype(np.float32),
+                               ref.astype(np.float32), atol=2e-2, rtol=2e-2)
+
+
+def test_flash_attention_property_sweep():
+    def gen(rs):
+        d = int(rs.choice([32, 64]))
+        g = int(rs.choice([1, 2, 4]))
+        rep = int(rs.choice([1, 2]))
+        s = int(rs.choice([64, 128]))
+        return (int(rs.randint(1, 3)), s, g * rep, g, d)
+
+    for b, s, h, g, d in cases(5, gen):
+        ks = jax.random.split(jax.random.PRNGKey(b * s + h), 3)
+        q = jax.random.normal(ks[0], (b, s, h, d), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (b, s, g, d), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (b, s, g, d), jnp.bfloat16)
+        out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                              interpret=True)
+        ref = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out.astype(np.float32),
+                                   ref.astype(np.float32), atol=3e-2,
+                                   rtol=3e-2)
+
+
+# ---------------------------------------------------------------------- ssd
+@pytest.mark.parametrize("b,s,h,p,n,q", [
+    (2, 64, 4, 16, 16, 16),
+    (1, 128, 2, 32, 64, 32),
+    (1, 96, 3, 8, 8, 32),
+])
+def test_ssd_scan_matches_recurrence(b, s, h, p, n, q):
+    ks = jax.random.split(jax.random.PRNGKey(s + p), 4)
+    xs = jax.random.normal(ks[0], (b, s, h, p), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a_log = jnp.log(jnp.linspace(1.0, 4.0, h))
+    bs = jax.random.normal(ks[2], (b, s, h, n)) * 0.5
+    cs = jax.random.normal(ks[3], (b, s, h, n)) * 0.5
+    y, fin = ssd_scan(xs, dt, a_log, bs, cs, chunk=q, interpret=True)
+    yr, fr = ssd_ref(xs, dt, a_log, bs, cs)
+    np.testing.assert_allclose(y, yr, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(fin, fr, atol=1e-4, rtol=1e-4)
+
+
+def test_model_ssd_chunked_matches_ref():
+    from repro.models.ssm import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    b, s, h, p, n = 2, 80, 2, 16, 24  # deliberately non-chunk-multiple (80)
+    xs = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a_log = jnp.log(jnp.linspace(1.0, 3.0, h))
+    bs = jax.random.normal(ks[2], (b, s, h, n)) * 0.5
+    cs = jax.random.normal(ks[3], (b, s, h, n)) * 0.5
+    y, fin = ssd_chunked(xs, dt, a_log, bs, cs, 32)
+    yr, fr = ssd_ref(xs, dt, a_log, bs, cs)
+    np.testing.assert_allclose(y, yr, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(fin, fr, atol=2e-4, rtol=2e-4)
+
+
+# ----------------------------------------------------------------- quantize
+def test_quantize_matches_numpy_codec():
+    def gen(rs):
+        return rs.standard_normal(int(rs.randint(10, 4000))).astype(np.float32)
+
+    for arr in cases(6, gen):
+        q, s = quantize(jnp.asarray(arr), interpret=True)
+        qr, sr = quantize_ref(arr)
+        assert np.array_equal(np.asarray(q).reshape(-1), qr)
+        np.testing.assert_allclose(np.asarray(s).reshape(-1), sr, rtol=1e-6)
+        x2 = dequantize(q, s, shape=arr.shape, interpret=True)
+        amax = np.abs(arr).max() if arr.size else 1.0
+        assert float(np.max(np.abs(np.asarray(x2) - arr))) <= amax / 127 + 1e-6
+
+
+# -------------------------------------------------------------- fused adamw
+@pytest.mark.parametrize("shape,step,wd", [((64, 33), 0, 0.0),
+                                           ((257,), 5, 0.1),
+                                           ((3, 5, 7), 100, 0.01)])
+def test_fused_adamw_matches_ref(shape, step, wd):
+    ks = jax.random.split(jax.random.PRNGKey(step + 1), 4)
+    g = jax.random.normal(ks[0], shape, jnp.bfloat16)
+    ma = jax.random.normal(ks[1], shape, jnp.float32)
+    m = jax.random.normal(ks[2], shape, jnp.float32) * 0.1
+    v = jnp.abs(jax.random.normal(ks[3], shape, jnp.float32)) * 0.01
+    kw = dict(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, wd=wd, step=step)
+    p1, ma1, m1, v1 = fused_adamw(g, ma, m, v, interpret=True, **kw)
+    p2, ma2, m2, v2 = adamw_ref(g, ma, m, v, **kw)
+    np.testing.assert_allclose(ma1, ma2, atol=1e-6, rtol=1e-5)
+    np.testing.assert_allclose(m1, m2, atol=1e-6, rtol=1e-5)
+    np.testing.assert_allclose(v1, v2, atol=1e-7, rtol=1e-5)
+    assert p1.dtype == jnp.bfloat16

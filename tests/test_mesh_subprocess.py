@@ -1,0 +1,223 @@
+"""Multi-device behaviours, each in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (jax pins the device
+count at first init, so these cannot run in the main test process):
+
+- sharded train step == single-device train step (numerics),
+- elastic restore: save on 1 device, restore sharded on 2x4 and 4x2,
+- pipeline parallelism == sequential stage application,
+- production mesh construction (16x16 and 2x16x16 on 512 fake devices).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 420) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_sharded_train_step_matches_single_device():
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.configs.base import TrainConfig
+        from repro.launch import steps as steps_lib
+        from repro.launch.mesh import make_debug_mesh
+        from repro.models import build_model
+        from repro.parallel import sharding as shd
+
+        cfg = get_config("llama3.2-3b", reduced=True)
+        model = build_model(cfg)
+        tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=2, total_steps=10)
+        state = steps_lib.init_state(model, jax.random.key(0))
+        batch = {"tokens": np.random.RandomState(0).randint(
+            0, cfg.vocab_size, (8, 32)).astype(np.int32)}
+
+        step1 = jax.jit(steps_lib.make_train_step(model, tcfg))
+        _, m1 = step1(jax.tree.map(lambda x: x, state), batch)
+
+        mesh = make_debug_mesh(2, 4)
+        with mesh, shd.use_mesh(mesh):
+            stepN = steps_lib.jit_train_step(model, tcfg, mesh)
+            sh = steps_lib.state_shardings(model, mesh)
+            state_sharded = jax.tree.map(jax.device_put, state, sh)
+            _, mN = stepN(state_sharded, batch)
+        d = abs(float(m1["loss"]) - float(mN["loss"]))
+        assert d < 5e-3, (float(m1["loss"]), float(mN["loss"]))
+        print("OK", d)
+    """)
+
+
+def test_elastic_restore_onto_other_meshes():
+    run_py("""
+        import tempfile, jax, jax.numpy as jnp, numpy as np
+        from pathlib import Path
+        from repro.configs import get_config
+        from repro.core import LayerRegistry, make_policy
+        from repro.checkpoint.saver import CheckpointManager
+        from repro.launch import steps as steps_lib
+        from repro.launch.mesh import make_debug_mesh
+        from repro.launch.elastic import restore_on_mesh
+        from repro.models import build_model
+
+        cfg = get_config("mamba2-370m", reduced=True)
+        model = build_model(cfg)
+        state = steps_lib.init_state(model, jax.random.key(0))
+        tmp = Path(tempfile.mkdtemp())
+        reg = LayerRegistry(model)
+        mgr = CheckpointManager(tmp, reg,
+                                make_policy("full", model.layer_units()),
+                                async_save=False)
+        mgr.save(state, step=7)
+        mgr.close()
+        for shape in [(2, 4), (4, 2), (1, 8)]:
+            mesh = make_debug_mesh(*shape)
+            restored = restore_on_mesh(tmp, model, mesh)
+            for key in ("params", "opt"):
+                for a, b in zip(jax.tree.leaves(state[key]),
+                                jax.tree.leaves(restored[key])):
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+            assert int(restored["step"]) == 7
+            leaf = jax.tree.leaves(restored["params"])[0]
+            assert len(leaf.sharding.device_set) >= 1
+        print("OK")
+    """)
+
+
+def test_dp_layout_train_step_matches_single_device():
+    """The beyond-paper `dp` layout must be numerically equivalent."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.configs.base import TrainConfig
+        from repro.launch import steps as steps_lib
+        from repro.launch.mesh import make_debug_mesh
+        from repro.models import build_model
+        from repro.parallel import sharding as shd
+
+        cfg = get_config("mamba2-370m", reduced=True)
+        model = build_model(cfg)
+        tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=2, total_steps=10)
+        state = steps_lib.init_state(model, jax.random.key(0))
+        batch = {"tokens": np.random.RandomState(0).randint(
+            0, cfg.vocab_size, (8, 32)).astype(np.int32)}
+        step1 = jax.jit(steps_lib.make_train_step(model, tcfg))
+        _, m1 = step1(jax.tree.map(lambda x: x, state), batch)
+        mesh = make_debug_mesh(2, 4)
+        with mesh, shd.use_mesh(mesh, layout="dp"):
+            stepN = steps_lib.jit_train_step(model, tcfg, mesh, layout="dp")
+            sh = steps_lib.state_shardings(model, mesh, layout="dp")
+            state_sharded = jax.tree.map(jax.device_put, state, sh)
+            _, mN = stepN(state_sharded, batch)
+        d = abs(float(m1["loss"]) - float(mN["loss"]))
+        assert d < 5e-3, (float(m1["loss"]), float(mN["loss"]))
+        print("OK", d)
+    """)
+
+
+def test_decode_row_parallel_matches_unsharded():
+    """Decode-time row-parallel projections (arctic §Perf fix) preserve
+    numerics under a real sharded mesh."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.launch import steps as steps_lib
+        from repro.launch.mesh import make_debug_mesh
+        from repro.models import build_model
+        from repro.parallel import sharding as shd
+        from repro.configs.shapes import ShapeConfig
+
+        cfg = get_config("deepseek-v2-lite-16b", reduced=True)
+        model = build_model(cfg)
+        params = jax.tree.map(lambda x: x.astype(jnp.bfloat16),
+                              model.init(jax.random.key(0)))
+        B, S = 8, 32
+        rng = np.random.RandomState(1)
+        toks = rng.randint(0, cfg.vocab_size, (B, S)).astype(np.int32)
+        _, cache = model.prefill(params, {"tokens": toks})
+        def grow(t, n):
+            def f(x):
+                return x
+            return t
+        # pad caches to S+1
+        def pad(node, key=""):
+            if isinstance(node, dict):
+                return {k: pad(v, k) for k, v in node.items()}
+            if key in ("k", "v"):
+                p = [(0, 0)] * node.ndim; p[node.ndim - 3] = (0, 1)
+                return jnp.pad(node, p)
+            if key in ("latent", "rope"):
+                p = [(0, 0)] * node.ndim; p[node.ndim - 2] = (0, 1)
+                return jnp.pad(node, p)
+            return node
+        cache = pad(cache)
+        batch = {"tokens": toks[:, :1], "pos": jnp.int32(S), "cache": cache}
+        l1, _ = model.decode_step(params, cache,
+                                  {"tokens": toks[:, :1], "pos": jnp.int32(S)})
+        mesh = make_debug_mesh(4, 2)
+        shape = ShapeConfig(name="d", kind="decode", seq_len=S + 1,
+                            global_batch=B)
+        with mesh, shd.use_mesh(mesh):
+            fn = steps_lib.jit_serve_step(model, shape, mesh)
+            lN, _ = fn(params, dict(batch))
+        d = float(jnp.max(jnp.abs(l1.astype(jnp.float32)
+                                  - lN.astype(jnp.float32))))
+        assert d < 0.05, d
+        print("OK", d)
+    """)
+
+
+def test_pipeline_matches_sequential():
+    run_py("""
+        import jax, jax.numpy as jnp
+        from repro.launch.mesh import _mk
+        from repro.parallel.pipeline import pipeline_apply
+        mesh = _mk((4,), ("stage",))
+        S, M, MB, D = 4, 6, 2, 16
+        ws = jax.random.normal(jax.random.PRNGKey(0), (S, D, D)) * 0.3
+        def stage_fn(w, x): return jnp.tanh(x @ w)
+        x = jax.random.normal(jax.random.PRNGKey(1), (M, MB, D))
+        out = pipeline_apply(stage_fn, ws, x, mesh)
+        ref = x
+        for i in range(S): ref = jnp.tanh(ref @ ws[i])
+        err = float(jnp.max(jnp.abs(out - ref)))
+        assert err < 1e-6, err
+        print("OK", err)
+    """)
+
+
+def test_production_meshes_construct():
+    run_py("""
+        from repro.launch.mesh import make_production_mesh
+        m1 = make_production_mesh()
+        assert dict(m1.shape) == {"data": 16, "model": 16}
+        m2 = make_production_mesh(multi_pod=True)
+        assert dict(m2.shape) == {"pod": 2, "data": 16, "model": 16}
+        print("OK")
+    """, devices=512)
+
+
+@pytest.mark.slow
+def test_dryrun_cell_in_subprocess(tmp_path):
+    """One real dry-run cell end-to-end through the CLI."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "llama3.2-3b",
+         "--shape", "decode_32k", "--out", str(tmp_path), "--force"],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK" in out.stdout

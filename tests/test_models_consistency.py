@@ -1,0 +1,87 @@
+"""Decode-vs-prefill consistency: for every decoder-bearing arch, one
+decode step against a prefilled cache must match the logits of prefilling
+the extended prompt (bf16 tolerance)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+
+T = 32
+B = 2
+
+
+def _grow(cache, target):
+    """Pad all cache sequence dims out to ``target`` (ssm caches untouched)."""
+
+    def pad_seq(x, axis):
+        if x.shape[axis] >= target:
+            return x
+        pads = [(0, 0)] * x.ndim
+        pads[axis] = (0, target - x.shape[axis])
+        return jnp.pad(x, pads)
+
+    def walk(node, key=""):
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        if isinstance(node, tuple):
+            return tuple(pad_seq(t, t.ndim - 3) for t in node)
+        if key in ("k", "v", "cross_k", "cross_v"):
+            return pad_seq(node, node.ndim - 3)
+        if key in ("latent", "rope"):
+            return pad_seq(node, node.ndim - 2)
+        return node
+
+    return walk(cache)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_prefill(arch):
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.RandomState(1)
+    toks = rng.randint(0, cfg.vocab_size, (B, T + 1)).astype(np.int32)
+    extra = {}
+    if cfg.family == "vlm":
+        extra["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.vlm.num_patches,
+                                 cfg.vlm.patch_embed_dim)) * 0.1, jnp.bfloat16)
+    if cfg.family == "encdec":
+        extra["frames"] = jnp.asarray(
+            rng.standard_normal((B, T, cfg.d_model)) * 0.1, jnp.bfloat16)
+
+    lp, cache = model.prefill(params, {"tokens": toks[:, :T], **extra})
+    prefix = cfg.vlm.num_patches if cfg.family == "vlm" else 0
+    cache = _grow(cache, prefix + T + 1)
+    pos = jnp.int32(prefix + T)
+    ld, _ = model.decode_step(params, cache,
+                              {"tokens": toks[:, T:T + 1], "pos": pos})
+    lf, _ = model.prefill(params, {"tokens": toks[:, :T + 1], **extra})
+    err = float(jnp.max(jnp.abs(ld.astype(jnp.float32)
+                                - lf.astype(jnp.float32))))
+    assert err < 0.06, f"{arch}: decode/prefill mismatch {err}"
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "mamba2-370m"])
+def test_multi_step_decode_matches_prefill(arch):
+    """Five decode steps chained == prefill of the 5-longer prompt."""
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.RandomState(2)
+    n_extra = 5
+    toks = rng.randint(0, cfg.vocab_size, (B, T + n_extra)).astype(np.int32)
+    _, cache = model.prefill(params, {"tokens": toks[:, :T]})
+    cache = _grow(cache, T + n_extra)
+    logits = None
+    for i in range(n_extra):
+        logits, cache = model.decode_step(
+            params, cache, {"tokens": toks[:, T + i:T + i + 1],
+                            "pos": jnp.int32(T + i)})
+    lf, _ = model.prefill(params, {"tokens": toks})
+    err = float(jnp.max(jnp.abs(logits.astype(jnp.float32)
+                                - lf.astype(jnp.float32))))
+    assert err < 0.1, f"{arch}: multi-step decode drift {err}"

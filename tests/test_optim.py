@@ -1,0 +1,96 @@
+"""Optimizer unit tests: AdamW math vs a numpy reference, clipping,
+schedules, and the 7x checkpoint-byte anatomy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from proptest import cases, rand_shape
+
+from repro.configs import get_config
+from repro.launch import steps as steps_lib
+from repro.models import build_model
+from repro.optim import (
+    AdamWConfig,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    init_opt_state,
+    warmup_cosine,
+)
+
+
+def _np_adamw(g, ma, m, v, lr, cfg, t, decay):
+    m2 = cfg.b1 * m + (1 - cfg.b1) * g
+    v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+    mh = m2 / (1 - cfg.b1 ** (t + 1))
+    vh = v2 / (1 - cfg.b2 ** (t + 1))
+    wd = cfg.weight_decay if decay else 0.0
+    ma2 = ma - lr * (mh / (np.sqrt(vh) + cfg.eps) + wd * ma)
+    return ma2, m2, v2
+
+
+def test_adamw_matches_numpy():
+    cfg = AdamWConfig()
+
+    def gen(rs):
+        shape = rand_shape(rs)
+        return (rs.standard_normal(shape).astype(np.float32),
+                rs.standard_normal(shape).astype(np.float32),
+                int(rs.randint(0, 50)), bool(rs.randint(2)))
+
+    for g_np, ma_np, t, decay in cases(6, gen):
+        grads = {"w": jnp.asarray(g_np)}
+        opt = {"master": {"w": jnp.asarray(ma_np)},
+               "m": {"w": jnp.zeros_like(grads["w"])},
+               "v": {"w": jnp.zeros_like(grads["w"])}}
+        mask = {"w": decay}
+        p, new_opt = adamw_update(grads, opt, lr=jnp.float32(1e-3),
+                                  step=jnp.int32(t), cfg=cfg,
+                                  decay_mask=mask)
+        ma2, m2, v2 = _np_adamw(g_np, ma_np, np.zeros_like(g_np),
+                                np.zeros_like(g_np), 1e-3, cfg, t, decay)
+        np.testing.assert_allclose(new_opt["master"]["w"], ma2, rtol=2e-6,
+                                   atol=2e-6)
+        np.testing.assert_allclose(new_opt["m"]["w"], m2, rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(new_opt["v"]["w"], v2, rtol=1e-6, atol=1e-8)
+        assert p["w"].dtype == jnp.bfloat16
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - np.sqrt(250.0)) < 1e-4
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    # below threshold -> unchanged
+    clipped2, _ = clip_by_global_norm(g, 100.0)
+    np.testing.assert_allclose(clipped2["a"], g["a"])
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(warmup_cosine(s, peak_lr=1.0, warmup_steps=10,
+                               total_steps=100)) for s in range(0, 101, 10)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 1.0) < 1e-6          # end of warmup
+    assert all(lrs[i] >= lrs[i + 1] - 1e-9 for i in range(1, len(lrs) - 1))
+    assert lrs[-1] >= 0.1 - 1e-6             # final_frac floor
+
+
+def test_checkpoint_anatomy_is_7x_model_bytes():
+    """Paper §2.2: full training state ~= 7x the bf16 model file."""
+    model = build_model(get_config("llama3.2-3b", reduced=True))
+    state = steps_lib.init_state(model, jax.random.key(0))
+    p_bytes = sum(np.asarray(x).nbytes
+                  for x in jax.tree.leaves(state["params"]))
+    o_bytes = sum(np.asarray(x).nbytes
+                  for x in jax.tree.leaves(state["opt"]))
+    ratio = (p_bytes + o_bytes) / p_bytes
+    assert abs(ratio - 7.0) < 0.01, ratio
+
+
+def test_opt_state_fp32_master_matches_params():
+    model = build_model(get_config("mamba2-370m", reduced=True))
+    master = model.init(jax.random.key(1))
+    opt = init_opt_state(master)
+    for a, b in zip(jax.tree.leaves(master), jax.tree.leaves(opt["master"])):
+        assert b.dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b))
