@@ -31,12 +31,16 @@ def corruption_demo() -> None:
                             make_policy("full", model.layer_units()),
                             async_save=False)
     mgr.save(state, step=10)
-    mgr.save(state, step=20)
-    victim = root / "steps" / "step-00000020" / "block_000.weights.chunk"
+    # drift before the second save: identical states would dedup to the
+    # SAME object, leaving no older chunk to fall back on
+    state2 = jax.tree.map(
+        lambda x: x * 1.5 if x.dtype != np.int32 else x, state)
+    m2 = mgr.save(state2, step=20)
+    victim = root / m2.entries["block_000"]["weights"].relpath
     raw = bytearray(victim.read_bytes())
     raw[len(raw) // 2] ^= 0xFF
     victim.write_bytes(bytes(raw))
-    print("  corrupted", victim.name, "at step 20")
+    print("  corrupted", victim.name, "(block_000 weights at step 20)")
     restored = mgr.restore(steps_lib.state_specs(model))
     print(f"  restore survived; resumed step = {int(restored['step'])} "
           "(block_000 transparently fell back to step 10)")

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the command CI and ROADMAP.md treat as the gate.
+#   scripts/check.sh            # full suite
+#   scripts/check.sh tests/test_checkpoint.py   # pass-through args
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -22,6 +22,28 @@ class AsyncWriteError(RuntimeError):
     pass
 
 
+class PendingResult:
+    """Return value of ``submit``: readable after ``drain()``/``wait()``.
+
+    The content-addressed store only knows a chunk's digest once the writer
+    thread has hashed the payload, so the saver collects these and resolves
+    them into manifest entries after the drain barrier.
+    """
+    __slots__ = ("_value", "_error", "_done")
+
+    def __init__(self) -> None:
+        self._value = None
+        self._error: Optional[BaseException] = None
+        self._done = False
+
+    def result(self):
+        if not self._done:
+            raise AsyncWriteError("result not ready; call drain() first")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+
 class AsyncWriter:
     def __init__(self, num_threads: int = 2, max_queue: int = 64):
         self._q: "queue.Queue" = queue.Queue(maxsize=max_queue)
@@ -42,19 +64,24 @@ class AsyncWriter:
             try:
                 if item is _SENTINEL:
                     return
-                fn, args, kwargs = item
+                fn, args, kwargs, pending = item
                 try:
-                    fn(*args, **kwargs)
+                    pending._value = fn(*args, **kwargs)
                 except BaseException as e:  # noqa: BLE001
+                    pending._error = e
                     with self._err_lock:
                         self._errors.append(e)
+                finally:
+                    pending._done = True
             finally:
                 self._q.task_done()
 
-    def submit(self, fn: Callable, *args, **kwargs) -> None:
+    def submit(self, fn: Callable, *args, **kwargs) -> PendingResult:
         if not self._open:
             raise AsyncWriteError("writer is closed")
-        self._q.put((fn, args, kwargs))
+        pending = PendingResult()
+        self._q.put((fn, args, kwargs, pending))
+        return pending
 
     def drain(self) -> None:
         """Block until all queued writes finish; raise collected errors."""

@@ -1,27 +1,74 @@
-"""On-disk layout: one chunk file per (step, layer unit, kind).
+"""Content-addressed chunk store with cross-step dedup and delta encoding.
+
+On-disk layout:
 
     root/
-      steps/step-00000100/
-        block_003.weights.chunk
-        block_003.opt.chunk
-        _meta.json              # step-level metadata (rng, data state, ...)
+      objects/ab/abcdef...123.chunk   # one file per distinct content digest
       manifests/manifest-00000100.json
-      LATEST                    # atomic pointer to the newest manifest
+      LATEST                          # atomic pointer to the newest manifest
+
+Every chunk is keyed by the blake2b digest of its *canonical* payload (the
+codec="none" serialization of the unit's tensors, metadata excluded, so the
+same tensors always hash the same regardless of save step or codec).  A
+re-saved-but-unchanged unit therefore costs a host snapshot and a hash — no
+write, no extra disk (GoCkpt/DataStates-style inter-step dedup composed
+with the paper's layer selectivity).
+
+An object file is a small msgpack envelope holding either:
+
+- ``full``: the chunk blob encoded with the store codec, or
+- ``delta``: a sparse XOR diff (``compression.delta_encode``) of this
+  chunk's canonical payload against the canonical payload of a *full* base
+  object, recorded by digest.  Deltas always point at a full object, so
+  reconstruction is exactly one base read + one patch; the store rebases
+  (writes a full object again) when the diff stops being materially
+  smaller than a full write OR after ``rebase_every`` consecutive deltas,
+  bounding how many checkpoints one base object can underpin.
+
+Lifetimes are refcounted: each committed manifest holds one reference per
+entry digest (plus one per delta base), and ``gc_objects`` deletes objects
+whose count has dropped to zero — replacing the old step-directory
+retention deletes.  Refcounts are derived in memory from the committed
+manifests (see ``CheckpointManager``), so a crash can never corrupt them;
+orphans from an interrupted save are swept by the next GC.
 
 Chunk writes are atomic (tmp + rename + fsync) so a crash mid-save never
 corrupts a previous checkpoint — the manifest is committed last and only
-references fully-written chunks.
+references fully-written objects.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import os
+import threading
+from collections import Counter
 from pathlib import Path
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Iterable, Iterator, Optional, Tuple
 
-from repro.checkpoint import serial
+import msgpack
+
+from repro.checkpoint import compression, serial
 
 PyTree = Any
+
+OBJECT_VERSION = 1
+DIGEST_BYTES = 20  # blake2b-160: plenty for collision-resistance here
+# A delta must beat a full write by at least this factor to be stored; the
+# margin auto-rebases drifted units (their diffs grow until a full wins).
+DELTA_RATIO = 0.9
+# Force a full rebase after this many consecutive deltas of one unit even
+# when each diff is tiny: every delta of a slowly-drifting unit pins the
+# SAME full base, so an unbounded run would make that one object file a
+# single point of failure for the unit across the whole retention window.
+REBASE_EVERY = 4
+# Reconstructed canonical payloads cached for delta encoding (save path
+# diffs against the previous full object without re-reading it every event).
+CANON_CACHE_BYTES = 64 << 20
+
+
+def content_digest(blob: bytes) -> str:
+    return hashlib.blake2b(blob, digest_size=DIGEST_BYTES).hexdigest()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,7 +77,10 @@ class ChunkRef:
     unit: str
     kind: str           # "weights" | "opt"
     relpath: str
-    nbytes: int
+    nbytes: int         # size of the object file on disk
+    digest: str = ""    # blake2b of the canonical payload (required to read)
+    stored: str = "full"            # "full" | "delta" (on-disk encoding)
+    delta_base: Optional[str] = None  # digest of the full base, if delta
 
     def to_json(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -41,7 +91,12 @@ class ChunkRef:
 
 
 def _atomic_write(path: Path, data: bytes, *, fsync: bool = True) -> None:
-    tmp = path.with_suffix(path.suffix + ".tmp")
+    # Unique tmp name: concurrent writers of the SAME destination (two
+    # async-writer threads persisting bitwise-identical units dedup to one
+    # digest) must not truncate each other's in-progress file; os.replace
+    # then publishes whichever complete file lands last.
+    tmp = path.with_suffix(
+        path.suffix + f".tmp-{os.getpid():x}-{threading.get_ident():x}")
     tmp.parent.mkdir(parents=True, exist_ok=True)
     with open(tmp, "wb") as f:
         f.write(data)
@@ -52,50 +107,369 @@ def _atomic_write(path: Path, data: bytes, *, fsync: bool = True) -> None:
 
 
 class ChunkStore:
-    def __init__(self, root: Path | str, *, codec: str = "zstd",
-                 fsync: bool = False):
+    def __init__(self, root: Path | str, *, codec: str = "auto",
+                 fsync: bool = False, delta: bool = True,
+                 delta_ratio: float = DELTA_RATIO,
+                 rebase_every: int = REBASE_EVERY):
         self.root = Path(root)
-        self.codec = codec
+        self.codec = compression.resolve_codec(codec)
         self.fsync = fsync
+        self.delta = delta
+        self.delta_ratio = delta_ratio
+        self.rebase_every = max(1, rebase_every)
+        self._lock = threading.Lock()
+        self._refcounts: Counter = Counter()
+        # digest -> {"stored", "base", "nbytes"} for objects we've touched
+        self._info: Dict[str, Dict[str, Any]] = {}
+        # (unit, kind) -> consecutive deltas written since the last full
+        self._delta_runs: Dict[Tuple[str, str], int] = {}
+        # digest -> Event for writes in flight: concurrent writer threads
+        # persisting bitwise-identical units dedup instead of racing
+        self._inflight: Dict[str, threading.Event] = {}
+        self._canon_cache: Dict[str, bytes] = {}
+        self._canon_cache_bytes = 0
+        self.stats: Dict[str, int] = {}
+        self.reset_stats()
 
     # ---- paths ----
-    def step_dir(self, step: int) -> Path:
-        return self.root / "steps" / f"step-{step:08d}"
+    def objects_dir(self) -> Path:
+        return self.root / "objects"
 
-    def chunk_path(self, step: int, unit: str, kind: str) -> Path:
-        return self.step_dir(step) / f"{unit}.{kind}.chunk"
+    def object_path(self, digest: str) -> Path:
+        return self.objects_dir() / digest[:2] / f"{digest}.chunk"
 
-    def relpath(self, step: int, unit: str, kind: str) -> str:
-        return str(self.chunk_path(step, unit, kind).relative_to(self.root))
+    def object_relpath(self, digest: str) -> str:
+        return str(self.object_path(digest).relative_to(self.root))
 
-    # ---- io ----
-    def write(self, step: int, unit: str, kind: str, tree: PyTree,
-              *, meta: Optional[Dict] = None, codec: Optional[str] = None
-              ) -> ChunkRef:
-        blob = serial.encode_chunk(
-            tree, meta=dict(meta or {}, step=step, unit=unit, kind=kind),
-            codec=codec or self.codec)
-        path = self.chunk_path(step, unit, kind)
-        _atomic_write(path, blob, fsync=self.fsync)
-        return ChunkRef(step=step, unit=unit, kind=kind,
-                        relpath=self.relpath(step, unit, kind),
-                        nbytes=len(blob))
-
-    def read(self, ref: ChunkRef, *, verify: bool = True
-             ) -> Tuple[PyTree, Dict]:
-        blob = (self.root / ref.relpath).read_bytes()
-        return serial.decode_chunk(blob, verify=verify)
+    def has(self, digest: str) -> bool:
+        return self.object_path(digest).is_file()
 
     def exists(self, ref: ChunkRef) -> bool:
         return (self.root / ref.relpath).is_file()
 
-    def delete_step(self, step: int) -> int:
-        """Remove a step directory; returns bytes freed."""
-        d = self.step_dir(step)
+    def iter_digests(self) -> Iterator[str]:
+        if self.objects_dir().is_dir():
+            for f in sorted(self.objects_dir().glob("*/*.chunk")):
+                yield f.stem
+
+    # ---- stats ----
+    def reset_stats(self) -> None:
+        with self._lock:
+            self.stats = {"written_bytes": 0, "logical_bytes": 0,
+                          "dedup_hits": 0, "delta_chunks": 0,
+                          "full_chunks": 0}
+
+    def _bump(self, **kw: int) -> None:
+        with self._lock:
+            for k, v in kw.items():
+                self.stats[k] += v
+
+    # ---- canonical-payload LRU cache (delta encoding hot path) ----
+    def _canon_cached(self, digest: str) -> Optional[bytes]:
+        with self._lock:
+            canon = self._canon_cache.pop(digest, None)
+            if canon is not None:
+                self._canon_cache[digest] = canon  # move to MRU position
+            return canon
+
+    def _canon_remember(self, digest: str, canon: bytes) -> None:
+        if len(canon) > CANON_CACHE_BYTES:
+            return
+        with self._lock:
+            if digest in self._canon_cache:
+                return
+            # evict least-recently-used (dicts iterate in insertion order;
+            # _canon_cached reinserts on hit, so the head is the LRU entry)
+            while (self._canon_cache_bytes + len(canon) > CANON_CACHE_BYTES
+                   and self._canon_cache):
+                lru = next(iter(self._canon_cache))
+                self._canon_cache_bytes -= len(self._canon_cache.pop(lru))
+            self._canon_cache[digest] = canon
+            self._canon_cache_bytes += len(canon)
+
+    # ---- object io ----
+    def _read_envelope(self, digest: str) -> Dict[str, Any]:
+        blob = self.object_path(digest).read_bytes()
+        # Any parse failure of a corrupt envelope must surface as
+        # ChunkCorruption so the restore fallback path catches it.
+        try:
+            env = msgpack.unpackb(blob, raw=False)
+        except Exception as e:  # noqa: BLE001 - msgpack raises many types
+            raise serial.ChunkCorruption(
+                f"unreadable object envelope for {digest}: {e!r}") from e
+        if not isinstance(env, dict) or env.get("v") != OBJECT_VERSION:
+            raise serial.ChunkCorruption(
+                f"bad object envelope/version for {digest}")
+        with self._lock:
+            self._info[digest] = {"stored": env.get("format"),
+                                  "base": env.get("base"),
+                                  "nbytes": len(blob)}
+        return env
+
+    def object_info(self, digest: str) -> Dict[str, Any]:
+        """{"stored": "full"|"delta", "base": digest|None, "nbytes": int}."""
+        with self._lock:
+            info = self._info.get(digest)
+        if info is None:
+            self._read_envelope(digest)
+            with self._lock:
+                info = self._info[digest]
+        return dict(info)
+
+    def _write_object(self, digest: str, env: Dict[str, Any]) -> int:
+        blob = msgpack.packb(env, use_bin_type=True)
+        _atomic_write(self.object_path(digest), blob, fsync=self.fsync)
+        with self._lock:
+            self._info[digest] = {"stored": env["format"],
+                                  "base": env.get("base"),
+                                  "nbytes": len(blob)}
+        return len(blob)
+
+    def read_canonical(self, digest: str, *, verify: bool = True) -> bytes:
+        """The codec='none' chunk blob for ``digest``, resolving deltas."""
+        cached = self._canon_cached(digest)
+        if cached is not None:
+            return cached
+        env = self._read_envelope(digest)
+        if env.get("format") == "full":
+            if env["codec"] == "none":
+                canon = env["payload"]
+            else:
+                # transcode: decode the stored blob, re-encode canonically
+                tree, meta = serial.decode_chunk(env["payload"], verify=verify)
+                canon = serial.encode_chunk(tree, meta=meta, codec="none")
+        elif env.get("format") == "delta":
+            base = self.read_canonical(env["base"], verify=verify)
+            canon = self._apply_delta(digest, env, base)
+        else:
+            raise serial.ChunkCorruption(
+                f"unknown object format {env.get('format')!r}")
+        if verify and content_digest(canon) != digest:
+            raise serial.ChunkCorruption(f"digest mismatch for {digest}")
+        self._canon_remember(digest, canon)
+        return canon
+
+    def _apply_delta(self, digest: str, env: Dict[str, Any],
+                     base: bytes) -> bytes:
+        """delta_decode with corruption surfaced as ChunkCorruption (a
+        mangled delta record can raise ValueError/zstd/numpy errors — the
+        restore fallback must be able to catch them)."""
+        try:
+            return compression.delta_decode(env["payload"], base)
+        except (serial.ChunkCorruption, compression.CodecUnavailable):
+            # CodecUnavailable is an environment problem with an actionable
+            # message (install zstandard), not data corruption — masking it
+            # as ChunkCorruption would send restore on a futile fallback
+            # crawl ending in a misleading RestoreError.
+            raise
+        except Exception as e:  # noqa: BLE001
+            raise serial.ChunkCorruption(
+                f"unreadable delta object {digest}: {e!r}") from e
+
+    def read_digest(self, digest: str, *, verify: bool = True
+                    ) -> Tuple[PyTree, Dict]:
+        env = self._read_envelope(digest)
+        if env.get("format") == "full":
+            return serial.decode_chunk(env["payload"], verify=verify)
+        if env.get("format") != "delta":
+            raise serial.ChunkCorruption(
+                f"unknown object format {env.get('format')!r}")
+        canon = self._apply_delta(
+            digest, env, self.read_canonical(env["base"], verify=verify))
+        if verify and content_digest(canon) != digest:
+            raise serial.ChunkCorruption(f"digest mismatch for {digest}")
+        return serial.decode_chunk(canon, verify=verify)
+
+    def read(self, ref: ChunkRef, *, verify: bool = True
+             ) -> Tuple[PyTree, Dict]:
+        if not ref.digest:
+            raise serial.ChunkCorruption(
+                f"manifest entry for {ref.unit}/{ref.kind} has no content "
+                "digest (pre-content-addressing checkpoint); re-save it")
+        return self.read_digest(ref.digest, verify=verify)
+
+    def write(self, step: int, unit: str, kind: str, tree: PyTree,
+              *, codec: Optional[str] = None,
+              delta_base: Optional[str] = None,
+              prev_ref: Optional[ChunkRef] = None) -> ChunkRef:
+        """Persist a unit's tensors; dedup by content, delta when smaller.
+
+        ``delta_base`` is the digest of this unit's previous chunk (any
+        encoding — the store redirects to its full base).  Pass None to
+        force a full object.  ``prev_ref`` is the unit's previous manifest
+        entry: it supplies ``delta_base`` implicitly and lets the common
+        unchanged-content dedup hit skip the object-envelope disk read
+        (important on the first event after a process restart, when the
+        in-memory info cache is cold).
+        """
+        if prev_ref is not None and delta_base is None:
+            delta_base = prev_ref.digest or None
+        codec = compression.resolve_codec(codec or self.codec)
+        canon = serial.encode_chunk(tree, meta={}, codec="none")
+        digest = content_digest(canon)
+        self._bump(logical_bytes=len(canon))
+
+        # Claim the digest, or wait for a concurrent writer persisting the
+        # same content (bitwise-identical units in one event) and dedup.
+        claim: Optional[threading.Event] = None
+        while True:
+            if self.has(digest):
+                # Dedup hit: the exact content is already stored (this
+                # event or a previous one) — cost was a hash, not a write.
+                if prev_ref is not None and prev_ref.digest == digest:
+                    info = {"stored": prev_ref.stored,
+                            "base": prev_ref.delta_base,
+                            "nbytes": prev_ref.nbytes}
+                    with self._lock:
+                        self._info.setdefault(digest, dict(info))
+                else:
+                    # Rare path (cross-unit dedup or content reverting to
+                    # an older digest) with a cold info cache: reads the
+                    # object envelope once to learn stored/base/nbytes —
+                    # the manifest needs them to pin delta bases — then
+                    # stays cached for subsequent hits.
+                    info = self.object_info(digest)
+                self._canon_remember(digest, canon)  # likely a future base
+                self._bump(dedup_hits=1)
+                return ChunkRef(step=step, unit=unit, kind=kind,
+                                relpath=self.object_relpath(digest),
+                                nbytes=info["nbytes"], digest=digest,
+                                stored=info["stored"],
+                                delta_base=info["base"])
+            with self._lock:
+                other = self._inflight.get(digest)
+                if other is None:
+                    claim = self._inflight[digest] = threading.Event()
+            if claim is not None:
+                break
+            other.wait()  # then loop: has(digest) is now true (or retry)
+
+        try:
+            return self._write_new(step, unit, kind, tree, canon, digest,
+                                   codec, delta_base)
+        finally:
+            with self._lock:
+                self._inflight.pop(digest, None)
+            claim.set()
+
+    def _write_new(self, step: int, unit: str, kind: str, tree: PyTree,
+                   canon: bytes, digest: str, codec: str,
+                   delta_base: Optional[str]) -> ChunkRef:
+        full_payload = canon if codec == "none" else \
+            serial.encode_chunk(tree, meta={}, codec=codec)
+
+        # Try a delta against the previous chunk's *full* base.  Lossy
+        # codecs are excluded: a delta restores the exact canonical bytes,
+        # which would silently change int8 round-trip semantics.  A run of
+        # rebase_every consecutive deltas forces a full write so one base
+        # object never underpins the whole retention window.
+        with self._lock:
+            run = self._delta_runs.get((unit, kind), 0)
+        if (self.delta and delta_base and run < self.rebase_every
+                and codec in ("none", "zstd")):
+            try:
+                base_digest = delta_base
+                info = self.object_info(base_digest)
+                if info["stored"] == "delta":
+                    base_digest = info["base"]
+                base_canon = self.read_canonical(base_digest)
+            except (FileNotFoundError, serial.ChunkCorruption,
+                    compression.CodecUnavailable):
+                # unreadable base (missing, corrupt, or written with a
+                # codec this environment lacks): degrade to a full write
+                base_canon = None
+            if base_canon is not None:
+                dblob = compression.delta_encode(
+                    canon, base_canon,
+                    compress="zstd" if codec == "zstd" else "none")
+                if len(dblob) < self.delta_ratio * len(full_payload):
+                    nbytes = self._write_object(digest, {
+                        "v": OBJECT_VERSION, "format": "delta",
+                        "base": base_digest, "payload": dblob})
+                    self._canon_remember(digest, canon)
+                    with self._lock:
+                        self._delta_runs[(unit, kind)] = run + 1
+                    self._bump(written_bytes=nbytes, delta_chunks=1)
+                    return ChunkRef(step=step, unit=unit, kind=kind,
+                                    relpath=self.object_relpath(digest),
+                                    nbytes=nbytes, digest=digest,
+                                    stored="delta", delta_base=base_digest)
+
+        nbytes = self._write_object(digest, {
+            "v": OBJECT_VERSION, "format": "full", "codec": codec,
+            "base": None, "payload": full_payload})
+        self._canon_remember(digest, canon)
+        with self._lock:
+            self._delta_runs[(unit, kind)] = 0
+        self._bump(written_bytes=nbytes, full_chunks=1)
+        return ChunkRef(step=step, unit=unit, kind=kind,
+                        relpath=self.object_relpath(digest), nbytes=nbytes,
+                        digest=digest, stored="full", delta_base=None)
+
+    def seed_delta_runs(self, runs: Dict[Tuple[str, str], int]) -> None:
+        """Resume per-unit consecutive-delta counts (derived from the
+        manifest chain) so the rebase_every bound survives restarts."""
+        with self._lock:
+            self._delta_runs = dict(runs)
+
+    # ---- refcounts / gc ----
+    def set_refcounts(self, counts: Counter) -> None:
+        with self._lock:
+            self._refcounts = Counter(counts)
+
+    def incref(self, digests: Iterable[str]) -> None:
+        with self._lock:
+            for d in digests:
+                self._refcounts[d] += 1
+
+    def decref(self, digests: Iterable[str]) -> None:
+        with self._lock:
+            for d in digests:
+                self._refcounts[d] -= 1
+
+    def refcount(self, digest: str) -> int:
+        with self._lock:
+            return self._refcounts.get(digest, 0)
+
+    def gc_objects(self) -> int:
+        """Delete objects with no remaining references; returns bytes freed.
+
+        Objects absent from the refcount map (orphans from an interrupted
+        save) are also swept, as are crash-leftover ``*.tmp-*`` files from
+        ``_atomic_write`` — only call after the current manifest has been
+        committed and increffed, and never concurrently with writes.
+        """
         freed = 0
-        if d.is_dir():
-            for f in d.iterdir():
-                freed += f.stat().st_size
-                f.unlink()
-            d.rmdir()
+        if self.objects_dir().is_dir():
+            for tmp in self.objects_dir().glob("*/*.tmp-*"):
+                try:
+                    freed += tmp.stat().st_size
+                    tmp.unlink()
+                except FileNotFoundError:
+                    continue
+        for digest in list(self.iter_digests()):
+            if self.refcount(digest) > 0:
+                continue
+            p = self.object_path(digest)
+            try:
+                freed += p.stat().st_size
+                p.unlink()
+            except FileNotFoundError:
+                continue
+            with self._lock:
+                self._info.pop(digest, None)
+                self._refcounts.pop(digest, None)
+                old = self._canon_cache.pop(digest, None)
+                if old is not None:
+                    self._canon_cache_bytes -= len(old)
+            parent = p.parent
+            try:
+                parent.rmdir()  # prune empty fan-out dirs opportunistically
+            except OSError:
+                pass
         return freed
+
+    # ---- usage ----
+    def total_bytes(self) -> int:
+        return sum(self.object_path(d).stat().st_size
+                   for d in self.iter_digests())

@@ -1,42 +1,91 @@
 """Checkpoint codecs.
 
+Per-tensor codecs (serial.py applies these to each tensor record):
+
 - "none": raw little-endian bytes.
 - "zstd": lossless zstd (level tuned for throughput; decompression releases
-  the GIL so the async writer pool parallelizes).
+  the GIL so the async writer pool parallelizes).  Optional dependency —
+  requesting it without ``zstandard`` installed raises ``CodecUnavailable``.
 - "int8": blockwise symmetric int8 quantization (lossy; weights-only — the
   numpy mirror of the Pallas kernel in ``repro.kernels.quantize``), then
-  zstd over the int8 payload.  Beyond-paper: composes checkpoint
-  *selectivity* (which layers) with *compression* (how many bytes per layer),
-  exactly the "not mutually exclusive" composition argued in §5.1.
+  zstd over the int8 payload when zstd is available (raw int8 otherwise).
+  Beyond-paper: composes checkpoint *selectivity* (which layers) with
+  *compression* (how many bytes per layer), exactly the "not mutually
+  exclusive" composition argued in §5.1.
+- "auto" (or None): resolves to "zstd" when available, else "none" — the
+  default everywhere so the repo runs in containers without zstandard.
+
+Chunk-level delta codec (chunk_store.py applies this to whole canonical
+chunk blobs):
+
+- ``delta_encode(cur, base)`` XORs ``cur`` against ``base`` and stores only
+  the non-zero runs (sparse bytewise diff).  Near-identical payloads — the
+  common case when a selective policy re-saves a slowly-drifting layer —
+  collapse to a few segments.  XOR (rather than storing ``cur`` bytes
+  directly) zeroes the shared sign/exponent bits of close floats, which
+  compresses further when zstd is available.
+- ``delta_decode(blob, base)`` reconstructs ``cur`` byte-exactly.
 """
 from __future__ import annotations
 
+import threading
 from typing import Any, Dict, Optional, Tuple
 
+import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:  # optional dependency: the repo must import (and run) without zstd
+    import zstandard as _zstd
+    HAVE_ZSTD = True
+except ImportError:  # pragma: no cover - depends on environment
+    _zstd = None
+    HAVE_ZSTD = False
 
 ZSTD_LEVEL = 3
 QUANT_BLOCK = 256
 
+
+class CodecUnavailable(RuntimeError):
+    """A codec was explicitly requested but its dependency is missing."""
+
+
+def default_codec() -> str:
+    """Best available lossless codec for this environment."""
+    return "zstd" if HAVE_ZSTD else "none"
+
+
+def resolve_codec(codec: Optional[str]) -> str:
+    """Map the "auto"/None sentinel to the environment default."""
+    if codec is None or codec == "auto":
+        return default_codec()
+    return codec
+
+
+def _require_zstd() -> None:
+    if not HAVE_ZSTD:
+        raise CodecUnavailable(
+            "codec 'zstd' requires the optional 'zstandard' package "
+            "(pip install zstandard); use codec='auto' or 'none' instead")
+
+
 # zstd (de)compression contexts are NOT thread-safe; the async writer pool
 # compresses concurrently, so contexts are per-thread.
-import threading
-
 _tls = threading.local()
 
 
-def _cctx() -> zstd.ZstdCompressor:
+def _cctx():
+    _require_zstd()
     c = getattr(_tls, "cctx", None)
     if c is None:
-        c = _tls.cctx = zstd.ZstdCompressor(level=ZSTD_LEVEL)
+        c = _tls.cctx = _zstd.ZstdCompressor(level=ZSTD_LEVEL)
     return c
 
 
-def _dctx() -> zstd.ZstdDecompressor:
+def _dctx():
+    _require_zstd()
     d = getattr(_tls, "dctx", None)
     if d is None:
-        d = _tls.dctx = zstd.ZstdDecompressor()
+        d = _tls.dctx = _zstd.ZstdDecompressor()
     return d
 
 
@@ -66,9 +115,17 @@ def dequantize_int8(q: np.ndarray, scales: np.ndarray, size: int,
     return out.reshape(-1)[:size]
 
 
+def _lossless(raw: bytes) -> Tuple[bytes, str]:
+    """Compress with the best available lossless codec."""
+    if HAVE_ZSTD:
+        return _cctx().compress(raw), "zstd"
+    return raw, "none"
+
+
 def encode(arr: np.ndarray, codec: str) -> Tuple[bytes, str, Optional[Dict]]:
     """Returns (payload, codec_used, extra_meta)."""
     arr = np.asarray(arr)
+    codec = resolve_codec(codec)
     if codec == "none":
         return _to_bytes(arr), "none", None
     if codec == "zstd":
@@ -76,14 +133,16 @@ def encode(arr: np.ndarray, codec: str) -> Tuple[bytes, str, Optional[Dict]]:
     if codec == "int8":
         # Only sensible for float weight tensors of meaningful size.
         if arr.dtype.kind != "f" and str(arr.dtype) != "bfloat16":
-            return _cctx().compress(_to_bytes(arr)), "zstd", None
+            blob, used = _lossless(_to_bytes(arr))
+            return blob, used, None
         if arr.size < QUANT_BLOCK:
-            return _cctx().compress(_to_bytes(arr)), "zstd", None
+            blob, used = _lossless(_to_bytes(arr))
+            return blob, used, None
         q, scales = quantize_int8(arr)
-        blob = q.tobytes() + scales.tobytes()
-        return (_cctx().compress(blob), "int8",
+        blob, comp = _lossless(q.tobytes() + scales.tobytes())
+        return (blob, "int8",
                 {"n_q": int(q.size), "n_scale": int(scales.size),
-                 "block": QUANT_BLOCK})
+                 "block": QUANT_BLOCK, "comp": comp})
     raise ValueError(f"unknown codec {codec!r}")
 
 
@@ -98,7 +157,9 @@ def decode(payload: bytes, codec: str, *, shape, dtype,
         raw = _dctx().decompress(payload)
         return np.frombuffer(raw, dtype=np_dtype).reshape(shape).copy()
     if codec == "int8":
-        raw = _dctx().decompress(payload)
+        # chunks written before the optional-zstd split always compressed
+        comp = (extra or {}).get("comp", "zstd")
+        raw = _dctx().decompress(payload) if comp == "zstd" else payload
         n_q, n_scale = extra["n_q"], extra["n_scale"]
         q = np.frombuffer(raw[:n_q], dtype=np.int8)
         scales = np.frombuffer(raw[n_q:n_q + 4 * n_scale], dtype=np.float32)
@@ -106,3 +167,63 @@ def decode(payload: bytes, codec: str, *, shape, dtype,
         out = dequantize_int8(q, scales, size, extra.get("block", QUANT_BLOCK))
         return out.astype(np_dtype).reshape(shape)
     raise ValueError(f"unknown codec {codec!r}")
+
+
+# --------------------------------------------------------------- delta codec
+DELTA_MAGIC = b"XD01"
+# Non-zero XOR runs closer than this are merged into one segment: the
+# per-segment overhead (offset + length framing) outweighs a few zero bytes.
+DELTA_MERGE_GAP = 32
+
+
+def delta_encode(cur: bytes, base: bytes, *, gap: int = DELTA_MERGE_GAP,
+                 compress: Optional[str] = None) -> bytes:
+    """Sparse bytewise XOR diff of ``cur`` against ``base``.
+
+    ``base`` is zero-padded/truncated to ``len(cur)`` so payloads of
+    different lengths still diff (the tail past ``base`` XORs with zeros,
+    i.e. is stored verbatim).  The result decodes with ``delta_decode``
+    against the same ``base``.
+    """
+    n = len(cur)
+    a = np.frombuffer(cur, np.uint8)
+    if len(base) >= n:
+        b = np.frombuffer(base, np.uint8, count=n)
+    else:
+        b = np.zeros(n, np.uint8)
+        b[:len(base)] = np.frombuffer(base, np.uint8)
+    x = a ^ b
+    nz = np.flatnonzero(x)
+    segs = []
+    if nz.size:
+        brk = np.flatnonzero(np.diff(nz) > gap)
+        starts = nz[np.concatenate([[0], brk + 1])]
+        ends = nz[np.concatenate([brk, [nz.size - 1]])] + 1
+        segs = [[int(s), x[s:e].tobytes()] for s, e in zip(starts, ends)]
+    body = msgpack.packb({"n": n, "segs": segs}, use_bin_type=True)
+    comp = resolve_codec(compress)
+    if comp == "zstd":
+        return DELTA_MAGIC + b"\x01" + _cctx().compress(body)
+    return DELTA_MAGIC + b"\x00" + body
+
+
+def delta_decode(blob: bytes, base: bytes) -> bytes:
+    """Reconstruct the payload ``delta_encode`` diffed against ``base``."""
+    if blob[:4] != DELTA_MAGIC:
+        raise ValueError("not a delta blob (bad magic)")
+    body = blob[5:]
+    if blob[4] == 1:
+        body = _dctx().decompress(body)
+    d = msgpack.unpackb(body, raw=False)
+    n = d["n"]
+    out = np.zeros(n, np.uint8)
+    m = min(n, len(base))
+    out[:m] = np.frombuffer(base, np.uint8, count=m)
+    for off, data in d["segs"]:
+        seg = np.frombuffer(data, np.uint8)
+        out[off:off + len(seg)] ^= seg
+    return out.tobytes()
+
+
+def is_delta(blob: bytes) -> bool:
+    return blob[:4] == DELTA_MAGIC

@@ -5,28 +5,35 @@ Save path:
   2. each selected unit's weights (bf16) and optimizer group content
      (master/m/v, fp32) are snapshotted to host (jax.device_get) — the only
      synchronous cost — and handed to the async writer,
-  3. after all chunks land, the manifest commits: every unit maps to the
-     newest chunk holding it (units skipped this event keep their previous
-     refs — the implicit Frankenstein merge),
-  4. retention GC deletes step dirs no retained manifest references.
+  3. the writer hashes each unit's canonical payload: unchanged content is
+     a dedup hit (no write), drifted content lands as a sparse delta
+     against its previous full chunk when that is smaller, a full object
+     otherwise,
+  4. after all chunks land, the manifest commits: every unit maps to the
+     digest of the newest chunk holding it (units skipped this event keep
+     their previous refs — the implicit Frankenstein merge),
+  5. refcounted GC: manifests beyond the retention window release their
+     references and objects with no remaining references are deleted.
 
 Restore path (= the paper's merge, done lazily):
-  read the manifest (latest or pinned), stream each unit from wherever it
-  newest-lives, verify crc32; on a corrupt/missing chunk fall back to that
-  unit's previous manifest entry (degraded-but-resumable, logged).
+  read the manifest (latest or pinned), stream each unit from its digest
+  (deltas reconstruct transparently against their base), verify crc32 +
+  digest; on a corrupt/missing chunk fall back to that unit's previous
+  manifest entry (degraded-but-resumable, logged).
 """
 from __future__ import annotations
 
 import logging
 import time
+from collections import Counter
 from pathlib import Path
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.async_io import AsyncWriter
+from repro.checkpoint.async_io import AsyncWriter, PendingResult
 from repro.checkpoint.chunk_store import ChunkRef, ChunkStore
 from repro.checkpoint.serial import ChunkCorruption
 from repro.core.layer_registry import OPT_KINDS, LayerRegistry
@@ -49,24 +56,56 @@ class CheckpointManager:
         registry: LayerRegistry,
         policy: CheckpointPolicy,
         *,
-        codec: str = "zstd",
+        codec: str = "auto",
         async_save: bool = True,
         keep: int = 8,
         writer_threads: int = 2,
+        delta: bool = True,
     ):
         self.root = Path(root)
         self.registry = registry
         self.policy = policy
-        self.store = ChunkStore(self.root, codec=codec)
+        self.store = ChunkStore(self.root, codec=codec, delta=delta)
         self.manifests = ManifestStore(self.root)
         self.keep = keep
         self.async_save = async_save
         self.writer = AsyncWriter(writer_threads) if async_save else None
         self._event_index = self._infer_event_index()
+        self._rebuild_refcounts()
         self.last_save_stats: Dict[str, Any] = {}
 
     def _infer_event_index(self) -> int:
         return len(self.manifests.all_steps())
+
+    def _rebuild_refcounts(self) -> None:
+        """Derive object refcounts AND per-unit delta-run lengths from the
+        committed manifests.
+
+        Neither is persisted: the manifests are the single source of
+        truth, so a crash between a commit and a GC can at worst leave
+        unreferenced objects for the next GC to sweep.  Replaying the
+        delta runs matters for durability: without it, a crash/restart
+        loop would reset the rebase counter and let one full base object
+        underpin the entire retention window.
+        """
+        counts: Counter = Counter()
+        runs: Dict[Tuple[str, str], int] = {}
+        last_digest: Dict[Tuple[str, str], str] = {}
+        for s in self.manifests.all_steps():
+            m = self.manifests.load(s)
+            if m is None:
+                continue
+            counts.update(m.referenced_digests())
+            for unit, kinds in m.entries.items():
+                for kind, ref in kinds.items():
+                    key = (unit, kind)
+                    if last_digest.get(key) == ref.digest:
+                        continue  # carried-over entry, not a new write
+                    last_digest[key] = ref.digest
+                    runs[key] = (runs.get(key, 0) + 1
+                                 if ref.stored == "delta" else 0)
+        self.store.set_refcounts(counts)
+        self.store.seed_delta_runs(runs)
 
     # ------------------------------------------------------------------ save
     def save(self, state: Dict[str, PyTree], *, step: Optional[int] = None,
@@ -77,6 +116,15 @@ class CheckpointManager:
         ctx = PolicyContext(event_index=self._event_index, step=step,
                             drift_scores=drift_scores)
         prev = self.manifests.load()
+        if prev is not None and any(
+                not r.digest for kinds in prev.entries.values()
+                for r in kinds.values()):
+            # Pre-content-addressing manifest: its digest-less refs can't
+            # be carried forward (the store only reads by digest), so start
+            # a fresh full base rather than commit unrestorable entries.
+            log.warning("previous manifest at step %s predates content "
+                        "addressing; forcing a full save", prev.step)
+            prev = None
         if prev is None:
             # The very first event is always a full save: every later
             # manifest must be able to reference a complete base.
@@ -86,9 +134,15 @@ class CheckpointManager:
         entries: Dict[str, Dict[str, ChunkRef]] = (
             {u: dict(k) for u, k in prev.entries.items()} if prev else {})
 
+        def prev_entry(name: str, kind: str) -> Optional[ChunkRef]:
+            if prev is None:
+                return None
+            return prev.entries.get(name, {}).get(kind)
+
         # Snapshot selected units to host (sync) and enqueue writes (async).
+        self.store.reset_stats()
         snap_bytes = 0
-        pending: List[ChunkRef] = []
+        pending: Dict[Tuple[str, str], PendingResult] = {}
         for name in selected:
             w = jax.device_get(
                 self.registry.extract_unit(state["params"], name))
@@ -96,40 +150,36 @@ class CheckpointManager:
                 self.registry.extract_opt_unit(state["opt"], name))
             snap_bytes += sum(np.asarray(x).nbytes
                               for x in jax.tree.leaves((w, o)))
-            w_ref = ChunkRef(step, name, "weights",
-                             self.store.relpath(step, name, "weights"), 0)
-            o_ref = ChunkRef(step, name, "opt",
-                             self.store.relpath(step, name, "opt"), 0)
-            if self.writer is not None:
-                self.writer.submit(self.store.write, step, name, "weights", w)
-                self.writer.submit(self.store.write, step, name, "opt", o)
-            else:
-                w_ref = self.store.write(step, name, "weights", w)
-                o_ref = self.store.write(step, name, "opt", o)
-            entries.setdefault(name, {})
-            entries[name]["weights"] = w_ref
-            entries[name]["opt"] = o_ref
-            pending.append(w_ref)
+            for kind, tree in (("weights", w), ("opt", o)):
+                pref = prev_entry(name, kind)
+                if self.writer is not None:
+                    pending[(name, kind)] = self.writer.submit(
+                        self.store.write, step, name, kind, tree,
+                        prev_ref=pref)
+                else:
+                    entries.setdefault(name, {})[kind] = self.store.write(
+                        step, name, kind, tree, prev_ref=pref)
         t_snapshot = time.time() - t0
 
         # All chunks must land before the manifest commits.
         if self.writer is not None:
             self.writer.drain()
-            # Fill in real chunk sizes now that the files exist.
-            for name in selected:
-                for kind in ("weights", "opt"):
-                    ref = entries[name][kind]
-                    p = self.root / ref.relpath
-                    entries[name][kind] = ChunkRef(
-                        ref.step, ref.unit, ref.kind, ref.relpath,
-                        p.stat().st_size if p.is_file() else 0)
+            for (name, kind), p in pending.items():
+                entries.setdefault(name, {})[kind] = p.result()
         manifest = Manifest(step=step, entries=entries,
                             meta=dict(meta or {}, event_index=self._event_index,
                                       policy=self.policy.name),
                             saved_units=selected)
+        # Re-saving a step overwrites its manifest file: release the
+        # replaced manifest's references or its objects leak until restart.
+        replaced = self.manifests.load(step)
         self.manifests.commit(manifest)
+        self.store.incref(manifest.referenced_digests().elements())
+        if replaced is not None:
+            self.store.decref(replaced.referenced_digests().elements())
         self._event_index += 1
         self.gc()
+        io = dict(self.store.stats)
         self.last_save_stats = {
             "step": step,
             "selected_units": len(selected),
@@ -137,6 +187,12 @@ class CheckpointManager:
             "snapshot_bytes": snap_bytes,
             "snapshot_seconds": t_snapshot,
             "total_seconds": time.time() - t0,
+            # dedup/delta accounting for this event
+            "logical_bytes": io["logical_bytes"],
+            "written_bytes": io["written_bytes"],
+            "dedup_hits": io["dedup_hits"],
+            "delta_chunks": io["delta_chunks"],
+            "full_chunks": io["full_chunks"],
         }
         return manifest
 
@@ -157,8 +213,8 @@ class CheckpointManager:
                 if older is None or name not in older.entries:
                     continue
                 oref = older.entries[name][kind]
-                if oref.relpath == ref.relpath:
-                    continue
+                if (oref.digest or oref.relpath) == (ref.digest or ref.relpath):
+                    continue  # same content/object — would fail identically
                 try:
                     tree, _ = self.store.read(oref)
                     log.warning("unit %s/%s restored from older step %s",
@@ -206,25 +262,16 @@ class CheckpointManager:
 
     # ------------------------------------------------------------------- gc
     def gc(self) -> int:
-        """Keep the last ``keep`` manifests; delete step dirs that no
-        retained manifest references.  Returns bytes freed."""
+        """Refcounted retention: keep the last ``keep`` manifests; dropped
+        manifests release their object references and unreferenced objects
+        are deleted.  Returns bytes freed."""
         steps = self.manifests.all_steps()
-        retain = steps[-self.keep:]
-        referenced = set()
-        for s in retain:
-            m = self.manifests.load(s)
-            if m:
-                referenced.update(m.referenced_steps())
-        freed = 0
         for s in steps[:-self.keep] if len(steps) > self.keep else []:
+            m = self.manifests.load(s)
             self.manifests.delete(s)
-        step_dirs = sorted((self.root / "steps").glob("step-*")) \
-            if (self.root / "steps").is_dir() else []
-        for d in step_dirs:
-            s = int(d.name.split("-")[1])
-            if s not in referenced:
-                freed += self.store.delete_step(s)
-        return freed
+            if m is not None:
+                self.store.decref(m.referenced_digests().elements())
+        return self.store.gc_objects()
 
     def close(self) -> None:
         if self.writer is not None:
@@ -233,11 +280,9 @@ class CheckpointManager:
     # -------------------------------------------------------------- metrics
     def disk_usage(self) -> Dict[str, int]:
         total = 0
-        per_step: Dict[int, int] = {}
-        if (self.root / "steps").is_dir():
-            for d in (self.root / "steps").glob("step-*"):
-                s = int(d.name.split("-")[1])
-                b = sum(f.stat().st_size for f in d.iterdir())
-                per_step[s] = b
-                total += b
-        return {"total": total, **{f"step_{k}": v for k, v in sorted(per_step.items())}}
+        objects = 0
+        for d in self.store.iter_digests():
+            total += self.store.object_path(d).stat().st_size
+            objects += 1
+        return {"total": total, "objects": objects,
+                "manifests": len(self.manifests.all_steps())}

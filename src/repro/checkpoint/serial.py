@@ -46,7 +46,7 @@ def unflatten_from_paths(items: Dict[str, Any]) -> PyTree:
 
 
 def encode_chunk(tree: PyTree, *, meta: Dict[str, Any],
-                 codec: str = "zstd") -> bytes:
+                 codec: str = "auto") -> bytes:
     tensors = []
     for path, arr in flatten_with_paths(tree):
         arr = np.asarray(arr)

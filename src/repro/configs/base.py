@@ -193,4 +193,4 @@ class TrainConfig(BaseModel, frozen=True):
     ckpt_dir: str = "/tmp/repro_ckpt"
     ckpt_async: bool = True
     ckpt_keep: int = 8
-    ckpt_compression: Literal["zstd", "none", "int8"] = "zstd"
+    ckpt_compression: Literal["auto", "zstd", "none", "int8"] = "auto"

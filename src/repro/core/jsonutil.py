@@ -1,0 +1,32 @@
+"""JSON (de)serialization with an optional orjson fast path.
+
+orjson is noticeably faster for the large manifest dicts a long run
+accumulates, but it is an optional dependency — stdlib ``json`` produces
+byte-compatible documents, so stores written with one load with the other.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Union
+
+try:  # optional dependency
+    import orjson as _orjson
+    HAVE_ORJSON = True
+except ImportError:  # pragma: no cover - depends on environment
+    _orjson = None
+    HAVE_ORJSON = False
+
+
+def dumps(obj: Any, *, indent: bool = False) -> bytes:
+    if HAVE_ORJSON:
+        return _orjson.dumps(obj, option=_orjson.OPT_INDENT_2 if indent else 0)
+    return json.dumps(obj, indent=2 if indent else None,
+                      separators=None if indent else (",", ":")).encode()
+
+
+def loads(data: Union[bytes, str]) -> Any:
+    if HAVE_ORJSON:
+        return _orjson.loads(data)
+    if isinstance(data, bytes):
+        data = data.decode()
+    return json.loads(data)

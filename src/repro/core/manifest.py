@@ -16,12 +16,12 @@ A crash between any two steps leaves the previous manifest fully usable.
 from __future__ import annotations
 
 import dataclasses
+from collections import Counter
 from pathlib import Path
 from typing import Any, Dict, List, Optional
 
-import orjson
-
 from repro.checkpoint.chunk_store import ChunkRef, _atomic_write
+from repro.core import jsonutil
 
 
 @dataclasses.dataclass
@@ -41,11 +41,11 @@ class Manifest:
             "entries": {u: {k: r.to_json() for k, r in kinds.items()}
                         for u, kinds in self.entries.items()},
         }
-        return orjson.dumps(d, option=orjson.OPT_INDENT_2)
+        return jsonutil.dumps(d, indent=True)
 
     @staticmethod
     def from_json(blob: bytes) -> "Manifest":
-        d = orjson.loads(blob)
+        d = jsonutil.loads(blob)
         return Manifest(
             step=d["step"],
             meta=d.get("meta", {}),
@@ -54,12 +54,22 @@ class Manifest:
                      for u, kinds in d["entries"].items()},
         )
 
-    def referenced_steps(self) -> List[int]:
-        steps = set()
+    def referenced_digests(self) -> Counter:
+        """Digest -> reference count held by THIS manifest.
+
+        A delta object pins its full base alive, so the base digest gets a
+        reference alongside the entry's own digest.  Counts (not a set) let
+        the store's refcounts be incremented/decremented symmetrically per
+        manifest commit/delete.
+        """
+        counts: Counter = Counter()
         for kinds in self.entries.values():
             for ref in kinds.values():
-                steps.add(ref.step)
-        return sorted(steps)
+                if ref.digest:
+                    counts[ref.digest] += 1
+                if ref.delta_base:
+                    counts[ref.delta_base] += 1
+        return counts
 
     def staleness(self) -> Dict[str, int]:
         """Per unit: how many steps behind the manifest step its chunk is."""

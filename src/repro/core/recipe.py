@@ -21,9 +21,7 @@ import re
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-import orjson
-
-from repro.core import yamlish
+from repro.core import jsonutil, yamlish
 
 _RANGE_RE = re.compile(r"^(.*?)(\d+)\.\.(.*?)(\d+)$")
 
@@ -97,7 +95,7 @@ class Recipe:
     def load(path: Union[str, Path]) -> "Recipe":
         text = Path(path).read_text()
         if str(path).endswith(".json"):
-            return Recipe.from_dict(orjson.loads(text))
+            return Recipe.from_dict(jsonutil.loads(text))
         return Recipe.from_dict(yamlish.loads(text))
 
     def assignment(self, all_units: Sequence[str]

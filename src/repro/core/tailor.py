@@ -4,18 +4,23 @@ Assembles a fully-resumable "Frankenstein" checkpoint from layer units of
 multiple source checkpoints per a YAML/JSON recipe: weights chunks AND the
 per-layer optimizer groups (master/m/v) AND the step-level config metadata
 (copied from the newest source, §4.4).  The output is a normal checkpoint
-root (one manifest + one step dir) that ``CheckpointManager.restore`` — or a
-fresh training run — consumes directly.
+root (one manifest + content-addressed objects) that
+``CheckpointManager.restore`` — or a fresh training run — consumes directly.
 
-Chunk-level copy: merging never deserializes tensors it doesn't have to —
-a unit is copied blob-for-blob (crc re-verified), so merge cost is pure IO,
-matching the paper's Table 7 cost model (size x #checkpoints x access
-order).  A thread pool overlaps reads and writes (§4.2's multiprocessing
-analogue; zstd + file IO release the GIL).
+Digest-level copy: merging never deserializes tensors it doesn't have to —
+a unit's object is copied blob-for-blob under the same content digest
+(round-trip re-verified), so merge cost is pure IO, matching the paper's
+Table 7 cost model (size x #checkpoints x access order).  Content
+addressing makes the copy idempotent and shared: units that are identical
+across sources (or identical between two rules) land as ONE object in the
+output, and a delta-encoded unit brings its full base along exactly once.
+A thread pool overlaps reads and writes (§4.2's multiprocessing analogue;
+compression + file IO release the GIL).
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
@@ -57,9 +62,42 @@ def merge(recipe: Recipe, *, workers: int = 4,
     kinds = ("weights", "opt") if recipe.optimizer else ("weights",)
 
     stats = {"units": len(all_units), "bytes": 0, "chunks": 0,
-             "sources": len(sources)}
+             "shared_chunks": 0, "sources": len(sources)}
+    # Two units (or a delta and its base) may resolve to the same digest;
+    # the first claimant copies, later ones block until the object landed.
+    claims: Dict[str, threading.Event] = {}
+    claim_lock = threading.Lock()
 
-    def copy_unit(unit: str) -> List[Tuple[str, str, ChunkRef]]:
+    def copy_object(src_store: ChunkStore, digest: str) -> int:
+        """Copy one object (and, for deltas, its full base) by digest.
+        Returns bytes newly written into the output store."""
+        with claim_lock:
+            done = claims.get(digest)
+            owner = done is None
+            if owner:
+                done = claims[digest] = threading.Event()
+        if not owner:
+            done.wait()
+            return 0
+        try:
+            if out_store.has(digest):
+                return 0
+            src_path = src_store.object_path(digest)
+            if not src_path.is_file():
+                raise MergeError(f"source object {digest} missing "
+                                 f"under {src_store.root}")
+            written = 0
+            info = src_store.object_info(digest)
+            if info["stored"] == "delta":
+                # the base is always a full object: one level of recursion
+                written += copy_object(src_store, info["base"])
+            _atomic_write(out_store.object_path(digest),
+                          src_path.read_bytes())
+            return written + info["nbytes"]
+        finally:
+            done.set()
+
+    def copy_unit(unit: str) -> List[Tuple[str, str, ChunkRef, int]]:
         src_manifest, src_store = sources[str(assignment[unit])]
         if unit not in src_manifest.entries:
             raise MergeError(f"unit {unit!r} missing from "
@@ -67,24 +105,30 @@ def merge(recipe: Recipe, *, workers: int = 4,
         out_refs = []
         for kind in kinds:
             ref = src_manifest.entries[unit][kind]
-            blob = (src_store.root / ref.relpath).read_bytes()
+            if not ref.digest:
+                raise MergeError(
+                    f"unit {unit!r} in {assignment[unit]} is a legacy "
+                    "(pre-content-addressing) chunk; re-save it first")
+            written = copy_object(src_store, ref.digest)
             if verify:
-                from repro.checkpoint.serial import decode_chunk
-                decode_chunk(blob, verify=True)  # crc check, then discard
-            dst = out_store.chunk_path(out_step, unit, kind)
-            _atomic_write(dst, blob)
+                # full round-trip through the output store: crc per tensor
+                # plus canonical-digest check (covers delta reconstruction)
+                out_store.read_digest(ref.digest, verify=True)
             out_refs.append((unit, kind, ChunkRef(
-                out_step, unit, kind,
-                out_store.relpath(out_step, unit, kind), len(blob))))
+                out_step, unit, kind, out_store.object_relpath(ref.digest),
+                ref.nbytes, digest=ref.digest, stored=ref.stored,
+                delta_base=ref.delta_base), written))
         return out_refs
 
     entries: Dict[str, Dict[str, ChunkRef]] = {}
     with ThreadPoolExecutor(max_workers=workers) as pool:
         for refs in pool.map(copy_unit, all_units):
-            for unit, kind, ref in refs:
+            for unit, kind, ref, written in refs:
                 entries.setdefault(unit, {})[kind] = ref
-                stats["bytes"] += ref.nbytes
+                stats["bytes"] += written
                 stats["chunks"] += 1
+                if not written:
+                    stats["shared_chunks"] += 1
 
     # §4.4: configuration/metadata comes from the newest (base) checkpoint.
     manifest = Manifest(
@@ -110,7 +154,8 @@ def main() -> None:
     recipe = Recipe.load(args.recipe)
     stats = merge(recipe, workers=args.workers, verify=not args.no_verify)
     print(f"[llmtailor] merged {stats['units']} units "
-          f"({stats['chunks']} chunks, {stats['bytes']/2**20:.1f} MiB) "
+          f"({stats['chunks']} chunks, {stats['shared_chunks']} shared, "
+          f"{stats['bytes']/2**20:.1f} MiB written) "
           f"from {stats['sources']} checkpoints "
           f"in {stats['seconds']:.2f}s -> {recipe.output}")
 

@@ -69,7 +69,7 @@ def train(
     ckpt_interval: int = 50,
     ckpt_dir: str = "/tmp/repro_train",
     ckpt_async: bool = True,
-    codec: str = "zstd",
+    codec: str = "auto",
     resume: bool = False,
     fail_at: Optional[int] = None,
     seed: int = 0,
@@ -165,8 +165,8 @@ def main() -> None:
                              "topk_delta"])
     ap.add_argument("--ckpt-interval", type=int, default=50)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
-    ap.add_argument("--codec", default="zstd",
-                    choices=["zstd", "none", "int8"])
+    ap.add_argument("--codec", default="auto",
+                    choices=["auto", "zstd", "none", "int8"])
     ap.add_argument("--sync-save", action="store_true")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--fail-at", type=int)

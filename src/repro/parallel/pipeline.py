@@ -22,6 +22,10 @@ from jax.experimental.shard_map import shard_map
 
 PyTree = Any
 
+# jax < 0.6 has no shard_map varying-mesh-axes typing (and no pvary); the
+# identity is the correct shim there — carries are already untyped.
+_pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
+
 
 def pipeline_apply(
     stage_fn: Callable[[PyTree, jax.Array], jax.Array],
@@ -42,8 +46,8 @@ def pipeline_apply(
         mb_shape = xs.shape[1:]
         # Mark carries as device-varying along the stage axis up front so the
         # fori_loop carry types stay stable (shard_map vma typing).
-        state = jax.lax.pvary(jnp.zeros(mb_shape, xs.dtype), (axis,))
-        outs = jax.lax.pvary(jnp.zeros((m,) + mb_shape, xs.dtype), (axis,))
+        state = _pvary(jnp.zeros(mb_shape, xs.dtype), (axis,))
+        outs = _pvary(jnp.zeros((m,) + mb_shape, xs.dtype), (axis,))
 
         def tick(t, carry):
             state, outs = carry

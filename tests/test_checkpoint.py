@@ -34,7 +34,7 @@ def test_chunk_roundtrip_bitwise():
         }
 
     for tree in cases(8, gen):
-        blob = encode_chunk(tree, meta={"x": 1}, codec="zstd")
+        blob = encode_chunk(tree, meta={"x": 1})  # codec="auto"
         out, meta = decode_chunk(blob)
         assert meta["x"] == 1
         np.testing.assert_array_equal(out["a"], tree["a"])
@@ -44,7 +44,7 @@ def test_chunk_roundtrip_bitwise():
 def test_chunk_roundtrip_bf16():
     x = jnp.asarray(np.random.RandomState(0).standard_normal((33, 7)),
                     jnp.bfloat16)
-    blob = encode_chunk({"w": np.asarray(x)}, meta={}, codec="zstd")
+    blob = encode_chunk({"w": np.asarray(x)}, meta={})
     out, _ = decode_chunk(blob)
     assert str(out["w"].dtype) == "bfloat16"
     np.testing.assert_array_equal(np.asarray(x, np.float32),
@@ -99,7 +99,7 @@ def test_async_writer_concurrent_compression(tmp_path):
                  {"w": rs.standard_normal((64, 64)).astype(np.float32)})
     w.drain()
     w.close()
-    assert len(list((tmp_path / "steps").glob("*/*.chunk"))) == 24
+    assert len(list((tmp_path / "objects").glob("*/*.chunk"))) == 24
 
 
 # ----------------------------------------------------------------- manager
@@ -152,8 +152,9 @@ def test_corruption_falls_back_to_older_chunk(tmp_path, small_setup):
     state2 = jax.tree.map(
         lambda x: x * 2 if x.dtype != jnp.int32 else x, state)
     mgr.save(state2, step=20)
-    # corrupt block_000 weights at step 20
-    victim = tmp_path / "steps" / "step-00000020" / "block_000.weights.chunk"
+    # corrupt the object holding block_000 weights at step 20
+    m2 = mgr.manifests.load(20)
+    victim = tmp_path / m2.entries["block_000"]["weights"].relpath
     raw = bytearray(victim.read_bytes())
     raw[len(raw) // 2] ^= 0xFF
     victim.write_bytes(bytes(raw))
@@ -172,8 +173,9 @@ def test_restore_error_when_everything_gone(tmp_path, small_setup):
                             make_policy("full", model.layer_units()),
                             async_save=False)
     mgr.save(state, step=10)
-    for f in (tmp_path / "steps" / "step-00000010").glob("block_000*"):
-        f.unlink()
+    m = mgr.manifests.load(10)
+    for kind in ("weights", "opt"):
+        (tmp_path / m.entries["block_000"][kind].relpath).unlink()
     with pytest.raises(RestoreError):
         mgr.restore(steps_lib.state_specs(model))
     mgr.close()
@@ -184,12 +186,28 @@ def test_gc_retention(tmp_path, small_setup):
     mgr = CheckpointManager(tmp_path, registry,
                             make_policy("full", model.layer_units()),
                             async_save=False, keep=2)
+    saved_states = []
+    st = state
     for i, s in enumerate([10, 20, 30, 40]):
-        mgr.save(state, step=s)
+        # drift the whole state so every event writes distinct content
+        st = jax.tree.map(
+            lambda x: x * 1.1 if x.dtype != jnp.int32 else x, st)
+        saved_states.append(st)
+        mgr.save(st, step=s)
     steps = mgr.manifests.all_steps()
     assert steps == [30, 40]
-    dirs = sorted(d.name for d in (tmp_path / "steps").glob("step-*"))
-    assert dirs == ["step-00000030", "step-00000040"]
+    # only objects referenced by the two retained manifests survive
+    referenced = set()
+    for s in steps:
+        referenced |= set(mgr.manifests.load(s).referenced_digests())
+    on_disk = set(mgr.store.iter_digests())
+    assert on_disk == referenced
+    # retained manifests hold exactly one reference each to their objects
+    m40 = mgr.manifests.load(40)
+    d = m40.entries["block_000"]["weights"].digest
+    assert mgr.store.refcount(d) == 1
+    # dropped steps are really gone: restoring step 10 is impossible
+    assert mgr.manifests.load(10) is None
     mgr.close()
 
 

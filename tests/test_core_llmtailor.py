@@ -221,6 +221,13 @@ def test_merge_weights_only_mode(tmp_path, setup):
     recipe = Recipe(base=CheckpointRef(tmp_path / "ck", 10),
                     output=tmp_path / "wonly", select=[], optimizer=False)
     merge(recipe, workers=1)
-    files = list((tmp_path / "wonly" / "steps").glob("*/*.chunk"))
-    assert files and all("opt" not in f.name for f in files)
+    from repro.core import ManifestStore
+    out_m = ManifestStore(tmp_path / "wonly").load(10)
+    assert out_m is not None
+    assert all(set(kinds) == {"weights"} for kinds in out_m.entries.values())
+    # only the weight objects were copied into the output store
+    src_m = ManifestStore(tmp_path / "ck").load(10)
+    weight_digests = {r["weights"].digest for r in src_m.entries.values()}
+    files = list((tmp_path / "wonly" / "objects").glob("*/*.chunk"))
+    assert files and {f.stem for f in files} == weight_digests
     mgr.close()

@@ -83,18 +83,18 @@ def test_hbm_model_scales_sanely():
 def test_int8_checkpoint_resume_trains_on(tmp_path):
     """Beyond-paper compression composes with selectivity: resuming from a
     lossy int8 checkpoint still trains (loss within a band of the lossless
-    resume)."""
+    resume; codec="auto" = best available lossless codec)."""
     from repro.launch.train import SimulatedFailure, train
 
     base = dict(arch="llama3.2-3b", total_steps=60, batch=4, seq_len=32,
                 ckpt_interval=20, seed=7, lr=2e-3)
     try:
         train(ckpt_dir=str(tmp_path / "z"), policy_name="parity",
-              codec="zstd", fail_at=50, **base)
+              codec="auto", fail_at=50, **base)
     except SimulatedFailure:
         pass
     r_z = train(ckpt_dir=str(tmp_path / "z"), policy_name="parity",
-                codec="zstd", resume=True, **base)
+                codec="auto", resume=True, **base)
     try:
         train(ckpt_dir=str(tmp_path / "q"), policy_name="parity",
               codec="int8", fail_at=50, **base)
