@@ -67,7 +67,8 @@ def run() -> dict:
                                 async_save=False, keep=N_EVENTS + 1,
                                 codec="none")
         st = state
-        logical = written = dedup = deltas = 0
+        logical = written = dedup = deltas = d2h = hashed = 0
+        dirty_fracs = []
         for ev in range(N_EVENTS):
             if ev:
                 st = drift_one_block(st, ev)
@@ -77,20 +78,27 @@ def run() -> dict:
             written += s["written_bytes"]
             dedup += s["dedup_hits"]
             deltas += s["delta_chunks"]
+            d2h += s["d2h_bytes"]
+            hashed += s["hashed_bytes"]
+            dirty_fracs.append(s["dirty_block_frac"])
         total = mgr.disk_usage()["total"]
         mgr.close()
         shutil.rmtree(tmp, ignore_errors=True)
         out[policy_name] = total
-        accounting[policy_name] = (logical, written, dedup, deltas)
+        accounting[policy_name] = (logical, written, dedup, deltas, d2h,
+                                   hashed, float(np.mean(dirty_fracs)))
 
     for name, total in out.items():
         ratio = out["full"] / total
-        logical, written, dedup, deltas = accounting[name]
+        (logical, written, dedup, deltas, d2h, hashed,
+         dirty_frac) = accounting[name]
         csv_row(f"ckpt_size_{name}", float(total),
                 f"bytes_total={total};reduction_vs_full={ratio:.2f}x;"
                 f"logical={logical};written={written};"
                 f"dedup_hits={dedup};delta_chunks={deltas};"
-                f"dedup_delta_reduction={logical / max(1, written):.2f}x")
+                f"dedup_delta_reduction={logical / max(1, written):.2f}x;"
+                f"d2h_bytes={d2h};hashed_bytes={hashed};"
+                f"dirty_block_frac={dirty_frac:.4f}")
 
     # Analytic projection at full scale (the paper's GB-sized table):
     # per-unit param counts from the abstract shapes, policy applied over a

@@ -1,8 +1,17 @@
 #!/usr/bin/env bash
 # Tier-1 verify: the command CI and ROADMAP.md treat as the gate.
-#   scripts/check.sh            # full suite
+#   scripts/check.sh            # full suite (the tier-1 gate)
+#   scripts/check.sh smoke      # fast tier: tests minus slow marks + a
+#                               # 5-step bench_ckpt_time fingerprint smoke
 #   scripts/check.sh tests/test_checkpoint.py   # pass-through args
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [ "${1:-}" = "smoke" ]; then
+  shift
+  python -m pytest -q -m "not slow" "$@"
+  echo "# bench_ckpt_time --smoke (save pipeline exercised end to end)"
+  python benchmarks/bench_ckpt_time.py --smoke
+  exit 0
+fi
 exec python -m pytest -x -q "$@"

@@ -5,6 +5,12 @@ enqueues chunk writes after the caller has snapshotted device arrays to host
 (the snapshot is the only synchronous cost on the training thread).  zstd
 compression and file IO release the GIL, so writes overlap training compute.
 
+With the fingerprint save path the overlap is a real pipeline: the training
+thread gathers unit N+1's dirty blocks (device compare + D2H) while the
+writer threads hash, encode, and write unit N's packet — the three stages
+run on different resources (device+PCIe vs CPU vs disk), so a save event's
+wall-clock approaches the slowest stage instead of the sum.
+
 Errors surface on ``wait()``/``drain()`` — a failed save must never be
 silently dropped (the manifest for that event is only committed after every
 chunk of the event has landed).
@@ -26,19 +32,29 @@ class PendingResult:
     """Return value of ``submit``: readable after ``drain()``/``wait()``.
 
     The content-addressed store only knows a chunk's digest once the writer
-    thread has hashed the payload, so the saver collects these and resolves
-    them into manifest entries after the drain barrier.
+    thread has hashed the payload (or its fingerprint table), so the saver
+    collects these and resolves them into manifest entries after the drain
+    barrier.  ``wait()``/``done()`` allow waiting on a single result
+    without draining the whole queue.
     """
-    __slots__ = ("_value", "_error", "_done")
+    __slots__ = ("_value", "_error", "_event")
 
     def __init__(self) -> None:
         self._value = None
         self._error: Optional[BaseException] = None
-        self._done = False
+        self._event = threading.Event()
 
-    def result(self):
-        if not self._done:
-            raise AsyncWriteError("result not ready; call drain() first")
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until this write finishes; True iff it did in time."""
+        return self._event.wait(timeout)
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._event.wait(timeout):
+            raise AsyncWriteError(
+                "result not ready; wait()/drain() the writer first")
         if self._error is not None:
             raise self._error
         return self._value
@@ -49,6 +65,12 @@ class AsyncWriter:
         self._q: "queue.Queue" = queue.Queue(maxsize=max_queue)
         self._errors: List[BaseException] = []
         self._err_lock = threading.Lock()
+        # Guards the open flag vs. close(): a submit that checked _open
+        # before close() flipped it must finish its enqueue before close()
+        # drains, or the item could land behind the shutdown sentinels and
+        # never run (its PendingResult would then never resolve).
+        self._state_lock = threading.Lock()
+        self._open = True
         self._threads = [
             threading.Thread(target=self._run, name=f"ckpt-writer-{i}",
                              daemon=True)
@@ -56,7 +78,6 @@ class AsyncWriter:
         ]
         for t in self._threads:
             t.start()
-        self._open = True
 
     def _run(self) -> None:
         while True:
@@ -72,15 +93,19 @@ class AsyncWriter:
                     with self._err_lock:
                         self._errors.append(e)
                 finally:
-                    pending._done = True
+                    pending._event.set()
             finally:
                 self._q.task_done()
 
     def submit(self, fn: Callable, *args, **kwargs) -> PendingResult:
-        if not self._open:
-            raise AsyncWriteError("writer is closed")
         pending = PendingResult()
-        self._q.put((fn, args, kwargs, pending))
+        # Enqueue under the state lock: workers never take this lock, so a
+        # full queue still drains while we hold it, and close() cannot
+        # interleave between the open-check and the put.
+        with self._state_lock:
+            if not self._open:
+                raise AsyncWriteError("writer is closed")
+            self._q.put((fn, args, kwargs, pending))
         return pending
 
     def drain(self) -> None:
@@ -93,10 +118,15 @@ class AsyncWriter:
                     f"{len(errs)} checkpoint write(s) failed: {errs[0]!r}"
                 ) from errs[0]
 
+    def wait(self) -> None:
+        """Alias of ``drain()`` — the barrier the docstrings promise."""
+        self.drain()
+
     def close(self) -> None:
-        if not self._open:
-            return
-        self._open = False
+        with self._state_lock:
+            if not self._open:
+                return
+            self._open = False
         self._q.join()
         for _ in self._threads:
             self._q.put(_SENTINEL)

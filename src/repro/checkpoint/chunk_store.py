@@ -14,7 +14,7 @@ re-saved-but-unchanged unit therefore costs a host snapshot and a hash — no
 write, no extra disk (GoCkpt/DataStates-style inter-step dedup composed
 with the paper's layer selectivity).
 
-An object file is a small msgpack envelope holding either:
+An object file is a small msgpack envelope holding one of:
 
 - ``full``: the chunk blob encoded with the store codec, or
 - ``delta``: a sparse XOR diff (``compression.delta_encode``) of this
@@ -24,6 +24,19 @@ An object file is a small msgpack envelope holding either:
   (writes a full object again) when the diff stops being materially
   smaller than a full write OR after ``rebase_every`` consecutive deltas,
   bounding how many checkpoints one base object can underpin.
+- ``block_delta``: the fingerprint pipeline's v2 format — only the blocks
+  the device-side fingerprint compare flagged dirty, patched onto a full
+  base on read.  Written via ``write_fp`` without the store (or saver)
+  ever materializing the full canonical payload.
+
+Objects written by ``write`` are addressed by the blake2b of their
+canonical payload; objects written by ``write_fp`` are addressed by the
+blake2b of their **fingerprint table** (the envelope carries the table
+under ``"fp"``, which is also how readers tell the schemes apart and how
+verification works: reads of fp-addressed objects recompute the table from
+the reconstructed tensors with the numpy oracle).  The two schemes share
+one digest namespace and one refcount/GC/manifest machinery; they simply
+never dedup against each other.
 
 Lifetimes are refcounted: each committed manifest holds one reference per
 entry digest (plus one per delta base), and ``gc_objects`` deletes objects
@@ -49,6 +62,7 @@ from typing import Any, Dict, Iterable, Iterator, Optional, Tuple
 import msgpack
 
 from repro.checkpoint import compression, serial
+from repro.checkpoint import fingerprint as fputil
 
 PyTree = Any
 
@@ -69,6 +83,14 @@ CANON_CACHE_BYTES = 64 << 20
 
 def content_digest(blob: bytes) -> str:
     return hashlib.blake2b(blob, digest_size=DIGEST_BYTES).hexdigest()
+
+
+def _ref_stored(fmt: str) -> str:
+    """Envelope format -> ChunkRef.stored: manifests only distinguish
+    full vs delta (for refcounting bases and delta-run replay); the
+    concrete delta encoding (XOR v1 vs block-sparse v2) lives in the
+    envelope."""
+    return "full" if fmt == "full" else "delta"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,6 +145,9 @@ class ChunkStore:
         self._info: Dict[str, Dict[str, Any]] = {}
         # (unit, kind) -> consecutive deltas written since the last full
         self._delta_runs: Dict[Tuple[str, str], int] = {}
+        # digest -> unpacked fingerprint table for fp-addressed objects
+        # (populated on write_fp; lazily loaded from envelopes after restart)
+        self._fp_tables: Dict[str, list] = {}
         # digest -> Event for writes in flight: concurrent writer threads
         # persisting bitwise-identical units dedup instead of racing
         self._inflight: Dict[str, threading.Event] = {}
@@ -157,7 +182,7 @@ class ChunkStore:
         with self._lock:
             self.stats = {"written_bytes": 0, "logical_bytes": 0,
                           "dedup_hits": 0, "delta_chunks": 0,
-                          "full_chunks": 0}
+                          "full_chunks": 0, "hashed_bytes": 0}
 
     def _bump(self, **kw: int) -> None:
         with self._lock:
@@ -203,6 +228,7 @@ class ChunkStore:
         with self._lock:
             self._info[digest] = {"stored": env.get("format"),
                                   "base": env.get("base"),
+                                  "codec": env.get("codec"),
                                   "nbytes": len(blob)}
         return env
 
@@ -222,16 +248,24 @@ class ChunkStore:
         with self._lock:
             self._info[digest] = {"stored": env["format"],
                                   "base": env.get("base"),
+                                  "codec": env.get("codec"),
                                   "nbytes": len(blob)}
         return len(blob)
 
     def read_canonical(self, digest: str, *, verify: bool = True) -> bytes:
-        """The codec='none' chunk blob for ``digest``, resolving deltas."""
+        """The codec='none' chunk blob for ``digest``, resolving deltas.
+
+        fp-addressed objects reconstruct their tree first (their digest is
+        over the fingerprint table, not the canonical payload — the table
+        recompute inside ``_tree_from_fp_env`` is their integrity check)."""
         cached = self._canon_cached(digest)
         if cached is not None:
             return cached
         env = self._read_envelope(digest)
-        if env.get("format") == "full":
+        if env.get("fp") is not None:
+            tree, _ = self._tree_from_fp_env(digest, env, verify=verify)
+            canon = serial.encode_chunk(tree, meta={}, codec="none")
+        elif env.get("format") == "full":
             if env["codec"] == "none":
                 canon = env["payload"]
             else:
@@ -244,10 +278,57 @@ class ChunkStore:
         else:
             raise serial.ChunkCorruption(
                 f"unknown object format {env.get('format')!r}")
-        if verify and content_digest(canon) != digest:
+        if (verify and env.get("fp") is None
+                and content_digest(canon) != digest):
             raise serial.ChunkCorruption(f"digest mismatch for {digest}")
         self._canon_remember(digest, canon)
         return canon
+
+    def _tree_from_fp_env(self, digest: str, env: Dict[str, Any],
+                          *, verify: bool) -> Tuple[PyTree, Dict]:
+        """Reconstruct (tree, meta) of an fp-addressed object and verify it
+        by recomputing the fingerprint table with the host oracle."""
+        fmt = env.get("format")
+        if fmt == "full":
+            tree, meta = serial.decode_chunk(env["payload"], verify=verify)
+        elif fmt == "block_delta":
+            base_tree, _ = self.read_digest(env["base"], verify=verify)
+            try:
+                records = compression.block_delta_decode(env["payload"])
+                tree = fputil.patch_tree(base_tree, records)
+            except (serial.ChunkCorruption, compression.CodecUnavailable):
+                raise
+            except Exception as e:  # noqa: BLE001
+                raise serial.ChunkCorruption(
+                    f"unreadable block-delta object {digest}: {e!r}") from e
+            meta = {}
+        else:
+            raise serial.ChunkCorruption(
+                f"unknown object format {fmt!r}")
+        if verify:
+            try:
+                tbl = fputil.unpack_table(env["fp"])
+            except ValueError as e:
+                raise serial.ChunkCorruption(
+                    f"bad fingerprint table for {digest}: {e!r}") from e
+            if fputil.fp_digest(env["fp"]) != digest:
+                raise serial.ChunkCorruption(
+                    f"fingerprint digest mismatch for {digest}")
+            # Lossy-coded full objects intentionally decode to different
+            # tensors than were fingerprinted (the table describes the
+            # pre-quantization content, which is what dedup must compare
+            # against) — the per-tensor crc in decode_chunk is their
+            # integrity check instead.
+            if fmt != "full" or env.get("codec") in ("none", "zstd"):
+                bb = (tbl[0].block_bytes if tbl
+                      else fputil.DEFAULT_BLOCK_BYTES)
+                if (fputil.pack_table(fputil.table_of_tree(tree, bb))
+                        != env["fp"]):
+                    raise serial.ChunkCorruption(
+                        f"fingerprint mismatch for reconstructed {digest}")
+            with self._lock:
+                self._fp_tables[digest] = tbl
+        return tree, meta
 
     def _apply_delta(self, digest: str, env: Dict[str, Any],
                      base: bytes) -> bytes:
@@ -269,6 +350,8 @@ class ChunkStore:
     def read_digest(self, digest: str, *, verify: bool = True
                     ) -> Tuple[PyTree, Dict]:
         env = self._read_envelope(digest)
+        if env.get("fp") is not None:
+            return self._tree_from_fp_env(digest, env, verify=verify)
         if env.get("format") == "full":
             return serial.decode_chunk(env["payload"], verify=verify)
         if env.get("format") != "delta":
@@ -307,43 +390,15 @@ class ChunkStore:
         codec = compression.resolve_codec(codec or self.codec)
         canon = serial.encode_chunk(tree, meta={}, codec="none")
         digest = content_digest(canon)
-        self._bump(logical_bytes=len(canon))
+        self._bump(logical_bytes=len(canon), hashed_bytes=len(canon))
 
-        # Claim the digest, or wait for a concurrent writer persisting the
-        # same content (bitwise-identical units in one event) and dedup.
-        claim: Optional[threading.Event] = None
-        while True:
-            if self.has(digest):
-                # Dedup hit: the exact content is already stored (this
-                # event or a previous one) — cost was a hash, not a write.
-                if prev_ref is not None and prev_ref.digest == digest:
-                    info = {"stored": prev_ref.stored,
-                            "base": prev_ref.delta_base,
-                            "nbytes": prev_ref.nbytes}
-                    with self._lock:
-                        self._info.setdefault(digest, dict(info))
-                else:
-                    # Rare path (cross-unit dedup or content reverting to
-                    # an older digest) with a cold info cache: reads the
-                    # object envelope once to learn stored/base/nbytes —
-                    # the manifest needs them to pin delta bases — then
-                    # stays cached for subsequent hits.
-                    info = self.object_info(digest)
-                self._canon_remember(digest, canon)  # likely a future base
-                self._bump(dedup_hits=1)
-                return ChunkRef(step=step, unit=unit, kind=kind,
-                                relpath=self.object_relpath(digest),
-                                nbytes=info["nbytes"], digest=digest,
-                                stored=info["stored"],
-                                delta_base=info["base"])
-            with self._lock:
-                other = self._inflight.get(digest)
-                if other is None:
-                    claim = self._inflight[digest] = threading.Event()
-            if claim is not None:
-                break
-            other.wait()  # then loop: has(digest) is now true (or retry)
-
+        claim = self._claim(digest)
+        if claim is None:
+            # Dedup hit: the exact content is already stored (this event
+            # or a previous one) — cost was a hash, not a write.
+            self._canon_remember(digest, canon)  # likely a future base
+            return self._dedup_ref(step, unit, kind, digest,
+                                   prev_ref=prev_ref)
         try:
             return self._write_new(step, unit, kind, tree, canon, digest,
                                    codec, delta_base)
@@ -351,6 +406,43 @@ class ChunkStore:
             with self._lock:
                 self._inflight.pop(digest, None)
             claim.set()
+
+    def _claim(self, digest: str) -> Optional[threading.Event]:
+        """Claim the right to write ``digest``, or return None when the
+        object already exists (dedup).  Concurrent writers persisting the
+        same content wait for the in-flight claim instead of racing."""
+        while True:
+            if self.has(digest):
+                return None
+            with self._lock:
+                other = self._inflight.get(digest)
+                if other is None:
+                    claim = self._inflight[digest] = threading.Event()
+                    return claim
+            other.wait()  # then loop: has(digest) is now true (or retry)
+
+    def _dedup_ref(self, step: int, unit: str, kind: str, digest: str,
+                   *, prev_ref: Optional[ChunkRef] = None) -> ChunkRef:
+        """ChunkRef for a dedup hit.  ``prev_ref`` (the unit's previous
+        manifest entry) supplies stored/base/nbytes without the
+        object-envelope disk read the cold-cache path needs."""
+        if prev_ref is not None and prev_ref.digest == digest:
+            info = {"stored": prev_ref.stored, "base": prev_ref.delta_base,
+                    "nbytes": prev_ref.nbytes}
+            with self._lock:
+                self._info.setdefault(digest, dict(info))
+        else:
+            # Rare path (cross-unit dedup or content reverting to an older
+            # digest) with a cold info cache: reads the object envelope
+            # once to learn stored/base/nbytes — the manifest needs them to
+            # pin delta bases — then stays cached for subsequent hits.
+            info = self.object_info(digest)
+        self._bump(dedup_hits=1)
+        return ChunkRef(step=step, unit=unit, kind=kind,
+                        relpath=self.object_relpath(digest),
+                        nbytes=info["nbytes"], digest=digest,
+                        stored=_ref_stored(info["stored"]),
+                        delta_base=info["base"])
 
     def _write_new(self, step: int, unit: str, kind: str, tree: PyTree,
                    canon: bytes, digest: str, codec: str,
@@ -370,8 +462,8 @@ class ChunkStore:
             try:
                 base_digest = delta_base
                 info = self.object_info(base_digest)
-                if info["stored"] == "delta":
-                    base_digest = info["base"]
+                if info["stored"] != "full" and info["base"]:
+                    base_digest = info["base"]  # delta or block_delta
                 base_canon = self.read_canonical(base_digest)
             except (FileNotFoundError, serial.ChunkCorruption,
                     compression.CodecUnavailable):
@@ -405,6 +497,109 @@ class ChunkStore:
         return ChunkRef(step=step, unit=unit, kind=kind,
                         relpath=self.object_relpath(digest), nbytes=nbytes,
                         digest=digest, stored="full", delta_base=None)
+
+    # ---- fingerprint-pipeline io ----
+    def write_fp(self, step: int, unit: str, kind: str,
+                 packet: "fputil.FingerprintPacket",
+                 *, prev_ref: Optional[ChunkRef] = None) -> ChunkRef:
+        """Persist a unit from a fingerprint packet (see saver): either a
+        full object rebuilt from raw leaf bytes, or a block-sparse delta
+        holding only the dirty blocks — the full canonical payload is
+        never materialized on the delta path.  The saver makes the
+        full-vs-delta decision (it owns the device-side dirty information);
+        this method handles dedup, framing, atomic write, and delta-run
+        accounting."""
+        digest = packet.digest
+        self._bump(logical_bytes=packet.logical_bytes,
+                   hashed_bytes=len(packet.table))
+        claim = self._claim(digest)
+        if claim is None:
+            return self._dedup_ref(step, unit, kind, digest,
+                                   prev_ref=prev_ref)
+        try:
+            table = fputil.unpack_table(packet.table)
+            if packet.full:
+                tree = fputil.rebuild_full(packet.leaves)
+                payload = serial.encode_chunk(tree, meta={}, codec=self.codec)
+                env = {"v": OBJECT_VERSION, "format": "full",
+                       "codec": self.codec, "base": None, "payload": payload,
+                       "fp": packet.table}
+                nbytes = self._write_object(digest, env)
+                with self._lock:
+                    self._delta_runs[(unit, kind)] = 0
+                    self._fp_tables[digest] = table
+                self._bump(written_bytes=nbytes, full_chunks=1)
+                return ChunkRef(step=step, unit=unit, kind=kind,
+                                relpath=self.object_relpath(digest),
+                                nbytes=nbytes, digest=digest, stored="full",
+                                delta_base=None)
+            assert packet.base_digest, "block delta requires a base"
+            records = [{"name": l.path, "shape": list(l.shape),
+                        "dtype": l.dtype, "nbytes": l.nbytes,
+                        "block": l.block_bytes,
+                        "idx": [] if l.idx is None else list(map(int, l.idx)),
+                        "data": l.data}
+                       for l in packet.leaves if l.idx is None or len(l.idx)]
+            blob = compression.block_delta_encode(
+                records, compress="zstd" if self.codec == "zstd" else "none")
+            env = {"v": OBJECT_VERSION, "format": "block_delta",
+                   "base": packet.base_digest, "payload": blob,
+                   "fp": packet.table}
+            nbytes = self._write_object(digest, env)
+            with self._lock:
+                run = self._delta_runs.get((unit, kind), 0)
+                self._delta_runs[(unit, kind)] = run + 1
+                self._fp_tables[digest] = table
+            self._bump(written_bytes=nbytes, delta_chunks=1)
+            return ChunkRef(step=step, unit=unit, kind=kind,
+                            relpath=self.object_relpath(digest),
+                            nbytes=nbytes, digest=digest, stored="delta",
+                            delta_base=packet.base_digest)
+        finally:
+            with self._lock:
+                self._inflight.pop(digest, None)
+            claim.set()
+
+    def load_fp_table(self, digest: str) -> Optional[list]:
+        """The fingerprint table of an fp-addressed object (None for
+        canonical-digest objects).  Cached in memory: after a process
+        restart the first save per unit pays one envelope read to recover
+        the reference vector — the same cold-cache cost the canonical
+        pipeline pays for its delta base."""
+        with self._lock:
+            tbl = self._fp_tables.get(digest)
+        if tbl is not None:
+            return tbl
+        if not self.has(digest):
+            return None
+        try:
+            env = self._read_envelope(digest)
+        except serial.ChunkCorruption:
+            return None
+        blob = env.get("fp")
+        if blob is None:
+            return None
+        try:
+            tbl = fputil.unpack_table(blob)
+        except ValueError:
+            return None
+        with self._lock:
+            self._fp_tables[digest] = tbl
+        return tbl
+
+    def delta_run(self, unit: str, kind: str) -> int:
+        """Consecutive delta objects written for this unit since its last
+        full — the saver consults it to force periodic rebases."""
+        with self._lock:
+            return self._delta_runs.get((unit, kind), 0)
+
+    def note_dedup(self, step: int, unit: str, kind: str, digest: str,
+                   *, prev_ref: Optional[ChunkRef] = None,
+                   logical_bytes: int = 0) -> ChunkRef:
+        """Account a saver-detected dedup hit (fingerprints matched on
+        device, so no payload was transferred or hashed)."""
+        self._bump(logical_bytes=logical_bytes)
+        return self._dedup_ref(step, unit, kind, digest, prev_ref=prev_ref)
 
     def seed_delta_runs(self, runs: Dict[Tuple[str, str], int]) -> None:
         """Resume per-unit consecutive-delta counts (derived from the
@@ -459,6 +654,7 @@ class ChunkStore:
             with self._lock:
                 self._info.pop(digest, None)
                 self._refcounts.pop(digest, None)
+                self._fp_tables.pop(digest, None)
                 old = self._canon_cache.pop(digest, None)
                 if old is not None:
                     self._canon_cache_bytes -= len(old)

@@ -29,7 +29,7 @@ chunk blobs):
 from __future__ import annotations
 
 import threading
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import msgpack
 import numpy as np
@@ -93,6 +93,16 @@ def _to_bytes(arr: np.ndarray) -> bytes:
     return np.ascontiguousarray(arr).tobytes()
 
 
+def np_dtype(dtype: str) -> np.dtype:
+    """Serialized dtype string -> numpy dtype (ml_dtypes extras included).
+    The single mapping both the codec decoder and the fingerprint rebuild
+    path use — extend here when the serializer learns a new dtype."""
+    if dtype == "bfloat16":
+        import ml_dtypes  # jax dependency; provides bfloat16 for numpy
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(dtype)
+
+
 def quantize_int8(arr: np.ndarray, block: int = QUANT_BLOCK
                   ) -> Tuple[np.ndarray, np.ndarray]:
     """Blockwise symmetric quantization of the flattened array.
@@ -148,14 +158,12 @@ def encode(arr: np.ndarray, codec: str) -> Tuple[bytes, str, Optional[Dict]]:
 
 def decode(payload: bytes, codec: str, *, shape, dtype,
            extra: Optional[Dict] = None) -> np.ndarray:
-    import ml_dtypes  # jax dependency; provides bfloat16 for numpy
-
-    np_dtype = np.dtype(dtype) if dtype != "bfloat16" else ml_dtypes.bfloat16
+    out_dtype = np_dtype(dtype)
     if codec == "none":
-        return np.frombuffer(payload, dtype=np_dtype).reshape(shape).copy()
+        return np.frombuffer(payload, dtype=out_dtype).reshape(shape).copy()
     if codec == "zstd":
         raw = _dctx().decompress(payload)
-        return np.frombuffer(raw, dtype=np_dtype).reshape(shape).copy()
+        return np.frombuffer(raw, dtype=out_dtype).reshape(shape).copy()
     if codec == "int8":
         # chunks written before the optional-zstd split always compressed
         comp = (extra or {}).get("comp", "zstd")
@@ -165,7 +173,7 @@ def decode(payload: bytes, codec: str, *, shape, dtype,
         scales = np.frombuffer(raw[n_q:n_q + 4 * n_scale], dtype=np.float32)
         size = int(np.prod(shape)) if shape else 1
         out = dequantize_int8(q, scales, size, extra.get("block", QUANT_BLOCK))
-        return out.astype(np_dtype).reshape(shape)
+        return out.astype(out_dtype).reshape(shape)
     raise ValueError(f"unknown codec {codec!r}")
 
 
@@ -227,3 +235,49 @@ def delta_decode(blob: bytes, base: bytes) -> bytes:
 
 def is_delta(blob: bytes) -> bool:
     return blob[:4] == DELTA_MAGIC
+
+
+# -------------------------------------------------- block-sparse delta (v2)
+# Written by the fingerprint save pipeline: instead of XOR-diffing two full
+# canonical payloads on the host (which requires transferring and hashing
+# both), the payload holds only the blocks the device-side fingerprint
+# compare flagged dirty.  Readable alongside the v1 XOR format — the object
+# envelope's "format" field selects the decoder.
+BLOCK_DELTA_MAGIC = b"BD02"
+
+
+def block_delta_encode(records: List[Dict], *,
+                       compress: Optional[str] = None) -> bytes:
+    """Frame per-leaf dirty-block records as a v2 block-sparse delta blob.
+
+    Each record: {"name", "shape", "dtype", "nbytes", "block",
+    "idx": [block indices], "data": concatenated block-sized chunks}.
+    Blocks are full ``block``-sized slices (the tail block zero-padded,
+    exactly as fingerprinted), so decode is pure slice assignment.
+    """
+    rows = [[r["name"], list(r["shape"]), r["dtype"], int(r["nbytes"]),
+             int(r["block"]), [int(i) for i in r["idx"]], r["data"]]
+            for r in records]
+    body = msgpack.packb({"v": 1, "tensors": rows}, use_bin_type=True)
+    comp = resolve_codec(compress)
+    if comp == "zstd":
+        return BLOCK_DELTA_MAGIC + b"\x01" + _cctx().compress(body)
+    return BLOCK_DELTA_MAGIC + b"\x00" + body
+
+
+def block_delta_decode(blob: bytes) -> List[Dict]:
+    if blob[:4] != BLOCK_DELTA_MAGIC:
+        raise ValueError("not a block-delta blob (bad magic)")
+    body = blob[5:]
+    if blob[4] == 1:
+        body = _dctx().decompress(body)
+    d = msgpack.unpackb(body, raw=False)
+    if not isinstance(d, dict) or d.get("v") != 1:
+        raise ValueError("bad block-delta body")
+    return [{"name": name, "shape": shape, "dtype": dtype, "nbytes": nbytes,
+             "block": block, "idx": idx, "data": data}
+            for name, shape, dtype, nbytes, block, idx, data in d["tensors"]]
+
+
+def is_block_delta(blob: bytes) -> bool:
+    return blob[:4] == BLOCK_DELTA_MAGIC

@@ -1,19 +1,27 @@
 """CheckpointManager — LLMTailor's selective, layer-wise checkpoint system.
 
-Save path:
+Save path (fingerprint pipeline, the default — see docs/perf.md):
   1. the policy picks this event's layer units,
-  2. each selected unit's weights (bf16) and optimizer group content
-     (master/m/v, fp32) are snapshotted to host (jax.device_get) — the only
-     synchronous cost — and handed to the async writer,
-  3. the writer hashes each unit's canonical payload: unchanged content is
-     a dedup hit (no write), drifted content lands as a sparse delta
-     against its previous full chunk when that is smaller, a full object
-     otherwise,
+  2. for each selected unit, a Pallas kernel reduces the device-resident
+     tensors to per-64KiB-block checksum pairs (~0.02% of the data) and
+     compares them on device against the unit's previous vector:
+     - unchanged unit: resolves as a dedup hit by its stored digest with
+       ZERO payload device->host transfer and zero payload hashing,
+     - drifted unit: only the dirty blocks are gathered to host; the full
+       payload moves only when no usable base exists (first event, rebase,
+       or dirty fraction too high),
+  3. the writer threads turn each packet into an object — a block-sparse
+     delta (dirty blocks only) or a full chunk — while the training thread
+     is already fingerprinting/gathering the next unit (pipeline overlap),
   4. after all chunks land, the manifest commits: every unit maps to the
      digest of the newest chunk holding it (units skipped this event keep
      their previous refs — the implicit Frankenstein merge),
   5. refcounted GC: manifests beyond the retention window release their
      references and objects with no remaining references are deleted.
+
+``fingerprint=False`` selects the legacy full-gather path: device_get of
+the whole unit, blake2b over the canonical payload, XOR delta in the
+store.  Both paths' objects coexist in one store and restore uniformly.
 
 Restore path (= the paper's merge, done lazily):
   read the manifest (latest or pinned), stream each unit from its digest
@@ -33,12 +41,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import fingerprint as fputil
 from repro.checkpoint.async_io import AsyncWriter, PendingResult
 from repro.checkpoint.chunk_store import ChunkRef, ChunkStore
-from repro.checkpoint.serial import ChunkCorruption
+from repro.checkpoint.serial import ChunkCorruption, flatten_with_paths
 from repro.core.layer_registry import OPT_KINDS, LayerRegistry
 from repro.core.manifest import Manifest, ManifestStore
 from repro.core.policies import CheckpointPolicy, PolicyContext
+from repro.kernels import block_fp as bfp
 
 log = logging.getLogger("repro.checkpoint")
 
@@ -61,6 +71,9 @@ class CheckpointManager:
         keep: int = 8,
         writer_threads: int = 2,
         delta: bool = True,
+        fingerprint: bool = True,
+        fp_block_bytes: int = fputil.DEFAULT_BLOCK_BYTES,
+        fp_max_dirty_frac: float = 0.5,
     ):
         self.root = Path(root)
         self.registry = registry
@@ -69,9 +82,19 @@ class CheckpointManager:
         self.manifests = ManifestStore(self.root)
         self.keep = keep
         self.async_save = async_save
+        self.fingerprint = fingerprint
+        self.fp_block_bytes = fp_block_bytes
+        # Above this dirty fraction a block-sparse delta stops paying (the
+        # index overhead plus a near-full payload) — gather everything and
+        # write a full object instead.
+        self.fp_max_dirty_frac = fp_max_dirty_frac
         self.writer = AsyncWriter(writer_threads) if async_save else None
         self._event_index = self._infer_event_index()
         self._rebuild_refcounts()
+        # (unit, kind) -> device fingerprint vector of the content behind
+        # the last COMMITTED manifest entry (advanced only after a commit,
+        # so a failed event can never make a stale entry look current).
+        self._fp_refs: Dict[Tuple[str, str], Any] = {}
         self.last_save_stats: Dict[str, Any] = {}
 
     def _infer_event_index(self) -> int:
@@ -140,25 +163,45 @@ class CheckpointManager:
             return prev.entries.get(name, {}).get(kind)
 
         # Snapshot selected units to host (sync) and enqueue writes (async).
+        # The fingerprint path replaces the full device_get with a device
+        # compare + dirty-block gather; while the writer threads encode and
+        # write unit N's packet, this loop is already fingerprinting and
+        # gathering unit N+1 — gather, encode, and write are pipelined
+        # across device/PCIe, CPU, and disk.
         self.store.reset_stats()
-        snap_bytes = 0
+        d2h_bytes = 0
+        blocks_moved = 0
+        blocks_total = 0
         pending: Dict[Tuple[str, str], PendingResult] = {}
+        new_fps: Dict[Tuple[str, str], Any] = {}
         for name in selected:
-            w = jax.device_get(
-                self.registry.extract_unit(state["params"], name))
-            o = jax.device_get(
-                self.registry.extract_opt_unit(state["opt"], name))
-            snap_bytes += sum(np.asarray(x).nbytes
-                              for x in jax.tree.leaves((w, o)))
-            for kind, tree in (("weights", w), ("opt", o)):
+            for kind in ("weights", "opt"):
+                tree = (self.registry.extract_unit(state["params"], name)
+                        if kind == "weights" else
+                        self.registry.extract_opt_unit(state["opt"], name))
                 pref = prev_entry(name, kind)
-                if self.writer is not None:
-                    pending[(name, kind)] = self.writer.submit(
-                        self.store.write, step, name, kind, tree,
-                        prev_ref=pref)
+                if not self.fingerprint:
+                    host = jax.device_get(tree)
+                    d2h_bytes += sum(np.asarray(x).nbytes
+                                     for x in jax.tree.leaves(host))
+                    if self.writer is not None:
+                        pending[(name, kind)] = self.writer.submit(
+                            self.store.write, step, name, kind, host,
+                            prev_ref=pref)
+                    else:
+                        entries.setdefault(name, {})[kind] = self.store.write(
+                            step, name, kind, host, prev_ref=pref)
+                    continue
+                res, ustat, cur = self._save_unit_fp(step, name, kind,
+                                                     tree, pref)
+                d2h_bytes += ustat["d2h_bytes"]
+                blocks_moved += ustat["blocks_moved"]
+                blocks_total += ustat["blocks_total"]
+                new_fps[(name, kind)] = cur
+                if isinstance(res, PendingResult):
+                    pending[(name, kind)] = res
                 else:
-                    entries.setdefault(name, {})[kind] = self.store.write(
-                        step, name, kind, tree, prev_ref=pref)
+                    entries.setdefault(name, {})[kind] = res
         t_snapshot = time.time() - t0
 
         # All chunks must land before the manifest commits.
@@ -178,15 +221,26 @@ class CheckpointManager:
         if replaced is not None:
             self.store.decref(replaced.referenced_digests().elements())
         self._event_index += 1
+        # The commit is durable: only now may the fingerprint references
+        # advance (a failed write above raised before reaching here).
+        self._fp_refs.update(new_fps)
         self.gc()
         io = dict(self.store.stats)
+        if blocks_total:
+            dirty_frac = blocks_moved / blocks_total
+        else:
+            dirty_frac = 1.0 if not self.fingerprint else 0.0
         self.last_save_stats = {
             "step": step,
             "selected_units": len(selected),
             "total_units": len(self.registry.units),
-            "snapshot_bytes": snap_bytes,
+            "snapshot_bytes": d2h_bytes,
             "snapshot_seconds": t_snapshot,
             "total_seconds": time.time() - t0,
+            # transfer/hash accounting for this event (the fingerprint win)
+            "d2h_bytes": d2h_bytes,
+            "hashed_bytes": io["hashed_bytes"],
+            "dirty_block_frac": dirty_frac,
             # dedup/delta accounting for this event
             "logical_bytes": io["logical_bytes"],
             "written_bytes": io["written_bytes"],
@@ -195,6 +249,119 @@ class CheckpointManager:
             "full_chunks": io["full_chunks"],
         }
         return manifest
+
+    def _save_unit_fp(self, step: int, name: str, kind: str, tree: Any,
+                      pref: Optional[ChunkRef]):
+        """Fingerprint save path for one (unit, kind).
+
+        Returns ``(ref_or_pending, stats, cur_fp)`` where stats counts the
+        payload bytes/blocks that actually crossed device->host.  The
+        fingerprint vectors themselves (~0.02% of the data) are not
+        counted as payload."""
+        bb = self.fp_block_bytes
+        cur = bfp.fingerprint_tree(tree, block_bytes=bb)
+        nb_total = sum(l.n_blocks for l in cur)
+        logical = sum(l.nbytes for l in cur)
+        stats = {"d2h_bytes": 0, "blocks_moved": 0, "blocks_total": nb_total}
+
+        # Reference vector for the content behind the previous manifest
+        # entry: device-resident from the last commit, or (after a process
+        # restart) the table stored in that object's envelope.
+        ref_fp = self._fp_refs.get((name, kind))
+        if ref_fp is None and pref is not None and pref.digest:
+            ref_fp = self.store.load_fp_table(pref.digest)
+        if (ref_fp is not None and pref is not None and pref.digest
+                and bfp.leaves_match(cur, ref_fp)):
+            # Unchanged: dedup by the stored digest — no payload D2H, no
+            # payload hash, no write.
+            return (self.store.note_dedup(step, name, kind, pref.digest,
+                                          prev_ref=pref,
+                                          logical_bytes=logical),
+                    stats, cur)
+
+        host = bfp.tree_to_host(cur)
+        tblob = fputil.pack_table(host)
+        digest = fputil.fp_digest(tblob)
+        if self.store.has(digest):
+            # Content reverted to (or collided with) an object already on
+            # disk: still zero payload transfer.
+            return (self.store.note_dedup(step, name, kind, digest,
+                                          prev_ref=pref,
+                                          logical_bytes=logical),
+                    stats, cur)
+
+        # Delta decision (the saver owns it: only it sees the device-side
+        # dirty information).  The base is the previous entry's full
+        # object, exactly like the v1 XOR chain, and the same rebase_every
+        # bound forces periodic fulls.
+        flat = flatten_with_paths(tree)
+        # Lossy store codecs are excluded (exactly like the v1 XOR chain):
+        # a block delta patches exact bytes onto its base, which a lossy
+        # base cannot provide.
+        use_delta = (self.store.delta and pref is not None
+                     and bool(pref.digest)
+                     and self.store.codec in ("none", "zstd")
+                     and self.store.delta_run(name, kind)
+                     < self.store.rebase_every)
+        base_digest = None
+        dirty = None
+        if use_delta:
+            base_digest = (pref.digest if pref.stored == "full"
+                           else pref.delta_base)
+            base_tbl = (self.store.load_fp_table(base_digest)
+                        if base_digest else None)
+            if (base_tbl is None or len(base_tbl) != len(host)
+                    or not all(h.meta_matches(b)
+                               for h, b in zip(host, base_tbl))):
+                use_delta = False  # no comparable base: write full
+            elif (self.store.object_info(base_digest).get("codec")
+                    not in (None, "none", "zstd")):
+                use_delta = False  # lossy base cannot anchor exact patches
+            else:
+                dirty = [bfp.dirty_block_indices(h, b)
+                         for h, b in zip(host, base_tbl)]
+                if (sum(len(d) for d in dirty)
+                        > self.fp_max_dirty_frac * nb_total):
+                    use_delta = False
+        # Enqueue all device-side gathers first, then one batched
+        # device_get for the whole unit — L leaves cost one D2H round
+        # trip, not L.
+        leaves = []
+        if use_delta:
+            gathered = [bfp.gather_blocks(jnp.asarray(arr), idx,
+                                          block_bytes=bb) if len(idx) else None
+                        for (_, arr), idx in zip(flat, dirty)]
+            gathered = jax.device_get(gathered)
+            for (path, _), leaf, idx, g in zip(flat, host, dirty, gathered):
+                data = b""
+                if g is not None:
+                    data = np.ascontiguousarray(g).tobytes()
+                    stats["d2h_bytes"] += len(data)
+                    stats["blocks_moved"] += len(idx)
+                leaves.append(fputil.LeafPayload(
+                    path=path, shape=leaf.shape, dtype=leaf.dtype,
+                    nbytes=leaf.nbytes, block_bytes=bb, idx=idx, data=data))
+            packet = fputil.FingerprintPacket(
+                digest=digest, table=tblob, leaves=leaves, full=False,
+                base_digest=base_digest, logical_bytes=logical)
+        else:
+            host_arrs = jax.device_get([arr for _, arr in flat])
+            for (path, _), leaf, arr in zip(flat, host, host_arrs):
+                data = np.ascontiguousarray(arr).tobytes()
+                stats["d2h_bytes"] += len(data)
+                leaves.append(fputil.LeafPayload(
+                    path=path, shape=leaf.shape, dtype=leaf.dtype,
+                    nbytes=leaf.nbytes, block_bytes=bb, idx=None, data=data))
+            stats["blocks_moved"] += nb_total
+            packet = fputil.FingerprintPacket(
+                digest=digest, table=tblob, leaves=leaves, full=True,
+                base_digest=None, logical_bytes=logical)
+        if self.writer is not None:
+            return (self.writer.submit(self.store.write_fp, step, name,
+                                       kind, packet, prev_ref=pref),
+                    stats, cur)
+        return (self.store.write_fp(step, name, kind, packet, prev_ref=pref),
+                stats, cur)
 
     # --------------------------------------------------------------- restore
     def _read_unit(self, manifest: Manifest, name: str, kind: str) -> PyTree:

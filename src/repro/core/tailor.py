@@ -88,8 +88,9 @@ def merge(recipe: Recipe, *, workers: int = 4,
                                  f"under {src_store.root}")
             written = 0
             info = src_store.object_info(digest)
-            if info["stored"] == "delta":
-                # the base is always a full object: one level of recursion
+            if info["stored"] != "full" and info["base"]:
+                # XOR or block-sparse delta: the base is always a full
+                # object, so this is one level of recursion
                 written += copy_object(src_store, info["base"])
             _atomic_write(out_store.object_path(digest),
                           src_path.read_bytes())

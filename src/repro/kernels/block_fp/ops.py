@@ -1,0 +1,175 @@
+"""jit'd wrappers: fingerprint arbitrary arrays/pytrees blockwise on device,
+compare fingerprint vectors, and gather only dirty blocks for the
+device->host transfer.
+
+``interpret=None`` (the default at every production call site) auto-selects
+the implementation: the Pallas kernel on TPU, an op-identical plain-jnp
+reduction elsewhere (same bitcasts, same wrap-around uint32 arithmetic, so
+the checksums are bit-identical — interpret-mode Pallas would only add
+compile latency on CPU).  Pass ``interpret=True`` to force the Pallas
+kernel through the interpreter (how the property tests exercise the kernel
+body off-TPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.block_fp.kernel import _words_view, fingerprint_blocks
+from repro.kernels.block_fp.ref import DEFAULT_BLOCK_BYTES, LeafFP
+
+_ROWS = 8  # blocks per grid tile: 8 x 64KiB = 512 KiB of VMEM per input tile
+
+
+def _impl(interpret: Optional[bool]) -> str:
+    if interpret is None:
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return "pallas-interpret" if interpret else "pallas"
+
+
+def _block_elems(dtype, block_bytes: int) -> int:
+    itemsize = jnp.dtype(dtype).itemsize
+    assert block_bytes % itemsize == 0, (block_bytes, itemsize)
+    return block_bytes // itemsize
+
+
+def _as_blocks(x: jax.Array, epb: int, pad_rows: bool) -> jax.Array:
+    """Flatten and zero-pad to a (n_blocks, epb) view (+ tile padding)."""
+    flat = x.reshape(-1)
+    nb = max(1, -(-flat.size // epb))
+    if pad_rows:
+        nb = -(-nb // _ROWS) * _ROWS
+    pad = nb * epb - flat.size
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(nb, epb)
+
+
+def _fingerprint_jnp(blocks: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """The kernel's math as one vectorized jnp reduction (non-TPU path)."""
+    words = _words_view(blocks)
+    weights = jax.lax.broadcasted_iota(
+        jnp.uint32, words.shape, dimension=1) + jnp.uint32(1)
+    # dtype pinned so the sums wrap mod 2^32 even under jax_enable_x64
+    fp1 = jnp.sum(words, axis=1, dtype=jnp.uint32)
+    fp2 = jnp.sum(words * weights, axis=1, dtype=jnp.uint32)
+    vals = blocks.astype(jnp.float32)
+    return jnp.stack([fp1, fp2], axis=1), jnp.sum(vals * vals, axis=1)
+
+
+def _fingerprint_one(x, *, block_bytes, n_blocks, impl):
+    if x.dtype == jnp.bool_:
+        x = x.astype(jnp.uint8)
+    epb = _block_elems(x.dtype, block_bytes)
+    if impl == "jnp":
+        fp, ss = _fingerprint_jnp(_as_blocks(x, epb, pad_rows=False))
+    else:
+        blocks = _as_blocks(x, epb, pad_rows=True)
+        fp, ss2 = fingerprint_blocks(blocks, rows_per_tile=_ROWS,
+                                     interpret=impl == "pallas-interpret")
+        ss = ss2[:, 0]
+    return fp[:n_blocks], ss[:n_blocks]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_bytes", "n_blocks", "impl"))
+def _fingerprint(x, *, block_bytes, n_blocks, impl):
+    return _fingerprint_one(x, block_bytes=block_bytes, n_blocks=n_blocks,
+                            impl=impl)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_bytes", "n_blocks", "impl"))
+def _fingerprint_many(xs, *, block_bytes, n_blocks, impl):
+    """All of a unit's leaves in ONE dispatch (the save-path hot loop runs
+    per unit, not per leaf — on small hosts the dispatch overhead would
+    otherwise dwarf the reduction itself)."""
+    out = [_fingerprint_one(x, block_bytes=block_bytes, n_blocks=nb,
+                            impl=impl)
+           for x, nb in zip(xs, n_blocks)]
+    return tuple(fp for fp, _ in out), tuple(ss for _, ss in out)
+
+
+@jax.jit
+def _all_fp_equal(cur_fps, ref_fps):
+    return jnp.all(jnp.stack([jnp.array_equal(c, r)
+                              for c, r in zip(cur_fps, ref_fps)]))
+
+
+def block_fingerprint(x: jax.Array, *,
+                      block_bytes: int = DEFAULT_BLOCK_BYTES,
+                      interpret: Optional[bool] = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Per-block (fp (nb, 2) uint32, sumsq (nb,) f32) of ``x``'s bytes."""
+    epb = _block_elems(x.dtype, block_bytes)
+    n_blocks = max(1, -(-x.size // epb))
+    return _fingerprint(x, block_bytes=block_bytes, n_blocks=n_blocks,
+                        impl=_impl(interpret))
+
+
+def fingerprint_tree(tree, *, block_bytes: int = DEFAULT_BLOCK_BYTES,
+                     interpret: Optional[bool] = None) -> List[LeafFP]:
+    """Device fingerprint vectors for every leaf, in canonical (sorted
+    path) order — the same order ``serial.flatten_with_paths`` serializes,
+    so host tables and device vectors line up index-for-index.  One jit
+    dispatch per tree; compilations are shared across units of the same
+    structure (every stacked block reuses one executable)."""
+    from repro.checkpoint.serial import flatten_with_paths
+
+    flat = flatten_with_paths(tree)
+    arrs = tuple(jnp.asarray(a) for _, a in flat)
+    n_blocks = tuple(
+        max(1, -(-a.size // _block_elems(a.dtype, block_bytes)))
+        for a in arrs)
+    fps, sss = _fingerprint_many(arrs, block_bytes=block_bytes,
+                                 n_blocks=n_blocks, impl=_impl(interpret))
+    return [LeafFP(path=path, shape=tuple(a.shape), dtype=str(a.dtype),
+                   nbytes=a.size * a.dtype.itemsize,
+                   block_bytes=block_bytes, fp=fp, sumsq=ss)
+            for (path, _), a, fp, ss in zip(flat, arrs, fps, sss)]
+
+
+def leaves_match(cur: Sequence[LeafFP], ref: Sequence[LeafFP]) -> bool:
+    """True iff every leaf's checksum vector is identical (device compare;
+    only the result bit crosses to host).  ``ref`` may hold device or host
+    (numpy) fingerprints — e.g. a table reloaded from an object envelope
+    after a restart."""
+    if len(cur) != len(ref):
+        return False
+    if not all(c.meta_matches(r) for c, r in zip(cur, ref)):
+        return False
+    return bool(_all_fp_equal(tuple(c.fp for c in cur),
+                              tuple(jnp.asarray(r.fp) for r in ref)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_bytes",))
+def _gather(x, idx, *, block_bytes):
+    if x.dtype == jnp.bool_:
+        x = x.astype(jnp.uint8)
+    blocks = _as_blocks(x, _block_elems(x.dtype, block_bytes),
+                        pad_rows=False)
+    return jnp.take(blocks, idx, axis=0)
+
+
+def gather_blocks(x: jax.Array, idx: np.ndarray, *,
+                  block_bytes: int = DEFAULT_BLOCK_BYTES) -> jax.Array:
+    """Device-side gather of the listed blocks: the only payload bytes the
+    dirty path ever moves device->host.  Returns (len(idx), elems_per_block)
+    in ``x``'s dtype (tail block zero-padded, as fingerprinted)."""
+    return _gather(x, jnp.asarray(idx, jnp.int32), block_bytes=block_bytes)
+
+
+def tree_to_host(leaves: Sequence[LeafFP]) -> List[LeafFP]:
+    """Materialize device fingerprint vectors as numpy (one tiny D2H)."""
+    out = []
+    for l in leaves:
+        out.append(LeafFP(path=l.path, shape=l.shape, dtype=l.dtype,
+                          nbytes=l.nbytes, block_bytes=l.block_bytes,
+                          fp=np.asarray(jax.device_get(l.fp)),
+                          sumsq=(None if l.sumsq is None
+                                 else np.asarray(jax.device_get(l.sumsq)))))
+    return out

@@ -69,6 +69,7 @@ def train(
     ckpt_interval: int = 50,
     ckpt_dir: str = "/tmp/repro_train",
     ckpt_async: bool = True,
+    ckpt_fingerprint: bool = True,
     codec: str = "auto",
     resume: bool = False,
     fail_at: Optional[int] = None,
@@ -84,7 +85,8 @@ def train(
     registry = LayerRegistry(model, weight_decay=tcfg.weight_decay)
     policy = make_policy(policy_name, model.layer_units())
     mgr = CheckpointManager(Path(ckpt_dir), registry, policy,
-                            codec=codec, async_save=ckpt_async)
+                            codec=codec, async_save=ckpt_async,
+                            fingerprint=ckpt_fingerprint)
     tracker = DeltaTracker(registry) if policy_name == "topk_delta" else None
 
     data = SyntheticTokens(vocab_size=cfg.vocab_size, batch=batch,
@@ -110,6 +112,9 @@ def train(
     losses = []
     t0 = time.time()
     save_seconds = 0.0
+    d2h_bytes = 0
+    hashed_bytes = 0
+    dirty_fracs = []
     for step in range(start, total_steps):
         raw = data.peek(step)
         data.state.step = step + 1
@@ -130,6 +135,10 @@ def train(
             if tracker:
                 tracker.mark_saved(state["params"], manifest.saved_units)
             save_seconds += time.time() - t_save
+            s = mgr.last_save_stats
+            d2h_bytes += s.get("d2h_bytes", 0)
+            hashed_bytes += s.get("hashed_bytes", 0)
+            dirty_fracs.append(s.get("dirty_block_frac", 1.0))
     total = time.time() - t0
 
     if log_csv:
@@ -147,6 +156,11 @@ def train(
         "save_seconds": save_seconds,
         "ckpt_time_fraction": save_seconds / total if total else 0.0,
         "ckpt_bytes": usage["total"],
+        # fingerprint-pipeline accounting, summed over save events
+        "d2h_bytes": d2h_bytes,
+        "hashed_bytes": hashed_bytes,
+        "dirty_block_frac": (float(np.mean(dirty_fracs))
+                             if dirty_fracs else 0.0),
         "steps": total_steps - start,
     }
 
@@ -168,6 +182,9 @@ def main() -> None:
     ap.add_argument("--codec", default="auto",
                     choices=["auto", "zstd", "none", "int8"])
     ap.add_argument("--sync-save", action="store_true")
+    ap.add_argument("--no-fingerprint", action="store_true",
+                    help="legacy full-gather save path (no device-side "
+                         "block fingerprinting)")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--fail-at", type=int)
     ap.add_argument("--seed", type=int, default=0)
@@ -178,6 +195,7 @@ def main() -> None:
                 batch=args.batch, seq_len=args.seq_len,
                 policy_name=args.policy, ckpt_interval=args.ckpt_interval,
                 ckpt_dir=args.ckpt_dir, ckpt_async=not args.sync_save,
+                ckpt_fingerprint=not args.no_fingerprint,
                 codec=args.codec, resume=args.resume, fail_at=args.fail_at,
                 seed=args.seed, log_csv=args.log_csv)
     out.pop("losses")

@@ -13,6 +13,13 @@ if str(SRC) not in sys.path:
 import pytest  # noqa: E402
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long end-to-end trainer/subprocess tests (excluded from the "
+        "smoke tier: scripts/check.sh smoke)")
+
+
 @pytest.fixture(scope="session")
 def rng():
     import jax

@@ -1,11 +1,17 @@
 """Integration: trainer + selective checkpointing + failure recovery
-(paper Tables 1/4 semantics at smoke scale)."""
+(paper Tables 1/4 semantics at smoke scale).
+
+Each end-to-end trainer run takes tens of seconds, so the whole module is
+marked ``slow`` (excluded from ``scripts/check.sh smoke``; still part of
+the tier-1 gate)."""
 import shutil
 
 import numpy as np
 import pytest
 
 from repro.launch.train import SimulatedFailure, train
+
+pytestmark = pytest.mark.slow
 
 BASE = dict(arch="llama3.2-3b", total_steps=48, batch=4, seq_len=32,
             ckpt_interval=16, seed=11, lr=3e-3)
