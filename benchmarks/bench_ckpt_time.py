@@ -16,6 +16,12 @@ full-gather path) for a direct before/after comparison, and a
 manager-level re-save probe measures the unchanged-content fast path
 (zero D2H, zero hash) against the full-gather equivalent.
 
+A restore probe (the other half of recovery cost) saves a short manifest
+chain under ``parity`` and times four arms of the streaming restore
+engine: pipelined vs strictly-sequential execution of the same read
+plan, and full-state vs params-only partial restore — each row carries
+the engine's bytes-read accounting (see docs/restore.md).
+
 ``--smoke`` runs a 5-step variant of all of the above (used by
 ``scripts/check.sh smoke``).
 """
@@ -65,6 +71,55 @@ def resave_probe(fingerprint: bool) -> dict:
     return {"resave_seconds": t.seconds, **s}
 
 
+def restore_probe() -> dict:
+    """Save a 3-event drifting chain under ``parity`` (multi-manifest,
+    delta objects included), then time the restore engine's four arms:
+    {pipelined, sequential} x {full state, params-only}."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core import LayerRegistry, make_policy
+    from repro.checkpoint.saver import CheckpointManager
+    from repro.launch import steps as steps_lib
+    from repro.models import build_model
+
+    cfg = get_config("llama3.2-3b", reduced=True)
+    model = build_model(cfg)
+    state = steps_lib.init_state(model, jax.random.key(0))
+    tmp = tempfile.mkdtemp(prefix="bench_restore_")
+    mgr = CheckpointManager(tmp, LayerRegistry(model),
+                            make_policy("parity", model.layer_units()),
+                            async_save=False)
+    for step in (100, 150, 200):
+        mgr.save(state, step=step)
+        state = jax.tree.map(
+            lambda x: x * 1.01 if x.dtype != jnp.int32 else x, state)
+    like = steps_lib.state_specs(model)
+    mgr.restore(like)  # warmup: page cache + lazy imports out of the timings
+    out = {}
+    for tag, kw in (("pipelined", {}),
+                    ("sequential", {"pipelined": False}),
+                    ("params_only", {"parts": ("params",)})):
+        with Timer() as t:
+            mgr.restore(like, **kw)
+        s = dict(mgr.last_restore_stats)
+        out[tag] = {"seconds": t.seconds, **s}
+        csv_row(f"ckpt_restore_{tag}", t.seconds * 1e6,
+                f"restore_s={t.seconds:.4f};"
+                f"read_bytes={s['bytes_read']};"
+                f"objects_read={s['objects_read']};"
+                f"targets={s['targets']}")
+    mgr.close()
+    shutil.rmtree(tmp, ignore_errors=True)
+    if out["pipelined"]["seconds"] > 0:
+        csv_row("ckpt_restore_speedup", 0.0,
+                f"pipelined_vs_sequential="
+                f"{out['sequential']['seconds']/out['pipelined']['seconds']:.2f}x;"
+                f"params_only_bytes_fraction="
+                f"{out['params_only']['bytes_read']/out['pipelined']['bytes_read']:.3f}")
+    return out
+
+
 def run(smoke: bool = False) -> dict:
     from repro.launch.train import train
 
@@ -85,6 +140,11 @@ def run(smoke: bool = False) -> dict:
         csv_row("ckpt_resave_speedup", 0.0,
                 f"fp_vs_full={nofp['resave_seconds']/fp['resave_seconds']:.2f}x;"
                 f"d2h_saved_bytes={nofp['d2h_bytes'] - fp['d2h_bytes']}")
+
+    # Restore probe after the re-save warmup, before the trainer runs (its
+    # saves would warm the same caches anyway; keeping it here preserves
+    # the comment above about what warms what).
+    out["restore"] = restore_probe()
 
     if smoke:
         steps, interval = 5, 2
@@ -115,7 +175,7 @@ def run(smoke: bool = False) -> dict:
         # fraction_reduction > 1 means `tag` spends a smaller fraction of
         # wall-clock on checkpointing than the baseline run.
         if tag != base_tag and not tag.startswith("resave_") \
-                and r["ckpt_time_fraction"] > 0:
+                and tag != "restore" and r["ckpt_time_fraction"] > 0:
             csv_row(f"ckpt_time_speedup_{tag}", 0.0,
                     f"fraction_reduction="
                     f"{base / r['ckpt_time_fraction']:.2f}x;"

@@ -1,10 +1,19 @@
-"""Paper Tables 1, 2, 4, 5: resume fidelity after failure.
+"""Paper Tables 1, 2, 4, 5: resume fidelity after failure — plus restore
+cost through the streaming restore engine.
 
 Trains an uninterrupted reference, injects a failure + resumes under each
 policy, and reports final train loss + eval loss (held-out synthetic
 batches) deltas.  Expected shape of results (paper): parity-merge matches
 the uninterrupted trajectory (Table 1); filtered drifts slightly
 (Table 4); full resume is bitwise exact (our stronger check).
+
+Every ``resume_*`` row's time field is the measured wall-clock of the
+params-only eval restore (µs), and the derived columns carry the restore
+engine's accounting: ``restore_s``, ``restore_read_bytes``, and
+``restore_fallbacks``.  A dedicated ``resume_restore_bytes`` row compares
+a full-state restore against a params-only partial restore on the
+reference checkpoint — the partial restore must read strictly fewer
+bytes (it never touches optimizer objects).
 """
 from __future__ import annotations
 
@@ -20,10 +29,10 @@ BASE = dict(arch="llama3.2-3b", total_steps=90, batch=8, seq_len=64,
 FAIL_AT = 70
 
 
-def _eval_loss(ckpt_dir: str) -> float:
-    """Held-out CE of the final checkpointed weights."""
-    import jax
-    import jax.numpy as jnp
+def _eval_loss(ckpt_dir: str) -> dict:
+    """Held-out CE of the final checkpointed weights, restored params-only
+    through the streaming engine.  Returns the loss plus the engine's
+    restore stats for this load."""
     from repro.configs import get_config
     from repro.core import LayerRegistry, make_policy
     from repro.checkpoint.saver import CheckpointManager
@@ -37,7 +46,9 @@ def _eval_loss(ckpt_dir: str) -> float:
     mgr = CheckpointManager(ckpt_dir, reg,
                             make_policy("full", model.layer_units()),
                             async_save=False)
-    state = mgr.restore(steps_lib.state_specs(model))
+    # Weights-only: the eval never needs optimizer state, so don't read it.
+    state = mgr.restore(steps_lib.state_specs(model), parts=("params",))
+    rstats = dict(mgr.last_restore_stats)
     mgr.close()
     data = SyntheticTokens(vocab_size=cfg.vocab_size, batch=8,
                            seq_len=BASE["seq_len"], seed=999)
@@ -46,7 +57,36 @@ def _eval_loss(ckpt_dir: str) -> float:
         batch = {"tokens": data.peek(step)["tokens"]}
         loss, _ = model.loss(state["params"], batch)
         losses.append(float(loss))
-    return float(np.mean(losses))
+    return {"eval": float(np.mean(losses)), "restore": rstats}
+
+
+def _restore_cols(r: dict) -> str:
+    return (f"restore_s={r['seconds']:.4f};"
+            f"restore_read_bytes={r['bytes_read']};"
+            f"restore_fallbacks={len(r['fallback_units'])}")
+
+
+def _full_vs_partial(ckpt_dir: str) -> dict:
+    """Measure a full-state restore vs a params-only restore on the same
+    checkpoint; the partial restore reads strictly fewer bytes."""
+    from repro.configs import get_config
+    from repro.core import LayerRegistry, make_policy
+    from repro.checkpoint.saver import CheckpointManager
+    from repro.launch import steps as steps_lib
+    from repro.models import build_model
+
+    cfg = get_config(BASE["arch"], reduced=True)
+    model = build_model(cfg)
+    mgr = CheckpointManager(ckpt_dir, LayerRegistry(model),
+                            make_policy("full", model.layer_units()),
+                            async_save=False)
+    like = steps_lib.state_specs(model)
+    mgr.restore(like)
+    full = dict(mgr.last_restore_stats)
+    mgr.restore(like, parts=("params",))
+    partial = dict(mgr.last_restore_stats)
+    mgr.close()
+    return {"full": full, "partial": partial}
 
 
 def run() -> dict:
@@ -55,11 +95,22 @@ def run() -> dict:
     out = {}
     ref_dir = tempfile.mkdtemp(prefix="bench_resume_ref_")
     r_ref = train(ckpt_dir=ref_dir, policy_name="full", **BASE)
-    out["uninterrupted"] = dict(final=r_ref["final_loss"],
-                                eval=_eval_loss(ref_dir))
-    csv_row("resume_uninterrupted", 0.0,
+    ev = _eval_loss(ref_dir)
+    out["uninterrupted"] = dict(final=r_ref["final_loss"], eval=ev["eval"],
+                                restore=ev["restore"])
+    csv_row("resume_uninterrupted", ev["restore"]["seconds"] * 1e6,
             f"final_train_loss={r_ref['final_loss']:.4f};"
-            f"eval_loss={out['uninterrupted']['eval']:.4f}")
+            f"eval_loss={ev['eval']:.4f};" + _restore_cols(ev["restore"]))
+
+    cmp = _full_vs_partial(ref_dir)
+    out["restore_bytes"] = cmp
+    assert cmp["partial"]["bytes_read"] < cmp["full"]["bytes_read"], (
+        "params-only restore must read strictly fewer bytes than full")
+    csv_row("resume_restore_bytes", cmp["full"]["seconds"] * 1e6,
+            f"full_read_bytes={cmp['full']['bytes_read']};"
+            f"params_only_read_bytes={cmp['partial']['bytes_read']};"
+            f"params_only_fraction="
+            f"{cmp['partial']['bytes_read']/cmp['full']['bytes_read']:.3f}")
 
     for policy in ("full", "parity", "filtered", "topk_delta"):
         d = tempfile.mkdtemp(prefix=f"bench_resume_{policy}_")
@@ -69,11 +120,14 @@ def run() -> dict:
             pass
         r = train(ckpt_dir=d, policy_name=policy, resume=True, **BASE)
         ev = _eval_loss(d)
-        out[policy] = dict(final=r["final_loss"], eval=ev)
+        out[policy] = dict(final=r["final_loss"], eval=ev["eval"],
+                           restore=ev["restore"])
         d_train = r["final_loss"] - r_ref["final_loss"]
-        csv_row(f"resume_{policy}", 0.0,
+        csv_row(f"resume_{policy}", ev["restore"]["seconds"] * 1e6,
                 f"final_train_loss={r['final_loss']:.4f};"
-                f"eval_loss={ev:.4f};delta_vs_uninterrupted={d_train:+.4f}")
+                f"eval_loss={ev['eval']:.4f};"
+                f"delta_vs_uninterrupted={d_train:+.4f};"
+                + _restore_cols(ev["restore"]))
         shutil.rmtree(d, ignore_errors=True)
     shutil.rmtree(ref_dir, ignore_errors=True)
     return out

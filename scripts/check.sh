@@ -1,16 +1,21 @@
 #!/usr/bin/env bash
 # Tier-1 verify: the command CI and ROADMAP.md treat as the gate.
 #   scripts/check.sh            # full suite (the tier-1 gate)
-#   scripts/check.sh smoke      # fast tier: tests minus slow marks + a
-#                               # 5-step bench_ckpt_time fingerprint smoke
+#   scripts/check.sh smoke      # fast tier: docs link check + tests minus
+#                               # slow marks + restore smoke + a 5-step
+#                               # bench_ckpt_time fingerprint smoke
 #   scripts/check.sh tests/test_checkpoint.py   # pass-through args
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [ "${1:-}" = "smoke" ]; then
   shift
+  echo "# docs link check (README <-> docs/*.md, no dangling links)"
+  python scripts/check_docs.py
   python -m pytest -q -m "not slow" "$@"
-  echo "# bench_ckpt_time --smoke (save pipeline exercised end to end)"
+  echo "# restore smoke (save 2 parity events, pipelined restore, bit-exact)"
+  python scripts/restore_smoke.py
+  echo "# bench_ckpt_time --smoke (save+restore pipelines end to end)"
   python benchmarks/bench_ckpt_time.py --smoke
   exit 0
 fi

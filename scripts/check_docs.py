@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""Docs link check (wired into ``scripts/check.sh smoke``).
+
+Two invariants keep the doc set coherent:
+
+1. every ``docs/*.md`` file is referenced from ``README.md`` (directly or
+   via ``docs/architecture.md``'s doc index) — no orphaned docs;
+2. no markdown file in the checked set (README.md, docs/*.md, ROADMAP.md,
+   CHANGES.md) contains a dangling *relative* link — every
+   ``[text](path)`` whose target is not a URL or intra-page anchor must
+   resolve to an existing file or directory, anchor suffixes allowed.
+
+Exits non-zero with one line per violation.  Stdlib only.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+# [text](target) — target captured up to the closing paren (no nesting in
+# our docs); inline code spans are stripped first so examples don't count.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_SPAN_RE = re.compile(r"`[^`]*`")
+FENCE_RE = re.compile(r"```.*?```", re.S)
+
+
+def links_of(path: Path):
+    text = FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+    text = CODE_SPAN_RE.sub("", text)
+    return LINK_RE.findall(text)
+
+
+def main() -> int:
+    errors = []
+    readme = ROOT / "README.md"
+    docs = sorted((ROOT / "docs").glob("*.md"))
+    checked = [readme, *docs, ROOT / "ROADMAP.md", ROOT / "CHANGES.md"]
+    checked = [p for p in checked if p.is_file()]
+
+    # 1. every docs/*.md is reachable from README (one hop through the
+    # architecture doc's index counts — that's its job).
+    reachable = set()
+    for src in (readme, ROOT / "docs" / "architecture.md"):
+        if not src.is_file():
+            continue
+        for target in links_of(src):
+            if target.startswith(("http://", "https://", "#", "mailto:")):
+                continue
+            resolved = (src.parent / target.split("#")[0]).resolve()
+            reachable.add(resolved)
+    for doc in docs:
+        if doc.resolve() not in reachable:
+            errors.append(f"{doc.relative_to(ROOT)}: not referenced from "
+                          f"README.md (or docs/architecture.md's index)")
+
+    # 2. no dangling relative links anywhere in the checked set.
+    for src in checked:
+        for target in links_of(src):
+            if target.startswith(("http://", "https://", "#", "mailto:")):
+                continue
+            rel = target.split("#")[0]
+            if not rel:
+                continue
+            if not (src.parent / rel).exists():
+                errors.append(f"{src.relative_to(ROOT)}: dangling link "
+                              f"-> {target}")
+
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_docs: OK ({len(checked)} files, "
+              f"{len(docs)} docs reachable)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

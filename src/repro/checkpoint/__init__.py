@@ -1,16 +1,53 @@
+"""LLMTailor's checkpoint persistence substrate.
+
+The package is layered (see docs/architecture.md for the full dataflow):
+
+- ``serial`` — msgpack tensor chunks with per-tensor CRC32; arrays are
+  serialized device-count independent, the basis of elastic restart.
+- ``compression`` — per-tensor codecs (none/zstd/int8) plus the two
+  chunk-level delta codecs (sparse-XOR v1, block-sparse v2).
+- ``chunk_store`` — the content-addressed object store: one file per
+  distinct content digest under ``objects/``, cross-step dedup, delta
+  encoding against full bases, refcounted GC, and ``ReadSession`` (the
+  restore engine's read-once coalescing cache).  There are no step
+  directories: manifests reference digests, retention is refcounts.
+- ``fingerprint`` — host-side plumbing for the device-side block
+  fingerprint save path (tables, digests, packets; see docs/perf.md).
+- ``async_io`` — the bounded background writer pool that overlaps
+  encode/write with training compute (CheckFreq-style).
+- ``saver`` — ``CheckpointManager``: policy-driven selective save,
+  manifest commit, GC, and the restore entry point.
+- ``restore`` — the planned, pipelined restore engine: deduplicated
+  read plans, a streaming executor overlapping disk/decode/H2D, and
+  partial (weights-only / unit-filtered) restore (see docs/restore.md).
+"""
 from repro.checkpoint.async_io import AsyncWriteError, AsyncWriter  # noqa: F401
-from repro.checkpoint.chunk_store import ChunkRef, ChunkStore  # noqa: F401
+from repro.checkpoint.chunk_store import (  # noqa: F401
+    ChunkRef,
+    ChunkStore,
+    ReadSession,
+)
 from repro.checkpoint.serial import (  # noqa: F401
     ChunkCorruption,
     decode_chunk,
     encode_chunk,
 )
 
-_LAZY = {"CheckpointManager", "RestoreError"}
+# Lazy: saver/restore import repro.core (avoid the import cycle through
+# core.tailor -> checkpoint.chunk_store).
+_LAZY = {
+    "CheckpointManager": "repro.checkpoint.saver",
+    "RestoreError": "repro.checkpoint.restore",
+    "RestoreEngine": "repro.checkpoint.restore",
+    "RestorePlan": "repro.checkpoint.restore",
+    "plan_restore": "repro.checkpoint.restore",
+}
 
 
-def __getattr__(name):  # lazy: saver imports repro.core (avoid import cycle)
-    if name in _LAZY:
-        from repro.checkpoint import saver
-        return getattr(saver, name)
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is not None:
+        import importlib
+
+        return getattr(importlib.import_module(mod), name)
     raise AttributeError(name)

@@ -85,6 +85,107 @@ def content_digest(blob: bytes) -> str:
     return hashlib.blake2b(blob, digest_size=DIGEST_BYTES).hexdigest()
 
 
+class ReadSession:
+    """Scoped read-once cache over one logical restore pass.
+
+    The restore plan routinely wants the same object more than once: two
+    units whose content dedup'd to one digest, several block-deltas
+    patching against one shared full base, or a digest needed both as a
+    decoded tree (it is a unit's entry) and as canonical bytes (it anchors
+    a v1 XOR delta).  A session memoizes the three representations —
+    envelope, canonical payload, decoded tree — per digest, with per-key
+    in-flight coalescing so concurrent executor threads asking for the
+    same object block on one read instead of racing duplicate I/O.
+
+    Failures are memoized too: a corrupt object shared by several units
+    fails all of them from a single read attempt (the fallback chain takes
+    over per unit).  ``release`` drops every representation of a digest
+    once the planner says no remaining target needs it, bounding the
+    session's memory to the live working set rather than the checkpoint.
+
+    ``stats`` counts actual object I/O: ``object_reads`` distinct envelope
+    reads and ``bytes_read`` object-file bytes — the numbers the restore
+    engine reports and the dedup tests pin down.
+    """
+
+    def __init__(self, store: "ChunkStore", *, verify: bool = True):
+        self.store = store
+        self.verify = verify
+        self._lock = threading.Lock()
+        # (repr, digest) -> {"event": Event, "value":..., "error":...}
+        self._cells: Dict[Tuple[str, str], Dict[str, Any]] = {}
+        self.stats = {"object_reads": 0, "bytes_read": 0}
+
+    def _memoized(self, table: str, digest: str, fn):
+        key = (table, digest)
+        while True:
+            with self._lock:
+                cell = self._cells.get(key)
+                if cell is None:
+                    cell = {"event": threading.Event(), "value": None,
+                            "error": None, "owner": threading.get_ident()}
+                    self._cells[key] = cell
+                    owner = True
+                else:
+                    owner = False
+            if not owner:
+                if cell["owner"] == threading.get_ident() \
+                        and not cell["event"].is_set():
+                    # Re-entrant request: a (corrupt) delta envelope whose
+                    # base chain loops back on itself.  Waiting would
+                    # deadlock on our own in-flight cell — surface it as
+                    # corruption so the fallback chain takes over.
+                    raise serial.ChunkCorruption(
+                        f"object dependency cycle at {digest}")
+                cell["event"].wait()
+                with self._lock:
+                    # release() may have dropped the cell between the wait
+                    # and this lookup — recompute in that (rare) case.
+                    if self._cells.get(key) is not cell:
+                        continue
+                if cell["error"] is not None:
+                    raise cell["error"]
+                return cell["value"]
+            try:
+                cell["value"] = fn()
+            except BaseException as e:  # noqa: BLE001 - memoize failures too
+                cell["error"] = e
+                raise
+            finally:
+                cell["event"].set()
+            return cell["value"]
+
+    def envelope(self, digest: str) -> Dict[str, Any]:
+        def read():
+            env = self.store._read_envelope(digest)
+            nbytes = self.store.object_info(digest)["nbytes"]
+            with self._lock:
+                self.stats["object_reads"] += 1
+                self.stats["bytes_read"] += int(nbytes)
+            return env
+
+        return self._memoized("env", digest, read)
+
+    def canonical(self, digest: str) -> bytes:
+        return self._memoized(
+            "canon", digest,
+            lambda: self.store.read_canonical(digest, verify=self.verify,
+                                              session=self))
+
+    def read(self, digest: str) -> Tuple[PyTree, Dict]:
+        return self._memoized(
+            "tree", digest,
+            lambda: self.store.read_digest(digest, verify=self.verify,
+                                           session=self))
+
+    def release(self, digest: str) -> None:
+        """Drop every cached representation of ``digest`` (its last
+        dependent has consumed it)."""
+        with self._lock:
+            for table in ("env", "canon", "tree"):
+                self._cells.pop((table, digest), None)
+
+
 def _ref_stored(fmt: str) -> str:
     """Envelope format -> ChunkRef.stored: manifests only distinguish
     full vs delta (for refcounting bases and delta-run replay); the
@@ -252,18 +353,23 @@ class ChunkStore:
                                   "nbytes": len(blob)}
         return len(blob)
 
-    def read_canonical(self, digest: str, *, verify: bool = True) -> bytes:
+    def read_canonical(self, digest: str, *, verify: bool = True,
+                       session: Optional[ReadSession] = None) -> bytes:
         """The codec='none' chunk blob for ``digest``, resolving deltas.
 
         fp-addressed objects reconstruct their tree first (their digest is
         over the fingerprint table, not the canonical payload — the table
-        recompute inside ``_tree_from_fp_env`` is their integrity check)."""
+        recompute inside ``_tree_from_fp_env`` is their integrity check).
+        A ``session`` routes the envelope and base reads through its
+        read-once cache (restore engine hot path)."""
         cached = self._canon_cached(digest)
         if cached is not None:
             return cached
-        env = self._read_envelope(digest)
+        env = (session.envelope(digest) if session is not None
+               else self._read_envelope(digest))
         if env.get("fp") is not None:
-            tree, _ = self._tree_from_fp_env(digest, env, verify=verify)
+            tree, _ = self._tree_from_fp_env(digest, env, verify=verify,
+                                             session=session)
             canon = serial.encode_chunk(tree, meta={}, codec="none")
         elif env.get("format") == "full":
             if env["codec"] == "none":
@@ -273,7 +379,8 @@ class ChunkStore:
                 tree, meta = serial.decode_chunk(env["payload"], verify=verify)
                 canon = serial.encode_chunk(tree, meta=meta, codec="none")
         elif env.get("format") == "delta":
-            base = self.read_canonical(env["base"], verify=verify)
+            base = (session.canonical(env["base"]) if session is not None
+                    else self.read_canonical(env["base"], verify=verify))
             canon = self._apply_delta(digest, env, base)
         else:
             raise serial.ChunkCorruption(
@@ -285,14 +392,19 @@ class ChunkStore:
         return canon
 
     def _tree_from_fp_env(self, digest: str, env: Dict[str, Any],
-                          *, verify: bool) -> Tuple[PyTree, Dict]:
+                          *, verify: bool,
+                          session: Optional[ReadSession] = None
+                          ) -> Tuple[PyTree, Dict]:
         """Reconstruct (tree, meta) of an fp-addressed object and verify it
         by recomputing the fingerprint table with the host oracle."""
         fmt = env.get("format")
         if fmt == "full":
             tree, meta = serial.decode_chunk(env["payload"], verify=verify)
         elif fmt == "block_delta":
-            base_tree, _ = self.read_digest(env["base"], verify=verify)
+            if session is not None:
+                base_tree, _ = session.read(env["base"])
+            else:
+                base_tree, _ = self.read_digest(env["base"], verify=verify)
             try:
                 records = compression.block_delta_decode(env["payload"])
                 tree = fputil.patch_tree(base_tree, records)
@@ -347,29 +459,33 @@ class ChunkStore:
             raise serial.ChunkCorruption(
                 f"unreadable delta object {digest}: {e!r}") from e
 
-    def read_digest(self, digest: str, *, verify: bool = True
+    def read_digest(self, digest: str, *, verify: bool = True,
+                    session: Optional[ReadSession] = None
                     ) -> Tuple[PyTree, Dict]:
-        env = self._read_envelope(digest)
+        env = (session.envelope(digest) if session is not None
+               else self._read_envelope(digest))
         if env.get("fp") is not None:
-            return self._tree_from_fp_env(digest, env, verify=verify)
+            return self._tree_from_fp_env(digest, env, verify=verify,
+                                          session=session)
         if env.get("format") == "full":
             return serial.decode_chunk(env["payload"], verify=verify)
         if env.get("format") != "delta":
             raise serial.ChunkCorruption(
                 f"unknown object format {env.get('format')!r}")
-        canon = self._apply_delta(
-            digest, env, self.read_canonical(env["base"], verify=verify))
+        base = (session.canonical(env["base"]) if session is not None
+                else self.read_canonical(env["base"], verify=verify))
+        canon = self._apply_delta(digest, env, base)
         if verify and content_digest(canon) != digest:
             raise serial.ChunkCorruption(f"digest mismatch for {digest}")
         return serial.decode_chunk(canon, verify=verify)
 
-    def read(self, ref: ChunkRef, *, verify: bool = True
-             ) -> Tuple[PyTree, Dict]:
+    def read(self, ref: ChunkRef, *, verify: bool = True,
+             session: Optional[ReadSession] = None) -> Tuple[PyTree, Dict]:
         if not ref.digest:
             raise serial.ChunkCorruption(
                 f"manifest entry for {ref.unit}/{ref.kind} has no content "
                 "digest (pre-content-addressing checkpoint); re-save it")
-        return self.read_digest(ref.digest, verify=verify)
+        return self.read_digest(ref.digest, verify=verify, session=session)
 
     def write(self, step: int, unit: str, kind: str, tree: PyTree,
               *, codec: Optional[str] = None,

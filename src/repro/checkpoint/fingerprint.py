@@ -77,12 +77,15 @@ def fp_digest(table_blob: bytes) -> str:
 def table_of_tree(tree: PyTree,
                   block_bytes: int = DEFAULT_BLOCK_BYTES) -> List[LeafFP]:
     """Host (numpy oracle) fingerprint table of a decoded tree — used by
-    the store to verify fp-addressed objects on read."""
+    the store to verify fp-addressed objects on read.  Skips the advisory
+    sumsq reduction: only the integer pairs are hashed/compared, and the
+    restore hot path calls this once per fp object."""
     from repro.checkpoint.serial import flatten_with_paths
 
     out = []
     for path, arr in flatten_with_paths(tree):
-        leaf = fingerprint_array(np.asarray(arr), block_bytes)
+        leaf = fingerprint_array(np.asarray(arr), block_bytes,
+                                 with_sumsq=False)
         leaf.path = path
         out.append(leaf)
     return out

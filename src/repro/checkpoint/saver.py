@@ -23,11 +23,17 @@ Save path (fingerprint pipeline, the default — see docs/perf.md):
 the whole unit, blake2b over the canonical payload, XOR delta in the
 store.  Both paths' objects coexist in one store and restore uniformly.
 
-Restore path (= the paper's merge, done lazily):
-  read the manifest (latest or pinned), stream each unit from its digest
-  (deltas reconstruct transparently against their base), verify crc32 +
-  digest; on a corrupt/missing chunk fall back to that unit's previous
-  manifest entry (degraded-but-resumable, logged).
+Restore path (= the paper's merge, done lazily — see docs/restore.md):
+  ``restore`` delegates to the planned, pipelined engine in
+  ``repro.checkpoint.restore``: a planner resolves the manifest chain
+  into a deduplicated read plan (each object digest read once, delta
+  bases cached, older-manifest fallbacks enumerated up front), and a
+  streaming executor overlaps chunk read + decompress + verify with
+  per-unit ``jax.device_put`` onto the target shardings.  Partial
+  restore (``parts=("params",)``, unit-prefix filters) reads only the
+  objects the caller asked for; on a corrupt/missing chunk a unit falls
+  back to its previous manifest entry (degraded-but-resumable, logged,
+  and recorded in ``last_restore_stats["fallback_units"]``).
 """
 from __future__ import annotations
 
@@ -44,8 +50,14 @@ import numpy as np
 from repro.checkpoint import fingerprint as fputil
 from repro.checkpoint.async_io import AsyncWriter, PendingResult
 from repro.checkpoint.chunk_store import ChunkRef, ChunkStore
-from repro.checkpoint.serial import ChunkCorruption, flatten_with_paths
-from repro.core.layer_registry import OPT_KINDS, LayerRegistry
+from repro.checkpoint.restore import (  # noqa: F401 - RestoreError re-export
+    DEFAULT_IO_THREADS,
+    PARTS_ALL,
+    RestoreEngine,
+    RestoreError,
+)
+from repro.checkpoint.serial import flatten_with_paths
+from repro.core.layer_registry import LayerRegistry
 from repro.core.manifest import Manifest, ManifestStore
 from repro.core.policies import CheckpointPolicy, PolicyContext
 from repro.kernels import block_fp as bfp
@@ -53,10 +65,6 @@ from repro.kernels import block_fp as bfp
 log = logging.getLogger("repro.checkpoint")
 
 PyTree = Any
-
-
-class RestoreError(RuntimeError):
-    pass
 
 
 class CheckpointManager:
@@ -74,6 +82,8 @@ class CheckpointManager:
         fingerprint: bool = True,
         fp_block_bytes: int = fputil.DEFAULT_BLOCK_BYTES,
         fp_max_dirty_frac: float = 0.5,
+        restore_threads: int = DEFAULT_IO_THREADS,
+        restore_verify: bool = True,
     ):
         self.root = Path(root)
         self.registry = registry
@@ -82,6 +92,9 @@ class CheckpointManager:
         self.manifests = ManifestStore(self.root)
         self.keep = keep
         self.async_save = async_save
+        self.restorer = RestoreEngine(self.store, self.manifests, registry,
+                                      io_threads=restore_threads,
+                                      verify=restore_verify)
         self.fingerprint = fingerprint
         self.fp_block_bytes = fp_block_bytes
         # Above this dirty fraction a block-sparse delta stops paying (the
@@ -364,64 +377,34 @@ class CheckpointManager:
                 stats, cur)
 
     # --------------------------------------------------------------- restore
-    def _read_unit(self, manifest: Manifest, name: str, kind: str) -> PyTree:
-        ref = manifest.entries[name][kind]
-        try:
-            tree, _ = self.store.read(ref)
-            return tree
-        except (FileNotFoundError, ChunkCorruption) as e:
-            # Fault tolerance: fall back to an older manifest entry.
-            log.warning("chunk %s/%s at step %s unreadable (%s); "
-                        "falling back", name, kind, ref.step, e)
-            for s in reversed(self.manifests.all_steps()):
-                if s >= manifest.step:
-                    continue
-                older = self.manifests.load(s)
-                if older is None or name not in older.entries:
-                    continue
-                oref = older.entries[name][kind]
-                if (oref.digest or oref.relpath) == (ref.digest or ref.relpath):
-                    continue  # same content/object — would fail identically
-                try:
-                    tree, _ = self.store.read(oref)
-                    log.warning("unit %s/%s restored from older step %s",
-                                name, kind, oref.step)
-                    return tree
-                except (FileNotFoundError, ChunkCorruption):
-                    continue
-            raise RestoreError(f"no readable chunk for unit {name}/{kind}")
-
     def restore(self, state_like: Dict[str, PyTree], *,
                 step: Optional[int] = None,
-                shardings: Optional[Dict[str, PyTree]] = None
-                ) -> Dict[str, PyTree]:
-        """Rebuild a full train state from the manifest chain (the implicit
-        merge).  ``state_like`` supplies structure/dtypes (arrays or
-        ShapeDtypeStructs); ``shardings`` optionally places the result on a
-        mesh (elastic restart onto any device count)."""
-        manifest = self.manifests.load(step)
-        if manifest is None:
-            raise RestoreError(f"no manifest found in {self.root}")
+                shardings: Optional[Dict[str, PyTree]] = None,
+                parts: Tuple[str, ...] = PARTS_ALL,
+                units: Optional[Tuple[str, ...]] = None,
+                pipelined: bool = True) -> Dict[str, PyTree]:
+        """Rebuild a train state from the manifest chain (the implicit
+        merge) via the streaming restore engine — thin wrapper over
+        :class:`repro.checkpoint.restore.RestoreEngine`.
 
-        params = jax.tree.map(lambda x: np.zeros(x.shape, x.dtype),
-                              state_like["params"])
-        opt = {k: jax.tree.map(lambda x: np.zeros(x.shape, x.dtype),
-                               state_like["opt"][k]) for k in OPT_KINDS}
-        for name in self.registry.unit_names():
-            if name not in manifest.entries:
-                raise RestoreError(f"manifest missing unit {name}")
-            w = self._read_unit(manifest, name, "weights")
-            o = self._read_unit(manifest, name, "opt")
-            params = self.registry.insert_unit(params, name, w)
-            opt = self.registry.insert_opt_unit(opt, name, o)
+        ``state_like`` supplies structure/dtypes (arrays or
+        ShapeDtypeStructs) for the requested ``parts``; ``shardings``
+        optionally places every unit on a mesh as it streams in (elastic
+        restart onto any device count).  ``parts=("params",)`` restores
+        weights without optimizer state (reading strictly fewer bytes);
+        ``units`` filters by unit-name prefix; ``pipelined=False`` forces
+        the strictly sequential executor.  Per-restore accounting lands
+        in ``last_restore_stats``.
+        """
+        return self.restorer.restore(state_like, step=step,
+                                     shardings=shardings, parts=parts,
+                                     units=units, pipelined=pipelined)
 
-        state = {"params": params, "opt": opt,
-                 "step": np.asarray(manifest.step, np.int32)}
-        if shardings is not None:
-            state = jax.tree.map(jax.device_put, state, shardings)
-        else:
-            state = jax.tree.map(jnp.asarray, state)
-        return state
+    @property
+    def last_restore_stats(self) -> Dict[str, Any]:
+        """Stats of the most recent ``restore`` (wall seconds, bytes/
+        objects read, dedup savings, per-unit fallback provenance)."""
+        return self.restorer.last_stats
 
     def restore_meta(self, step: Optional[int] = None) -> Dict:
         m = self.manifests.load(step)

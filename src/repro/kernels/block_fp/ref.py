@@ -65,15 +65,20 @@ def fingerprint_bytes(raw: bytes, block_bytes: int = DEFAULT_BLOCK_BYTES
 
 
 def fingerprint_array(arr: np.ndarray,
-                      block_bytes: int = DEFAULT_BLOCK_BYTES) -> LeafFP:
-    """Host-side LeafFP of a numpy array (fp exact, sumsq advisory)."""
+                      block_bytes: int = DEFAULT_BLOCK_BYTES,
+                      *, with_sumsq: bool = True) -> LeafFP:
+    """Host-side LeafFP of a numpy array (fp exact, sumsq advisory).
+
+    ``with_sumsq=False`` skips the advisory float reduction — callers
+    that only need the hashed integer pairs (read-time verification)
+    save a full-data cast + square + sum."""
     arr = np.ascontiguousarray(arr)
     raw = arr.tobytes()
     fp = fingerprint_bytes(raw, block_bytes)
     itemsize = arr.dtype.itemsize
     epb = block_bytes // itemsize if block_bytes % itemsize == 0 else None
     sumsq = None
-    if epb:
+    if epb and with_sumsq:
         flat = np.asarray(arr, np.float32).reshape(-1)
         pad = epb if flat.size == 0 else (-flat.size) % epb
         if pad:

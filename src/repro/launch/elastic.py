@@ -3,21 +3,25 @@
 Chunks store *global* arrays (device-count independent), so recovery after
 losing nodes — or scaling up — is just a restore with the new mesh's
 shardings.  ``restore_on_mesh`` builds the target NamedShardings from the
-model's logical axes and places every unit as it streams in.
+model's logical axes and hands them to the streaming restore engine,
+which places every unit on the mesh as it comes off disk (H2D overlaps
+the remaining reads — see docs/restore.md).
 
     state = restore_on_mesh(ckpt_root, model, mesh)
+    weights = restore_on_mesh(ckpt_root, model, mesh, parts=("params",))
 
-Exercised by tests/test_elastic.py in a subprocess with 8 host devices
-(save on 1x1, restore on 2x4 and 4x2).
+Exercised by tests/test_mesh_subprocess.py and tests/test_restore_engine.py
+in subprocesses with 8 host devices (save on 1x1, restore on 2x4 / 4x2).
 """
 from __future__ import annotations
 
 from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 from jax.sharding import Mesh
 
 from repro.core import LayerRegistry, make_policy
+from repro.checkpoint.restore import PARTS_ALL
 from repro.checkpoint.saver import CheckpointManager
 from repro.launch import steps as steps_lib
 from repro.models.model_api import BaseLM
@@ -26,7 +30,13 @@ PyTree = Any
 
 
 def restore_on_mesh(ckpt_root: str | Path, model: BaseLM, mesh: Mesh,
-                    *, step: Optional[int] = None) -> Dict[str, PyTree]:
+                    *, step: Optional[int] = None,
+                    parts: Tuple[str, ...] = PARTS_ALL,
+                    units: Optional[Sequence[str]] = None,
+                    pipelined: bool = True) -> Dict[str, PyTree]:
+    """Restore a checkpoint sharded onto ``mesh``; thin wrapper over
+    ``CheckpointManager.restore`` (``parts``/``units``/``pipelined``
+    pass straight through to the restore engine)."""
     registry = LayerRegistry(model)
     mgr = CheckpointManager(Path(ckpt_root), registry,
                             make_policy("full", model.layer_units()),
@@ -34,6 +44,7 @@ def restore_on_mesh(ckpt_root: str | Path, model: BaseLM, mesh: Mesh,
     try:
         like = steps_lib.state_specs(model)
         shardings = steps_lib.state_shardings(model, mesh)
-        return mgr.restore(like, step=step, shardings=shardings)
+        return mgr.restore(like, step=step, shardings=shardings,
+                           parts=parts, units=units, pipelined=pipelined)
     finally:
         mgr.close()

@@ -6,7 +6,10 @@ decode against the KV/state cache.
 
 Weights can come from any LLMTailor checkpoint root — including a merged
 Frankenstein — because the bf16 weight chunks are servable without the
-optimizer chunks (the paper's consolidated-model-file analogue).
+optimizer chunks (the paper's consolidated-model-file analogue).  The
+loader uses the restore engine's partial restore (``parts=("params",)``,
+see docs/restore.md): optimizer objects are never read off disk, so
+serve-time weight loading costs a fraction of a full-state restore.
 """
 from __future__ import annotations
 
@@ -55,7 +58,8 @@ def serve(*, arch: str, reduced: bool = True, batch: int = 4,
                                 make_policy("full", model.layer_units()),
                                 async_save=False)
         like = steps_lib.state_specs(model)
-        state = mgr.restore(like)
+        # Weights-only partial restore: optimizer objects are never read.
+        state = mgr.restore(like, parts=("params",))
         params = state["params"]
         mgr.close()
     else:

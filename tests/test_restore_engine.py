@@ -1,0 +1,372 @@
+"""Streaming restore engine: plan dedup (each shared object digest read
+exactly once, counted via a spying store), pipelined == sequential ==
+legacy-loop bit-exactness across a multi-policy manifest chain,
+params-only partial restore, unit-prefix filters, corruption fallback
+resolved through the planner (with manifest-step provenance in the
+stats), and elastic restore onto other meshes through the engine."""
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.restore import RestoreError, plan_restore
+from repro.checkpoint.saver import CheckpointManager
+from repro.configs import get_config
+from repro.core import LayerRegistry, make_policy
+from repro.launch import steps as steps_lib
+from repro.models import build_model
+
+from test_mesh_subprocess import run_py
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    cfg = get_config("llama3.2-3b", reduced=True)
+    model = build_model(cfg)
+    state = steps_lib.init_state(model, jax.random.key(0))
+    registry = LayerRegistry(model)
+    return model, state, registry
+
+
+def _drift(state, f=1.1):
+    return jax.tree.map(
+        lambda x: x * f if x.dtype != jnp.int32 else x, state)
+
+
+def _assert_states_equal(a, b, parts=("params", "opt")):
+    for key in parts:
+        for x, y in zip(jax.tree.leaves(a[key]), jax.tree.leaves(b[key])):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _spy_envelope_reads(store):
+    """Count _read_envelope calls per digest (the disk-read unit)."""
+    counts: Counter = Counter()
+    orig = store._read_envelope
+
+    def spying(digest):
+        counts[digest] += 1
+        return orig(digest)
+
+    store._read_envelope = spying
+    return counts
+
+
+def _legacy_restore(mgr, model, registry):
+    """The seed-era sequential restore loop, kept here as the oracle the
+    engine must match bit-for-bit: per-unit store.read of the manifest
+    entry into a zero-filled host tree."""
+    from repro.core.layer_registry import OPT_KINDS
+
+    manifest = mgr.manifests.load()
+    state_like = steps_lib.state_specs(model)
+    params = jax.tree.map(lambda x: np.zeros(x.shape, x.dtype),
+                          state_like["params"])
+    opt = {k: jax.tree.map(lambda x: np.zeros(x.shape, x.dtype),
+                           state_like["opt"][k]) for k in OPT_KINDS}
+    for name in registry.unit_names():
+        w, _ = mgr.store.read(manifest.entries[name]["weights"])
+        o, _ = mgr.store.read(manifest.entries[name]["opt"])
+        params = registry.insert_unit(params, name, w)
+        opt = registry.insert_opt_unit(opt, name, o)
+    return {"params": params, "opt": opt,
+            "step": np.asarray(manifest.step, np.int32)}
+
+
+# ------------------------------------------------------------- plan dedup
+def test_shared_digest_read_exactly_once(tmp_path, small_setup):
+    model, state, registry = small_setup
+    # Duplicate one block's content into another: their weight chunks (and
+    # the zero-initialized m/v planes inside the opt chunks) dedup to
+    # shared digests across units.
+    w0 = registry.extract_unit(state["params"], "block_001")
+    o0 = registry.extract_opt_unit(state["opt"], "block_001")
+    state = dict(state,
+                 params=registry.insert_unit(state["params"], "block_002", w0),
+                 opt=registry.insert_opt_unit(state["opt"], "block_002", o0))
+    mgr = CheckpointManager(tmp_path, registry,
+                            make_policy("full", model.layer_units()),
+                            async_save=False)
+    mgr.save(state, step=10)
+
+    plan = plan_restore(mgr.manifests, mgr.store, registry.unit_names())
+    # Sharing exists: fewer distinct objects than (unit, kind) targets.
+    assert plan.unique_digests < len(plan.targets)
+
+    counts = _spy_envelope_reads(mgr.store)
+    restored = mgr.restore(steps_lib.state_specs(model))
+    _assert_states_equal(state, restored)
+    assert counts, "spy saw no reads"
+    assert max(counts.values()) == 1, (
+        f"digests read more than once: "
+        f"{[d for d, c in counts.items() if c > 1]}")
+    assert set(counts) == set(plan.dependents)
+    s = mgr.last_restore_stats
+    assert s["objects_read"] == plan.unique_digests == len(counts)
+    assert s["bytes_read"] > 0 and s["seconds"] > 0
+    mgr.close()
+
+
+def test_delta_base_replayed_once(tmp_path, small_setup):
+    """A chain of block-delta objects over a shared full base replays the
+    base exactly once for the whole restore."""
+    model, state, registry = small_setup
+    mgr = CheckpointManager(tmp_path, registry,
+                            make_policy("full", model.layer_units()),
+                            async_save=False)
+    mgr.save(state, step=10)
+    state2 = _drift(state, 1.001)  # small drift -> block deltas
+    mgr.save(state2, step=20)
+    m = mgr.manifests.load(20)
+    bases = {r.delta_base for kinds in m.entries.values()
+             for r in kinds.values() if r.delta_base}
+    assert bases, "expected delta objects in this chain"
+
+    counts = _spy_envelope_reads(mgr.store)
+    restored = mgr.restore(steps_lib.state_specs(model))
+    _assert_states_equal(state2, restored)
+    assert max(counts.values()) == 1
+    assert bases <= set(counts)  # bases were read (once) too
+    mgr.close()
+
+
+# --------------------------------------------------------- bit-exactness
+def test_pipelined_matches_sequential_and_legacy(tmp_path, small_setup):
+    """Multi-policy manifest chain (full base + parity + filtered events,
+    drifting state): the pipelined executor, the sequential executor, and
+    the seed-era per-unit loop must agree bit-for-bit."""
+    model, state, registry = small_setup
+    units = model.layer_units()
+    mgr = CheckpointManager(tmp_path, registry, make_policy("full", units),
+                            async_save=False)
+    mgr.save(state, step=10)
+    st = _drift(state)
+    mgr.policy = make_policy("parity", units)
+    mgr.save(st, step=20)
+    st = _drift(st)
+    mgr.policy = make_policy("filtered", units)
+    mgr.save(st, step=30)
+
+    like = steps_lib.state_specs(model)
+    pipe = mgr.restore(like, pipelined=True)
+    assert mgr.last_restore_stats["pipelined"]
+    seq = mgr.restore(like, pipelined=False)
+    assert not mgr.last_restore_stats["pipelined"]
+    legacy = _legacy_restore(mgr, model, registry)
+    _assert_states_equal(pipe, seq)
+    _assert_states_equal(pipe, legacy)
+    assert int(pipe["step"]) == int(legacy["step"]) == 30
+    mgr.close()
+
+
+# -------------------------------------------------------- partial restore
+def test_params_only_restore_reads_fewer_bytes(tmp_path, small_setup):
+    model, state, registry = small_setup
+    mgr = CheckpointManager(tmp_path, registry,
+                            make_policy("parity", model.layer_units()),
+                            async_save=False)
+    mgr.save(state, step=10)
+    st = _drift(state)
+    mgr.save(st, step=20)
+    like = steps_lib.state_specs(model)
+
+    full = mgr.restore(like)
+    full_stats = dict(mgr.last_restore_stats)
+    part = mgr.restore(like, parts=("params",))
+    part_stats = dict(mgr.last_restore_stats)
+
+    assert "opt" not in part
+    # same Frankenstein weights as the full restore (half from step 20,
+    # the parity-skipped half carried from step 10)
+    _assert_states_equal(full, part, parts=("params",))
+    assert part_stats["bytes_read"] < full_stats["bytes_read"]
+    assert part_stats["targets"] == full_stats["targets"] // 2
+    mgr.close()
+
+
+def test_unit_prefix_filter(tmp_path, small_setup):
+    model, state, registry = small_setup
+    mgr = CheckpointManager(tmp_path, registry,
+                            make_policy("full", model.layer_units()),
+                            async_save=False)
+    mgr.save(state, step=10)
+    like = steps_lib.state_specs(model)
+    r = mgr.restore(like, parts=("params",), units=("embed",))
+    exp = registry.extract_unit(state["params"], "embed")
+    got = registry.extract_unit(r["params"], "embed")
+    for a, b in zip(jax.tree.leaves(exp), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # unselected stacked blocks restore as zeros (documented semantics)
+    blk = registry.extract_unit(r["params"], "block_001")
+    assert all(not np.asarray(x).any() for x in jax.tree.leaves(blk))
+    assert mgr.last_restore_stats["units"] == 1
+    with pytest.raises(RestoreError):
+        mgr.restore(like, units=("nope_",))
+    mgr.close()
+
+
+# ----------------------------------------------------- fallback semantics
+def test_corruption_fallback_reports_provenance(tmp_path, small_setup):
+    model, state, registry = small_setup
+    mgr = CheckpointManager(tmp_path, registry,
+                            make_policy("full", model.layer_units()),
+                            async_save=False, keep=8)
+    mgr.save(state, step=10)
+    state2 = jax.tree.map(
+        lambda x: x * 2 if x.dtype != jnp.int32 else x, state)
+    mgr.save(state2, step=20)
+    m2 = mgr.manifests.load(20)
+    victim = tmp_path / m2.entries["block_000"]["weights"].relpath
+    raw = bytearray(victim.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    victim.write_bytes(bytes(raw))
+
+    restored = mgr.restore(steps_lib.state_specs(model))
+    exp = registry.extract_unit(state["params"], "block_000")
+    got = registry.extract_unit(restored["params"], "block_000")
+    for a, b in zip(jax.tree.leaves(exp), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the stats say exactly which manifest the unit was recovered from
+    assert mgr.last_restore_stats["fallback_units"] == {
+        "block_000/weights": 10}
+    mgr.close()
+
+
+def test_missing_object_resolved_at_plan_time(tmp_path, small_setup):
+    """A deleted object file is routed to the fallback by the planner
+    (no failed read), and a fully-gone unit raises at plan time."""
+    model, state, registry = small_setup
+    mgr = CheckpointManager(tmp_path, registry,
+                            make_policy("full", model.layer_units()),
+                            async_save=False, keep=8)
+    mgr.save(state, step=10)
+    state2 = jax.tree.map(
+        lambda x: x * 2 if x.dtype != jnp.int32 else x, state)
+    mgr.save(state2, step=20)
+    m2 = mgr.manifests.load(20)
+    (tmp_path / m2.entries["block_000"]["weights"].relpath).unlink()
+
+    plan = plan_restore(mgr.manifests, mgr.store, registry.unit_names())
+    t = next(x for x in plan.targets
+             if x.unit == "block_000" and x.kind == "weights")
+    assert t.primary.manifest_step == 10  # fallback promoted up front
+    restored = mgr.restore(steps_lib.state_specs(model))
+    got = registry.extract_unit(restored["params"], "block_000")
+    exp = registry.extract_unit(state["params"], "block_000")
+    for a, b in zip(jax.tree.leaves(exp), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # destroy every copy of the unit -> plan-time RestoreError
+    for m in (mgr.manifests.load(10), m2):
+        for kind in ("weights", "opt"):
+            p = tmp_path / m.entries["block_000"][kind].relpath
+            if p.is_file():
+                p.unlink()
+    with pytest.raises(RestoreError):
+        mgr.restore(steps_lib.state_specs(model))
+    mgr.close()
+
+
+def test_cyclic_delta_base_raises_not_deadlocks(tmp_path, small_setup):
+    """A corrupt delta envelope whose base chain loops back on itself must
+    surface as ChunkCorruption (and fall back), not deadlock the
+    ReadSession on its own in-flight cell."""
+    import msgpack
+
+    from repro.checkpoint.chunk_store import OBJECT_VERSION, _atomic_write
+    from repro.checkpoint.serial import ChunkCorruption
+    from repro.checkpoint import ChunkStore, ReadSession
+
+    store = ChunkStore(tmp_path)
+    ref = store.write(1, "u", "weights",
+                      {"w": np.ones((64, 64), np.float32)})
+    evil = msgpack.packb({"v": OBJECT_VERSION, "format": "delta",
+                          "base": ref.digest, "payload": b"XD01\x00junk"},
+                         use_bin_type=True)
+    # overwrite the object with a delta pointing at ITSELF
+    _atomic_write(store.object_path(ref.digest), evil)
+    store._info.clear()
+    session = ReadSession(store)
+    with pytest.raises(ChunkCorruption):
+        session.read(ref.digest)
+
+    # end-to-end: the engine falls back to the older manifest entry
+    model, state, registry = small_setup
+    mgr = CheckpointManager(tmp_path / "ckpt", registry,
+                            make_policy("full", model.layer_units()),
+                            async_save=False)
+    mgr.save(state, step=10)
+    state2 = jax.tree.map(
+        lambda x: x * 2 if x.dtype != jnp.int32 else x, state)
+    mgr.save(state2, step=20)
+    m2 = mgr.manifests.load(20)
+    vref = m2.entries["block_000"]["weights"]
+    evil = msgpack.packb({"v": OBJECT_VERSION, "format": "delta",
+                          "base": vref.digest, "payload": b"XD01\x00junk"},
+                         use_bin_type=True)
+    _atomic_write(mgr.store.object_path(vref.digest), evil)
+    mgr.store._info.clear()
+    restored = mgr.restore(steps_lib.state_specs(model))
+    assert mgr.last_restore_stats["fallback_units"] == {
+        "block_000/weights": 10}
+    exp = registry.extract_unit(state["params"], "block_000")
+    got = registry.extract_unit(restored["params"], "block_000")
+    for a, b in zip(jax.tree.leaves(exp), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    mgr.close()
+
+
+# ------------------------------------------------------------ elastic mesh
+@pytest.mark.slow
+def test_engine_restore_onto_other_meshes():
+    """Save on 1 device, engine-restore sharded on 2x4 / 4x2 / params-only
+    (reuses the subprocess harness: jax pins the device count)."""
+    run_py("""
+        import tempfile, jax, jax.numpy as jnp, numpy as np
+        from pathlib import Path
+        from repro.configs import get_config
+        from repro.core import LayerRegistry, make_policy
+        from repro.checkpoint.saver import CheckpointManager
+        from repro.launch import steps as steps_lib
+        from repro.launch.mesh import make_debug_mesh
+        from repro.launch.elastic import restore_on_mesh
+        from repro.models import build_model
+
+        cfg = get_config("mamba2-370m", reduced=True)
+        model = build_model(cfg)
+        state = steps_lib.init_state(model, jax.random.key(0))
+        tmp = Path(tempfile.mkdtemp())
+        reg = LayerRegistry(model)
+        mgr = CheckpointManager(tmp, reg,
+                                make_policy("parity", model.layer_units()),
+                                async_save=False)
+        mgr.save(state, step=7)
+        state2 = jax.tree.map(
+            lambda x: x * 1.01 if x.dtype != jnp.int32 else x, state)
+        mgr.save(state2, step=9)
+        # unsharded engine restore = the reference Frankenstein (half the
+        # units from step 9, the parity-skipped half carried from step 7)
+        expect = mgr.restore(steps_lib.state_specs(model))
+        mgr.close()
+        for shape in [(2, 4), (4, 2)]:
+            mesh = make_debug_mesh(*shape)
+            restored = restore_on_mesh(tmp, model, mesh)
+            for key in ("params", "opt"):
+                for a, b in zip(jax.tree.leaves(expect[key]),
+                                jax.tree.leaves(restored[key])):
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+            assert int(restored["step"]) == 9
+            leaf = jax.tree.leaves(restored["params"])[0]
+            assert len(leaf.sharding.device_set) >= 1
+        # params-only elastic restore places only the weights
+        mesh = make_debug_mesh(2, 4)
+        w = restore_on_mesh(tmp, model, mesh, parts=("params",))
+        assert "opt" not in w
+        for a, b in zip(jax.tree.leaves(expect["params"]),
+                        jax.tree.leaves(w["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print("OK")
+    """)
