@@ -1,6 +1,7 @@
 """Shared benchmark plumbing."""
 from __future__ import annotations
 
+import json
 import sys
 import time
 from pathlib import Path
@@ -17,6 +18,17 @@ def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
     line = f"{name},{us_per_call:.1f},{derived}"
     print(line)
     return line
+
+
+def write_bench_json(name: str, payload: dict) -> Path:
+    """Machine-readable benchmark artifact: ``BENCH_<name>.json`` at the
+    repo root (gitignored), so the perf trajectory of later PRs can diff
+    structured numbers instead of scraping csv_row lines."""
+    path = Path(__file__).resolve().parent.parent / f"BENCH_{name}.json"
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True,
+                               default=str))
+    print(f"[bench] wrote {path}")
+    return path
 
 
 class Timer:

@@ -22,16 +22,25 @@ engine: pipelined vs strictly-sequential execution of the same read
 plan, and full-state vs params-only partial restore — each row carries
 the engine's bytes-read accounting (see docs/restore.md).
 
+A tier probe (docs/storage.md) runs the same drifting save workload
+against a durable local store (fsync'd — durability paid at save time)
+and the tiered store (hot RAM tier, durability deferred to the async
+spill lane): per-event hot-tier save wall-clock vs the durable baseline
+(the hot save must be strictly faster — asserted), spill-backlog drain
+time, and restore-from-hot vs restore-from-durable.
+
 ``--smoke`` runs a 5-step variant of all of the above (used by
-``scripts/check.sh smoke``).
+``scripts/check.sh smoke``), and every run writes the full structured
+result set to ``BENCH_ckpt_time.json`` for trajectory tracking.
 """
 from __future__ import annotations
 
 import argparse
 import shutil
 import tempfile
+from pathlib import Path
 
-from _util import Timer, csv_row
+from _util import Timer, csv_row, write_bench_json
 
 BASE = dict(arch="llama3.2-3b", batch=8, seq_len=64, seed=0, lr=1e-3)
 
@@ -120,6 +129,101 @@ def restore_probe() -> dict:
     return out
 
 
+def tier_probe(events: int = 3) -> dict:
+    """Same drifting-save workload on two IO stacks:
+
+    - ``durable``: local backend with fsync (durability is paid inside
+      every save call — the tiered design's baseline),
+    - ``tiered``: hot RAM tier; durability deferred to the spill lane.
+
+    Reports per-event save wall-clock for both (the hot-tier save must
+    be strictly below the durable baseline — asserted, this is the
+    acceptance gate), the spill-backlog drain time, and restore wall-
+    clock from the hot tier vs from the durable tier alone."""
+    import jax
+    import jax.numpy as jnp
+    from repro.checkpoint.backends import (
+        LocalFSBackend, MemoryBackend, TieredBackend)
+    from repro.configs import get_config
+    from repro.core import LayerRegistry, make_policy
+    from repro.checkpoint.saver import CheckpointManager
+    from repro.launch import steps as steps_lib
+    from repro.models import build_model
+
+    cfg = get_config("llama3.2-3b", reduced=True)
+    model = build_model(cfg)
+    state0 = steps_lib.init_state(model, jax.random.key(0))
+    registry = LayerRegistry(model)
+    like = steps_lib.state_specs(model)
+
+    def drift(s):
+        return jax.tree.map(
+            lambda x: x * 1.01 if x.dtype != jnp.int32 else x, s)
+
+    out = {}
+    roots = {}
+    for arm in ("durable", "tiered"):
+        tmp = tempfile.mkdtemp(prefix=f"bench_tier_{arm}_")
+        roots[arm] = tmp
+        durable = LocalFSBackend(Path(tmp) / "objects", fsync=True)
+        backend = (durable if arm == "durable"
+                   else TieredBackend(MemoryBackend(), durable))
+        mgr = CheckpointManager(tmp, registry,
+                                make_policy("full", model.layer_units()),
+                                async_save=False, store_backend=backend)
+        mgr.save(state0, step=0)  # warmup event: jit compiles + first fulls
+        state = drift(state0)
+        save_s = []
+        for i in range(events):
+            with Timer() as t:
+                mgr.save(state, step=(i + 1) * 10)
+            save_s.append(t.seconds)
+            state = drift(state)
+        with Timer() as t:
+            mgr.drain_spill()
+        drain_s = t.seconds
+        with Timer() as t:
+            mgr.restore(like)   # tiered: served by the (warm) hot tier
+        restore_warm_s = t.seconds
+        rstats = dict(mgr.last_restore_stats)
+        mgr.close()
+        out[arm] = {"save_seconds_per_event": sum(save_s) / events,
+                    "save_seconds": save_s,
+                    "spill_drain_seconds": drain_s,
+                    "restore_warm_seconds": restore_warm_s,
+                    "restore_warm_tier_reads": rstats.get("tier_reads", {})}
+        csv_row(f"ckpt_tier_save_{arm}", sum(save_s) / events * 1e6,
+                f"save_s_per_event={sum(save_s)/events:.4f};"
+                f"spill_drain_s={drain_s:.4f};"
+                f"restore_warm_s={restore_warm_s:.4f}")
+
+    # restore-from-durable-only: fresh tiered manager, empty hot tier
+    mgr = CheckpointManager(
+        roots["tiered"], registry, make_policy("full", model.layer_units()),
+        async_save=False, store_backend="tiered")
+    with Timer() as t:
+        mgr.restore(like)
+    cold = dict(mgr.last_restore_stats)
+    mgr.close()
+    out["restore_from_durable_seconds"] = t.seconds
+    out["restore_from_durable_tier_reads"] = cold.get("tier_reads", {})
+    csv_row("ckpt_tier_restore_durable", t.seconds * 1e6,
+            f"restore_s={t.seconds:.4f};"
+            f"tier_reads={cold.get('tier_reads', {})}")
+    for tmp in roots.values():
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    hot = out["tiered"]["save_seconds_per_event"]
+    durable = out["durable"]["save_seconds_per_event"]
+    csv_row("ckpt_tier_speedup", 0.0,
+            f"hot_vs_durable_save={durable / max(hot, 1e-9):.2f}x;"
+            f"spill_drain_s={out['tiered']['spill_drain_seconds']:.4f}")
+    assert hot < durable, (
+        f"hot-tier save ({hot:.4f}s/event) must be strictly below the "
+        f"durable baseline ({durable:.4f}s/event)")
+    return out
+
+
 def run(smoke: bool = False) -> dict:
     from repro.launch.train import train
 
@@ -145,6 +249,10 @@ def run(smoke: bool = False) -> dict:
     # saves would warm the same caches anyway; keeping it here preserves
     # the comment above about what warms what).
     out["restore"] = restore_probe()
+
+    # Tier probe: hot-tier save latency vs the durable baseline, spill
+    # drain, restore-from-hot vs restore-from-durable (docs/storage.md).
+    out["tiers"] = tier_probe(events=2 if smoke else 3)
 
     if smoke:
         steps, interval = 5, 2
@@ -175,11 +283,16 @@ def run(smoke: bool = False) -> dict:
         # fraction_reduction > 1 means `tag` spends a smaller fraction of
         # wall-clock on checkpointing than the baseline run.
         if tag != base_tag and not tag.startswith("resave_") \
-                and tag != "restore" and r["ckpt_time_fraction"] > 0:
+                and tag not in ("restore", "tiers") \
+                and r["ckpt_time_fraction"] > 0:
             csv_row(f"ckpt_time_speedup_{tag}", 0.0,
                     f"fraction_reduction="
                     f"{base / r['ckpt_time_fraction']:.2f}x;"
                     f"baseline={base_tag}")
+    for r in out.values():
+        if isinstance(r, dict):
+            r.pop("losses", None)  # per-step series: noise in the artifact
+    write_bench_json("ckpt_time", dict(out, smoke=smoke))
     return out
 
 

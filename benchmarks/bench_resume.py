@@ -14,6 +14,9 @@ engine's accounting: ``restore_s``, ``restore_read_bytes``, and
 a full-state restore against a params-only partial restore on the
 reference checkpoint — the partial restore must read strictly fewer
 bytes (it never touches optimizer objects).
+
+Every run also writes the structured result set to ``BENCH_resume.json``
+(machine-readable perf trajectory for later PRs).
 """
 from __future__ import annotations
 
@@ -22,7 +25,7 @@ import tempfile
 
 import numpy as np
 
-from _util import csv_row
+from _util import csv_row, write_bench_json
 
 BASE = dict(arch="llama3.2-3b", total_steps=90, batch=8, seq_len=64,
             ckpt_interval=20, seed=0, lr=2e-3)
@@ -63,7 +66,8 @@ def _eval_loss(ckpt_dir: str) -> dict:
 def _restore_cols(r: dict) -> str:
     return (f"restore_s={r['seconds']:.4f};"
             f"restore_read_bytes={r['bytes_read']};"
-            f"restore_fallbacks={len(r['fallback_units'])}")
+            f"restore_fallbacks={len(r['fallback_units'])};"
+            f"restore_tier_reads={r.get('tier_reads', {})}")
 
 
 def _full_vs_partial(ckpt_dir: str) -> dict:
@@ -130,6 +134,7 @@ def run() -> dict:
                 + _restore_cols(ev["restore"]))
         shutil.rmtree(d, ignore_errors=True)
     shutil.rmtree(ref_dir, ignore_errors=True)
+    write_bench_json("resume", out)
     return out
 
 

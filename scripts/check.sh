@@ -2,12 +2,23 @@
 # Tier-1 verify: the command CI and ROADMAP.md treat as the gate.
 #   scripts/check.sh            # full suite (the tier-1 gate)
 #   scripts/check.sh smoke      # fast tier: docs link check + tests minus
-#                               # slow marks + restore smoke + a 5-step
-#                               # bench_ckpt_time fingerprint smoke
+#                               # slow marks + restore/tiered smokes + a
+#                               # 5-step bench_ckpt_time fingerprint smoke
 #   scripts/check.sh tests/test_checkpoint.py   # pass-through args
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "# compileall (syntax gate over every python tree)"
+python -m compileall -q src tests benchmarks scripts
+
+echo "# tracked-bytecode guard (no *.pyc may be committed)"
+if git ls-files -- '*.pyc' '*.pyo' | grep -q .; then
+  echo "ERROR: tracked bytecode files found (git ls-files '*.pyc'):" >&2
+  git ls-files -- '*.pyc' '*.pyo' >&2
+  exit 1
+fi
+
 if [ "${1:-}" = "smoke" ]; then
   shift
   echo "# docs link check (README <-> docs/*.md, no dangling links)"
@@ -15,6 +26,8 @@ if [ "${1:-}" = "smoke" ]; then
   python -m pytest -q -m "not slow" "$@"
   echo "# restore smoke (save 2 parity events, pipelined restore, bit-exact)"
   python scripts/restore_smoke.py
+  echo "# tiered smoke (save to memory tier -> spill -> restore bit-exact)"
+  python scripts/tiered_smoke.py
   echo "# bench_ckpt_time --smoke (save+restore pipelines end to end)"
   python benchmarks/bench_ckpt_time.py --smoke
   exit 0

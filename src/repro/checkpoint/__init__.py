@@ -6,22 +6,41 @@ The package is layered (see docs/architecture.md for the full dataflow):
   serialized device-count independent, the basis of elastic restart.
 - ``compression`` — per-tensor codecs (none/zstd/int8) plus the two
   chunk-level delta codecs (sparse-XOR v1, block-sparse v2).
-- ``chunk_store`` — the content-addressed object store: one file per
-  distinct content digest under ``objects/``, cross-step dedup, delta
-  encoding against full bases, refcounted GC, and ``ReadSession`` (the
-  restore engine's read-once coalescing cache).  There are no step
-  directories: manifests reference digests, retention is refcounts.
+- ``chunk_store`` — the content-addressed *addressing/codec core*: one
+  object per distinct content digest, cross-step dedup, delta encoding
+  against full bases, refcounted GC, and ``ReadSession`` (the restore
+  engine's read-once coalescing cache).  There are no step directories:
+  manifests reference digests, retention is refcounts.  All object-byte
+  IO is delegated to a backend.
+- ``backends`` — the swappable IO tiers under the core (see
+  docs/storage.md): ``LocalFSBackend`` (the classic ``objects/`` tree),
+  ``MemoryBackend`` (volatile RAM tier), and ``TieredBackend`` (hot RAM
+  over durable disk with async spill, promotion-on-read, and LRU
+  eviction under a byte budget).
 - ``fingerprint`` — host-side plumbing for the device-side block
   fingerprint save path (tables, digests, packets; see docs/perf.md).
-- ``async_io`` — the bounded background writer pool that overlaps
-  encode/write with training compute (CheckFreq-style).
+- ``async_io`` — ``TransferPool``, the unified bounded transfer
+  executor (CheckFreq-style): saver chunk writes and tiered spill run
+  as separate lanes of one shared pool; ``AsyncWriter`` is the saver's
+  lane facade.
 - ``saver`` — ``CheckpointManager``: policy-driven selective save,
   manifest commit, GC, and the restore entry point.
 - ``restore`` — the planned, pipelined restore engine: deduplicated
   read plans, a streaming executor overlapping disk/decode/H2D, and
   partial (weights-only / unit-filtered) restore (see docs/restore.md).
 """
-from repro.checkpoint.async_io import AsyncWriteError, AsyncWriter  # noqa: F401
+from repro.checkpoint.async_io import (  # noqa: F401
+    AsyncWriteError,
+    AsyncWriter,
+    TransferPool,
+)
+from repro.checkpoint.backends import (  # noqa: F401
+    LocalFSBackend,
+    MemoryBackend,
+    StorageBackend,
+    TieredBackend,
+    make_backend,
+)
 from repro.checkpoint.chunk_store import (  # noqa: F401
     ChunkRef,
     ChunkStore,

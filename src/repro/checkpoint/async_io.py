@@ -1,25 +1,37 @@
-"""Background checkpoint writer (CheckFreq-style compute/IO overlap).
+"""Unified background transfer executor (CheckFreq-style compute/IO overlap).
 
-``AsyncWriter`` owns a bounded work queue and a thread pool; ``submit``
-enqueues chunk writes after the caller has snapshotted device arrays to host
-(the snapshot is the only synchronous cost on the training thread).  zstd
-compression and file IO release the GIL, so writes overlap training compute.
+One bounded thread pool — :class:`TransferPool` — carries every
+asynchronous byte movement in the checkpoint subsystem: chunk writes
+enqueued by the saver AND hot→durable spill copies enqueued by a tiered
+backend.  Work is tagged with a *lane* name so producers can drain their
+own lane without waiting on anyone else's: the saver's pre-manifest
+barrier drains the ``"write"`` lane only, which is exactly why spill can
+keep overlapping training after the manifest has committed.
 
-With the fingerprint save path the overlap is a real pipeline: the training
-thread gathers unit N+1's dirty blocks (device compare + D2H) while the
-writer threads hash, encode, and write unit N's packet — the three stages
-run on different resources (device+PCIe vs CPU vs disk), so a save event's
-wall-clock approaches the slowest stage instead of the sum.
+:class:`AsyncWriter` is the saver-facing facade over one lane.  Its API
+(submit/drain/wait/close, errors surfacing on drain) is unchanged from
+when it owned a private pool; it now either owns a TransferPool or
+shares one the caller provides.  zstd compression and file IO release
+the GIL, so transfers overlap training compute.
 
-Errors surface on ``wait()``/``drain()`` — a failed save must never be
-silently dropped (the manifest for that event is only committed after every
-chunk of the event has landed).
+With the fingerprint save path the overlap is a real pipeline: the
+training thread gathers unit N+1's dirty blocks (device compare + D2H)
+while pool threads hash, encode, and write unit N's packet — and, under
+a tiered store, spill unit N-1's object to the durable tier.  The stages
+run on different resources (device+PCIe vs CPU vs disk), so a save
+event's wall-clock approaches the slowest stage instead of the sum.
+
+Errors surface on ``drain()`` of the lane that produced them — a failed
+save must never be silently dropped (the manifest for that event is only
+committed after every chunk of the event has landed), and a failed spill
+must never fail an unrelated save barrier (it surfaces on the spill
+lane's drain, i.e. the durability barrier or close).
 """
 from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
 
 _SENTINEL = object()
 
@@ -29,13 +41,14 @@ class AsyncWriteError(RuntimeError):
 
 
 class PendingResult:
-    """Return value of ``submit``: readable after ``drain()``/``wait()``.
+    """Return value of ``submit``: readable after the lane's drain (or
+    ``wait()``).
 
     The content-addressed store only knows a chunk's digest once the writer
     thread has hashed the payload (or its fingerprint table), so the saver
     collects these and resolves them into manifest entries after the drain
     barrier.  ``wait()``/``done()`` allow waiting on a single result
-    without draining the whole queue.
+    without draining the whole lane.
     """
     __slots__ = ("_value", "_error", "_event")
 
@@ -48,7 +61,7 @@ class PendingResult:
         return self._event.is_set()
 
     def wait(self, timeout: Optional[float] = None) -> bool:
-        """Block until this write finishes; True iff it did in time."""
+        """Block until this transfer finishes; True iff it did in time."""
         return self._event.wait(timeout)
 
     def result(self, timeout: Optional[float] = None):
@@ -60,21 +73,35 @@ class PendingResult:
         return self._value
 
 
-class AsyncWriter:
-    def __init__(self, num_threads: int = 2, max_queue: int = 64):
+class TransferPool:
+    """Bounded thread pool with per-lane accounting.
+
+    ``submit(lane, fn, ...)`` enqueues work; ``drain(lane)`` blocks until
+    that lane's outstanding count hits zero and raises its collected
+    errors.  Lanes are cheap strings — current users: ``"write"`` (saver
+    chunk writes) and ``"spill"`` (tiered hot→durable copies).
+    """
+
+    def __init__(self, num_threads: int = 2, max_queue: int = 0):
+        # Default unbounded: pool workers themselves enqueue follow-up
+        # work (a chunk write on the "write" lane triggers a spill submit
+        # on the "spill" lane), and a bounded queue could deadlock with
+        # every worker blocked on a full put.  Producers that want
+        # backpressure (the legacy AsyncWriter-owned pool, which never
+        # nests submits) pass an explicit bound.
         self._q: "queue.Queue" = queue.Queue(maxsize=max_queue)
-        self._errors: List[BaseException] = []
-        self._err_lock = threading.Lock()
-        # Guards the open flag vs. close(): a submit that checked _open
-        # before close() flipped it must finish its enqueue before close()
-        # drains, or the item could land behind the shutdown sentinels and
-        # never run (its PendingResult would then never resolve).
-        self._state_lock = threading.Lock()
+        # One lock/condition guards open flag, per-lane outstanding counts
+        # and per-lane error lists: a submit that won the open-check must
+        # have its increment visible before close() starts waiting, or the
+        # item could land behind the shutdown sentinels and never run.
+        self._cond = threading.Condition()
         self._open = True
+        self._outstanding: Dict[str, int] = {}
+        self._errors: Dict[str, List[BaseException]] = {}
         self._threads = [
-            threading.Thread(target=self._run, name=f"ckpt-writer-{i}",
+            threading.Thread(target=self._run, name=f"ckpt-transfer-{i}",
                              daemon=True)
-            for i in range(num_threads)
+            for i in range(max(1, num_threads))
         ]
         for t in self._threads:
             t.start()
@@ -85,38 +112,100 @@ class AsyncWriter:
             try:
                 if item is _SENTINEL:
                     return
-                fn, args, kwargs, pending = item
+                lane, fn, args, kwargs, pending = item
                 try:
                     pending._value = fn(*args, **kwargs)
                 except BaseException as e:  # noqa: BLE001
                     pending._error = e
-                    with self._err_lock:
-                        self._errors.append(e)
+                    with self._cond:
+                        self._errors.setdefault(lane, []).append(e)
                 finally:
                     pending._event.set()
+                    with self._cond:
+                        self._outstanding[lane] -= 1
+                        self._cond.notify_all()
             finally:
                 self._q.task_done()
 
-    def submit(self, fn: Callable, *args, **kwargs) -> PendingResult:
+    def submit(self, lane: str, fn: Callable, *args, **kwargs
+               ) -> PendingResult:
         pending = PendingResult()
-        # Enqueue under the state lock: workers never take this lock, so a
-        # full queue still drains while we hold it, and close() cannot
-        # interleave between the open-check and the put.
+        with self._cond:
+            if not self._open:
+                raise AsyncWriteError("transfer pool is closed")
+            self._outstanding[lane] = self._outstanding.get(lane, 0) + 1
+        # The put happens outside the lock so a full queue still drains
+        # (workers never take the condition while executing user work for
+        # longer than a counter update).  close() waits on the counters,
+        # not the queue, so this item can never be stranded.
+        self._q.put((lane, fn, args, kwargs, pending))
+        return pending
+
+    def outstanding(self, lane: str) -> int:
+        with self._cond:
+            return self._outstanding.get(lane, 0)
+
+    def drain(self, lane: str) -> None:
+        """Block until ``lane`` has no outstanding work; raise its errors."""
+        with self._cond:
+            self._cond.wait_for(
+                lambda: self._outstanding.get(lane, 0) == 0)
+            errs = self._errors.pop(lane, [])
+        if errs:
+            raise AsyncWriteError(
+                f"{len(errs)} checkpoint transfer(s) failed on lane "
+                f"{lane!r}: {errs[0]!r}") from errs[0]
+
+    def drain_all(self) -> None:
+        with self._cond:
+            lanes = list(self._outstanding)
+        for lane in lanes:
+            self.drain(lane)
+
+    def close(self) -> None:
+        with self._cond:
+            if not self._open:
+                return
+            self._open = False
+            # Every accepted submit incremented its lane before we flipped
+            # _open, so waiting the counters down waits ALL accepted work.
+            self._cond.wait_for(
+                lambda: all(n == 0 for n in self._outstanding.values()))
+        for _ in self._threads:
+            self._q.put(_SENTINEL)
+        for t in self._threads:
+            t.join(timeout=10)
+
+
+class AsyncWriter:
+    """Saver-facing facade over one TransferPool lane.
+
+    ``AsyncWriter(n)`` owns a private pool (legacy shape, used by tests
+    and standalone stores); ``AsyncWriter(pool=shared)`` rides a shared
+    pool and ``close()`` then only seals this writer's lane — the pool
+    (and other lanes, e.g. tiered spill) keeps running.
+    """
+
+    LANE = "write"
+
+    def __init__(self, num_threads: int = 2, max_queue: int = 64, *,
+                 pool: Optional[TransferPool] = None, lane: str = LANE):
+        self._owns_pool = pool is None
+        self.pool = pool if pool is not None \
+            else TransferPool(num_threads, max_queue)
+        self.lane = lane
+        self._state_lock = threading.Lock()
+        self._open = True
+
+    def submit(self, fn: Callable, *args, **kwargs) -> PendingResult:
         with self._state_lock:
             if not self._open:
                 raise AsyncWriteError("writer is closed")
-            self._q.put((fn, args, kwargs, pending))
-        return pending
+            return self.pool.submit(self.lane, fn, *args, **kwargs)
 
     def drain(self) -> None:
         """Block until all queued writes finish; raise collected errors."""
-        self._q.join()
-        with self._err_lock:
-            if self._errors:
-                errs, self._errors = self._errors, []
-                raise AsyncWriteError(
-                    f"{len(errs)} checkpoint write(s) failed: {errs[0]!r}"
-                ) from errs[0]
+        self.pool.drain(self.lane)
 
     def wait(self) -> None:
         """Alias of ``drain()`` — the barrier the docstrings promise."""
@@ -127,11 +216,10 @@ class AsyncWriter:
             if not self._open:
                 return
             self._open = False
-        self._q.join()
-        for _ in self._threads:
-            self._q.put(_SENTINEL)
-        for t in self._threads:
-            t.join(timeout=10)
+        if self._owns_pool:
+            self.pool.close()
+        else:
+            self.pool.drain(self.lane)
 
     def __enter__(self) -> "AsyncWriter":
         return self

@@ -1,0 +1,64 @@
+"""Swappable IO tiers under the content-addressed chunk store.
+
+``ChunkStore`` is the addressing/codec core; everything about *where*
+object bytes live is behind :class:`StorageBackend`:
+
+- :class:`LocalFSBackend` — the classic POSIX ``objects/`` fan-out tree
+  (the default, byte-compatible with pre-backend checkpoint roots),
+- :class:`MemoryBackend` — a RAM tier for high-frequency volatile
+  checkpoints,
+- :class:`TieredBackend` — hot tier + durable tier with asynchronous
+  spill, promotion-on-read, and LRU eviction under a hot-byte budget.
+
+``make_backend`` maps the user-facing ``store_backend=`` knob
+("local" | "memory" | "tiered") to a configured instance rooted under a
+checkpoint root's ``objects/`` (durable) and ``hot/`` (tiered fast-disk
+variants) directories.  See docs/storage.md.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Optional
+
+from repro.checkpoint.async_io import TransferPool
+from repro.checkpoint.backends.base import StorageBackend  # noqa: F401
+from repro.checkpoint.backends.localfs import (  # noqa: F401
+    LocalFSBackend,
+    atomic_write,
+)
+from repro.checkpoint.backends.memory import MemoryBackend  # noqa: F401
+from repro.checkpoint.backends.tiered import (  # noqa: F401
+    SPILL_LANE,
+    TieredBackend,
+)
+
+BACKEND_NAMES = ("local", "memory", "tiered")
+
+
+def make_backend(spec: "str | StorageBackend", root: Path | str, *,
+                 fsync: bool = False,
+                 pool: Optional[TransferPool] = None,
+                 spill_threads: int = 2,
+                 hot_budget_bytes: Optional[int] = None) -> StorageBackend:
+    """Resolve a ``store_backend`` knob into a backend instance.
+
+    ``root`` is the checkpoint root; the durable object tree lives at
+    ``root/objects`` (unchanged on-disk layout).  ``spec`` may already be
+    a StorageBackend (passed through untouched — the caller composed its
+    own tiers, e.g. fast-disk over slow-disk).
+    """
+    if isinstance(spec, StorageBackend):
+        return spec
+    root = Path(root)
+    if spec == "local":
+        return LocalFSBackend(root / "objects", fsync=fsync)
+    if spec == "memory":
+        return MemoryBackend()
+    if spec == "tiered":
+        return TieredBackend(
+            MemoryBackend(), LocalFSBackend(root / "objects", fsync=fsync),
+            pool=pool, spill_threads=spill_threads,
+            hot_budget_bytes=hot_budget_bytes)
+    raise ValueError(
+        f"unknown store backend {spec!r}; expected one of {BACKEND_NAMES} "
+        "or a StorageBackend instance")

@@ -1,0 +1,97 @@
+"""StorageBackend — the IO tier contract under the content-addressed core.
+
+``ChunkStore`` owns addressing (digests), codecs (delta/fingerprint
+envelopes), dedup, and refcounted lifetimes; a backend owns nothing but
+*where object bytes live*.  The contract is deliberately tiny — an object
+is an opaque blob keyed by its digest string — so a tier can be a POSIX
+fan-out tree (:class:`~repro.checkpoint.backends.localfs.LocalFSBackend`),
+a RAM dict (:class:`~repro.checkpoint.backends.memory.MemoryBackend`), or
+a hot/durable composition with asynchronous spill
+(:class:`~repro.checkpoint.backends.tiered.TieredBackend`).
+
+Semantics every implementation must honor:
+
+- ``write`` is atomic and idempotent: a torn write must never be visible
+  to ``read``/``has``, and writing a key that already exists is a no-op
+  at worst (content addressing makes the payload identical by
+  construction).
+- ``read`` of an absent key raises ``FileNotFoundError`` — the restore
+  fallback machinery catches exactly that (plus ``ChunkCorruption``).
+- ``delete`` is the *only* way bytes leave a tier permanently; the store
+  calls it exclusively from refcounted GC.  Tiered eviction may drop a
+  key from a fast tier, but only after the durable tier holds it.
+- ``sweep_tmp`` reclaims crash leftovers of the tier's own atomic-write
+  protocol and must never touch committed objects (in any tier).
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, Iterator, Optional
+
+
+class StorageBackend:
+    """Abstract object-byte tier.  Keys are content digests (hex)."""
+
+    #: short identifier used in manifests / stats ("local", "memory", ...)
+    name: str = "abstract"
+
+    # ---- byte IO ----
+    def read(self, key: str) -> bytes:
+        raise NotImplementedError
+
+    def write(self, key: str, data: bytes) -> int:
+        """Persist ``data`` under ``key`` atomically; returns len(data)."""
+        raise NotImplementedError
+
+    def has(self, key: str) -> bool:
+        raise NotImplementedError
+
+    def size(self, key: str) -> int:
+        """Stored size of ``key`` in bytes (FileNotFoundError if absent)."""
+        raise NotImplementedError
+
+    def delete(self, key: str) -> int:
+        """Remove ``key`` from every tier; returns bytes freed (0 if
+        absent).  GC-only."""
+        raise NotImplementedError
+
+    def keys(self) -> Iterator[str]:
+        """All keys currently readable through this backend (any tier)."""
+        raise NotImplementedError
+
+    # ---- maintenance ----
+    def sweep_tmp(self) -> int:
+        """Reclaim crash-leftover temporaries; returns bytes freed."""
+        return 0
+
+    def close(self) -> None:
+        """Release resources.  Tiered backends finish pending spills
+        first so close never abandons not-yet-durable objects."""
+
+    # ---- tier introspection (trivial for single-tier backends) ----
+    def locate(self, key: str) -> Optional[str]:
+        """Name of the fastest tier currently holding ``key`` (None if
+        absent everywhere)."""
+        return self.name if self.has(key) else None
+
+    def durable_tier(self) -> str:
+        """Name of the tier that survives process exit ("none" for pure
+        RAM backends)."""
+        return self.name
+
+    def drain(self) -> None:
+        """Barrier: block until every asynchronously-pending transfer
+        (spill) has landed.  No-op for single-tier backends."""
+
+    def pending_spill(self) -> int:
+        """Objects written but not yet durable (0 for single-tier)."""
+        return 0
+
+    def tier_stats(self) -> Dict[str, int]:
+        """Monotonic per-tier counters (reads/writes/spills/...)."""
+        return {}
+
+    def path_of(self, key: str) -> Optional[Path]:
+        """Filesystem path of ``key`` if some tier is path-backed (tests
+        and offline tools poke objects directly); None otherwise."""
+        return None

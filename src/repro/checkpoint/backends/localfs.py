@@ -1,0 +1,108 @@
+"""LocalFSBackend — the POSIX object tree extracted from ChunkStore.
+
+Layout (unchanged from the pre-backend store, so existing checkpoint
+roots keep working):
+
+    <dir>/ab/abcdef...123.chunk     # two-hex-char fan-out, one file/object
+
+``atomic_write`` is the shared tmp+rename+fsync protocol; the manifest
+store uses it too (manifest-last commit), which is why it lives here as a
+public function rather than a backend method.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from pathlib import Path
+from typing import Dict, Iterator, Optional
+
+from repro.checkpoint.backends.base import StorageBackend
+
+
+def atomic_write(path: Path, data: bytes, *, fsync: bool = True) -> None:
+    # Unique tmp name: concurrent writers of the SAME destination (two
+    # async-writer threads persisting bitwise-identical units dedup to one
+    # digest) must not truncate each other's in-progress file; os.replace
+    # then publishes whichever complete file lands last.
+    tmp = path.with_suffix(
+        path.suffix + f".tmp-{os.getpid():x}-{threading.get_ident():x}")
+    tmp.parent.mkdir(parents=True, exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(data)
+        if fsync:
+            f.flush()
+            os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+class LocalFSBackend(StorageBackend):
+    name = "local"
+
+    def __init__(self, root: Path | str, *, fsync: bool = False):
+        self.root = Path(root)
+        self.fsync = fsync
+        self._lock = threading.Lock()
+        self._stats = {"reads": 0, "writes": 0, "read_bytes": 0,
+                       "written_bytes": 0}
+
+    def _path(self, key: str) -> Path:
+        return self.root / key[:2] / f"{key}.chunk"
+
+    # ---- byte IO ----
+    def read(self, key: str) -> bytes:
+        blob = self._path(key).read_bytes()
+        with self._lock:
+            self._stats["reads"] += 1
+            self._stats["read_bytes"] += len(blob)
+        return blob
+
+    def write(self, key: str, data: bytes) -> int:
+        atomic_write(self._path(key), data, fsync=self.fsync)
+        with self._lock:
+            self._stats["writes"] += 1
+            self._stats["written_bytes"] += len(data)
+        return len(data)
+
+    def has(self, key: str) -> bool:
+        return self._path(key).is_file()
+
+    def size(self, key: str) -> int:
+        return self._path(key).stat().st_size
+
+    def delete(self, key: str) -> int:
+        p = self._path(key)
+        try:
+            freed = p.stat().st_size
+            p.unlink()
+        except FileNotFoundError:
+            return 0
+        try:
+            p.parent.rmdir()  # prune empty fan-out dirs opportunistically
+        except OSError:
+            pass
+        return freed
+
+    def keys(self) -> Iterator[str]:
+        if self.root.is_dir():
+            for f in sorted(self.root.glob("*/*.chunk")):
+                yield f.stem
+
+    # ---- maintenance ----
+    def sweep_tmp(self) -> int:
+        """Crash-leftover ``*.tmp-*`` files from ``atomic_write``."""
+        freed = 0
+        if self.root.is_dir():
+            for tmp in self.root.glob("*/*.tmp-*"):
+                try:
+                    freed += tmp.stat().st_size
+                    tmp.unlink()
+                except FileNotFoundError:
+                    continue
+        return freed
+
+    def tier_stats(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self._stats)
+
+    def path_of(self, key: str) -> Optional[Path]:
+        return self._path(key)

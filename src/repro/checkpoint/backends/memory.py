@@ -1,0 +1,101 @@
+"""MemoryBackend — the RAM tier.
+
+A thread-safe ordered dict of key -> bytes.  Insertion/touch order is
+maintained (reads move a key to the MRU position) so a composing
+:class:`~repro.checkpoint.backends.tiered.TieredBackend` can evict in
+LRU order; the backend itself never evicts — dropping bytes that are not
+yet durable anywhere is a policy decision that belongs to the tier
+composition, not to the dict.
+
+Used standalone (``store_backend="memory"``) it gives volatile
+high-frequency checkpoints: save latency is a memcpy, and durability is
+explicitly *none* (``durable_tier() == "none"``) — the manifest records
+that, so a restore after process death knows nothing survived.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Iterator, Optional
+
+from repro.checkpoint.backends.base import StorageBackend
+
+
+class MemoryBackend(StorageBackend):
+    name = "memory"
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._objects: Dict[str, bytes] = {}
+        self._bytes = 0
+        self._stats = {"reads": 0, "writes": 0, "read_bytes": 0,
+                       "written_bytes": 0}
+
+    # ---- byte IO ----
+    def read(self, key: str) -> bytes:
+        with self._lock:
+            blob = self._objects.pop(key, None)
+            if blob is None:
+                raise FileNotFoundError(f"memory tier has no object {key}")
+            self._objects[key] = blob  # move to MRU position
+            self._stats["reads"] += 1
+            self._stats["read_bytes"] += len(blob)
+            return blob
+
+    def write(self, key: str, data: bytes) -> int:
+        data = bytes(data)
+        with self._lock:
+            old = self._objects.pop(key, None)
+            if old is not None:
+                self._bytes -= len(old)
+            self._objects[key] = data
+            self._bytes += len(data)
+            self._stats["writes"] += 1
+            self._stats["written_bytes"] += len(data)
+        return len(data)
+
+    def has(self, key: str) -> bool:
+        with self._lock:
+            return key in self._objects
+
+    def size(self, key: str) -> int:
+        with self._lock:
+            blob = self._objects.get(key)
+        if blob is None:
+            raise FileNotFoundError(f"memory tier has no object {key}")
+        return len(blob)
+
+    def delete(self, key: str) -> int:
+        with self._lock:
+            blob = self._objects.pop(key, None)
+            if blob is None:
+                return 0
+            self._bytes -= len(blob)
+            return len(blob)
+
+    def keys(self) -> Iterator[str]:
+        with self._lock:
+            snapshot = list(self._objects)
+        return iter(sorted(snapshot))
+
+    def lru_keys(self) -> Iterator[str]:
+        """Keys in least-recently-used-first order (eviction scan order
+        for a composing tiered backend)."""
+        with self._lock:
+            snapshot = list(self._objects)
+        return iter(snapshot)
+
+    # ---- introspection ----
+    def total_bytes(self) -> int:
+        with self._lock:
+            return self._bytes
+
+    def durable_tier(self) -> str:
+        return "none"
+
+    def tier_stats(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self._stats, resident_bytes=self._bytes,
+                        resident_objects=len(self._objects))
+
+    def path_of(self, key: str) -> Optional[str]:
+        return None

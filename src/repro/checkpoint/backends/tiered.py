@@ -1,0 +1,275 @@
+"""TieredBackend — fast hot tier over a durable tier with async spill.
+
+The TierCheck/DataStates-LLM shape: every write lands in the *hot* tier
+(RAM by default) so save latency is decoupled from disk, and a spill
+task is enqueued on a :class:`~repro.checkpoint.async_io.TransferPool`
+lane to copy the object to the *durable* tier in the background —
+overlapping training exactly like the saver's own write lane (one shared
+pool carries both; see async_io).
+
+Read path prefers the fastest holder: hot hit → RAM; hot miss →
+durable read + **promotion-on-read** (the object is written back to the
+hot tier, so a restore warms the cache for the next one).
+
+Lifecycle rules that keep the composition safe:
+
+- An object may be **evicted** from the hot tier only after it has been
+  spilled (the durable tier holds it).  Eviction is LRU over the hot
+  tier, triggered when ``hot_budget_bytes`` is exceeded; unspilled
+  objects are never dropped, so a slow durable tier grows the hot tier
+  past its budget rather than losing data.
+- ``delete`` (refcounted GC) removes the key from *both* tiers and
+  cancels its pending-spill obligation.
+- ``drain()`` is the durability barrier: after it returns, every object
+  written so far is on the durable tier (spill errors surface here, on
+  the spill lane, never on the saver's write lane).
+- ``close()`` drains first — pending spills are never abandoned.
+"""
+from __future__ import annotations
+
+import logging
+import threading
+from pathlib import Path
+from typing import Dict, Iterator, Optional
+
+from repro.checkpoint.async_io import AsyncWriteError, TransferPool
+from repro.checkpoint.backends.base import StorageBackend
+from repro.checkpoint.backends.memory import MemoryBackend
+
+log = logging.getLogger("repro.checkpoint.backends")
+
+SPILL_LANE = "spill"
+
+
+class TieredBackend(StorageBackend):
+    name = "tiered"
+
+    def __init__(self, hot: StorageBackend, durable: StorageBackend, *,
+                 pool: Optional[TransferPool] = None, spill_threads: int = 2,
+                 hot_budget_bytes: Optional[int] = None,
+                 promote_on_read: bool = True):
+        self.hot = hot
+        self.durable = durable
+        self._owns_pool = pool is None
+        self.pool = pool if pool is not None \
+            else TransferPool(max(1, spill_threads))
+        self.hot_budget_bytes = hot_budget_bytes
+        # Promotion warms the hot tier for the NEXT read of the same
+        # object; with no hot_budget_bytes it can duplicate a whole
+        # checkpoint into RAM during a restore-from-durable, so one-shot
+        # restore paths may turn it off (or set a budget — promoted
+        # copies are immediately evictable).
+        self.promote_on_read = promote_on_read
+        self._lock = threading.Lock()
+        # key -> state of its hot-tier residency:
+        #   "dirty"   — hot only, not yet durable (never evictable)
+        #   "spilled" — hot + durable (evictable)
+        # keys absent from the map are durable-only (or gone).  The dirty
+        # count IS the durability debt: a failed spill leaves its key
+        # dirty, so pending_spill()/durability() never claim durable for
+        # an object the durable tier doesn't hold.
+        self._resident: Dict[str, str] = {}
+        # keys with a spill task currently queued/running (dedups repeat
+        # writes of one key and lets drain() retry failed spills).
+        self._inflight: set = set()
+        self._closed = False
+        self._stats = {"hot_writes": 0, "hot_reads": 0, "durable_reads": 0,
+                       "spilled_objects": 0, "spilled_bytes": 0,
+                       "promotions": 0, "evictions": 0, "evicted_bytes": 0}
+
+    # ------------------------------------------------------------- spill
+    def _enqueue_spill(self, key: str) -> None:
+        with self._lock:
+            if key in self._inflight:
+                return  # a queued task will pick up the current bytes
+            self._inflight.add(key)
+        try:
+            self.pool.submit(SPILL_LANE, self._spill_one, key)
+        except BaseException:
+            with self._lock:
+                self._inflight.discard(key)
+            raise
+
+    def _spill_one(self, key: str) -> None:
+        try:
+            try:
+                blob = self.hot.read(key)
+            except FileNotFoundError:
+                # GC (or an eviction after an earlier duplicate spill)
+                # removed the object before this task ran — nothing owed.
+                return
+            if not self.durable.has(key):
+                self.durable.write(key, blob)
+            with self._lock:
+                if self._resident.get(key) == "dirty":
+                    self._resident[key] = "spilled"
+                self._stats["spilled_objects"] += 1
+                self._stats["spilled_bytes"] += len(blob)
+        finally:
+            # On failure the key stays "dirty": still counted by
+            # pending_spill(), retried by the next drain(), and never
+            # evicted — the durability debt is never silently dropped.
+            with self._lock:
+                self._inflight.discard(key)
+            self._maybe_evict()
+
+    def _maybe_evict(self) -> None:
+        """Drop LRU *spilled* objects while the hot tier exceeds its
+        budget.  Requires an LRU-ordered hot tier (MemoryBackend); other
+        hot tiers simply never evict."""
+        if self.hot_budget_bytes is None:
+            return
+        lru_keys = getattr(self.hot, "lru_keys", None)
+        total_bytes = getattr(self.hot, "total_bytes", None)
+        if lru_keys is None or total_bytes is None:
+            return
+        while total_bytes() > self.hot_budget_bytes:
+            victim = None
+            with self._lock:
+                for k in lru_keys():
+                    if self._resident.get(k) == "spilled":
+                        victim = k
+                        break
+                if victim is not None:
+                    self._resident.pop(victim, None)
+            if victim is None:
+                return  # everything hot is still spill-pending
+            freed = self.hot.delete(victim)
+            with self._lock:
+                self._stats["evictions"] += 1
+                self._stats["evicted_bytes"] += freed
+
+    # ------------------------------------------------------------ byte IO
+    def read(self, key: str) -> bytes:
+        try:
+            blob = self.hot.read(key)
+            with self._lock:
+                self._stats["hot_reads"] += 1
+            return blob
+        except FileNotFoundError:
+            pass
+        blob = self.durable.read(key)
+        with self._lock:
+            self._stats["durable_reads"] += 1
+        if self.promote_on_read:
+            # Promotion-on-read: warm the hot tier (already durable, so
+            # the promoted copy is immediately evictable under budget
+            # pressure).
+            self.hot.write(key, blob)
+            with self._lock:
+                self._resident[key] = "spilled"
+                self._stats["promotions"] += 1
+            self._maybe_evict()
+        return blob
+
+    def write(self, key: str, data: bytes) -> int:
+        n = self.hot.write(key, data)
+        with self._lock:
+            self._stats["hot_writes"] += 1
+            already = self._resident.get(key)
+            self._resident[key] = ("spilled" if already == "spilled"
+                                   or self.durable.has(key) else "dirty")
+            dirty = self._resident[key] == "dirty"
+        if dirty:
+            self._enqueue_spill(key)
+        else:
+            self._maybe_evict()
+        return n
+
+    def has(self, key: str) -> bool:
+        return self.hot.has(key) or self.durable.has(key)
+
+    def size(self, key: str) -> int:
+        try:
+            return self.hot.size(key)
+        except FileNotFoundError:
+            return self.durable.size(key)
+
+    def delete(self, key: str) -> int:
+        # Count freed bytes once (the tiers hold the same blob).
+        freed_hot = self.hot.delete(key)
+        freed_durable = self.durable.delete(key)
+        with self._lock:
+            self._resident.pop(key, None)
+        return max(freed_hot, freed_durable)
+
+    def keys(self) -> Iterator[str]:
+        seen = set(self.hot.keys())
+        seen.update(self.durable.keys())
+        return iter(sorted(seen))
+
+    # -------------------------------------------------------- maintenance
+    def sweep_tmp(self) -> int:
+        """Per-tier tmp sweep: each tier reclaims its own atomic-write
+        leftovers; committed objects in either tier are never touched."""
+        return self.hot.sweep_tmp() + self.durable.sweep_tmp()
+
+    def drain(self) -> None:
+        """Durability barrier: every write so far is on the durable tier
+        when this returns, or AsyncWriteError raises.  Spills that failed
+        earlier (their keys are still dirty with no task in flight) are
+        retried once per drain, so a transient durable-tier outage heals
+        on the next barrier instead of wedging forever."""
+        with self._lock:
+            retry = [k for k, v in self._resident.items()
+                     if v == "dirty" and k not in self._inflight]
+        for k in retry:
+            self._enqueue_spill(k)
+        self.pool.drain(SPILL_LANE)
+        # Even if this drain's errors were consumed elsewhere (or a prior
+        # drain already raised them), a remaining dirty object means the
+        # barrier's promise does not hold — say so, never return clean.
+        with self._lock:
+            stuck = [k for k, v in self._resident.items() if v == "dirty"]
+        if stuck:
+            raise AsyncWriteError(
+                f"{len(stuck)} object(s) failed to spill to the durable "
+                f"tier (e.g. {stuck[0]})")
+
+    def close(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        try:
+            self.drain()
+        finally:
+            # Pools and tiers come down even when the drain raises (the
+            # durability failure has been surfaced; leaking threads on
+            # top of it helps nobody).
+            if self._owns_pool:
+                self.pool.close()
+            self.hot.close()
+            self.durable.close()
+
+    # ------------------------------------------------------ introspection
+    def locate(self, key: str) -> Optional[str]:
+        if self.hot.has(key):
+            return "hot"
+        if self.durable.has(key):
+            return "durable"
+        return None
+
+    def durable_tier(self) -> str:
+        return self.durable.durable_tier()
+
+    def pending_spill(self) -> int:
+        """Objects not yet durable — dirty residents, whether their spill
+        task is queued, running, or previously FAILED.  This is what the
+        manifest's durability record keys off, so it must never undercount."""
+        with self._lock:
+            return sum(1 for v in self._resident.values() if v == "dirty")
+
+    def tier_stats(self) -> Dict[str, int]:
+        pending = self.pending_spill()
+        with self._lock:
+            out = dict(self._stats, pending_spill=pending)
+        hot_bytes = getattr(self.hot, "total_bytes", None)
+        if hot_bytes is not None:
+            out["hot_resident_bytes"] = hot_bytes()
+        return out
+
+    def path_of(self, key: str) -> Optional[Path]:
+        # Prefer the durable tier's path: that is the copy offline tools
+        # (and corruption tests) should poke.
+        return self.durable.path_of(key) or self.hot.path_of(key)

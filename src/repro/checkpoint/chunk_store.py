@@ -1,11 +1,21 @@
 """Content-addressed chunk store with cross-step dedup and delta encoding.
 
-On-disk layout:
+The store is an *addressing and codec core* layered over a swappable
+:class:`~repro.checkpoint.backends.base.StorageBackend` that owns all
+object-byte IO (see docs/storage.md).  The default ``local`` backend
+keeps the classic on-disk layout:
 
     root/
       objects/ab/abcdef...123.chunk   # one file per distinct content digest
       manifests/manifest-00000100.json
       LATEST                          # atomic pointer to the newest manifest
+
+while ``memory`` holds objects in RAM and ``tiered`` composes a hot RAM
+tier over the durable ``objects/`` tree with asynchronous spill,
+promotion-on-read, and LRU eviction.  Everything below the digest — the
+envelope formats, dedup, delta decisions, refcounts — is
+backend-independent; everything below the byte-blob — atomic writes, tmp
+sweeps, tier placement — lives in ``repro.checkpoint.backends``.
 
 Every chunk is keyed by the blake2b digest of its *canonical* payload (the
 codec="none" serialization of the unit's tensors, metadata excluded, so the
@@ -53,7 +63,6 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import os
 import threading
 from collections import Counter
 from pathlib import Path
@@ -63,6 +72,11 @@ import msgpack
 
 from repro.checkpoint import compression, serial
 from repro.checkpoint import fingerprint as fputil
+from repro.checkpoint.backends import StorageBackend, make_backend
+# Back-compat alias: the manifest store and several tests import the
+# atomic-write protocol from here; the implementation now lives with the
+# rest of the filesystem IO in the backends package.
+from repro.checkpoint.backends.localfs import atomic_write as _atomic_write  # noqa: F401,E501
 
 PyTree = Any
 
@@ -115,6 +129,10 @@ class ReadSession:
         # (repr, digest) -> {"event": Event, "value":..., "error":...}
         self._cells: Dict[Tuple[str, str], Dict[str, Any]] = {}
         self.stats = {"object_reads": 0, "bytes_read": 0}
+        # digest -> tier it was served from ("hot"/"durable"/"local"/...):
+        # the restore engine's tier provenance dimension.
+        self.tiers: Dict[str, str] = {}
+        self.tier_reads: Dict[str, int] = {}
 
     def _memoized(self, table: str, digest: str, fn):
         key = (table, digest)
@@ -157,11 +175,17 @@ class ReadSession:
 
     def envelope(self, digest: str) -> Dict[str, Any]:
         def read():
+            # Locate before the read: a tiered backend promotes on read,
+            # so asking afterwards would always answer "hot".
+            tier = self.store.locate(digest)
             env = self.store._read_envelope(digest)
             nbytes = self.store.object_info(digest)["nbytes"]
             with self._lock:
                 self.stats["object_reads"] += 1
                 self.stats["bytes_read"] += int(nbytes)
+                if tier is not None:
+                    self.tiers[digest] = tier
+                    self.tier_reads[tier] = self.tier_reads.get(tier, 0) + 1
             return env
 
         return self._memoized("env", digest, read)
@@ -213,30 +237,20 @@ class ChunkRef:
         return ChunkRef(**d)
 
 
-def _atomic_write(path: Path, data: bytes, *, fsync: bool = True) -> None:
-    # Unique tmp name: concurrent writers of the SAME destination (two
-    # async-writer threads persisting bitwise-identical units dedup to one
-    # digest) must not truncate each other's in-progress file; os.replace
-    # then publishes whichever complete file lands last.
-    tmp = path.with_suffix(
-        path.suffix + f".tmp-{os.getpid():x}-{threading.get_ident():x}")
-    tmp.parent.mkdir(parents=True, exist_ok=True)
-    with open(tmp, "wb") as f:
-        f.write(data)
-        if fsync:
-            f.flush()
-            os.fsync(f.fileno())
-    os.replace(tmp, path)
-
-
 class ChunkStore:
     def __init__(self, root: Path | str, *, codec: str = "auto",
                  fsync: bool = False, delta: bool = True,
                  delta_ratio: float = DELTA_RATIO,
-                 rebase_every: int = REBASE_EVERY):
+                 rebase_every: int = REBASE_EVERY,
+                 backend: "str | StorageBackend" = "local",
+                 spill_threads: int = 2,
+                 hot_budget_bytes: Optional[int] = None):
         self.root = Path(root)
         self.codec = compression.resolve_codec(codec)
         self.fsync = fsync
+        self.backend = make_backend(backend, self.root, fsync=fsync,
+                                    spill_threads=spill_threads,
+                                    hot_budget_bytes=hot_budget_bytes)
         self.delta = delta
         self.delta_ratio = delta_ratio
         self.rebase_every = max(1, rebase_every)
@@ -257,26 +271,34 @@ class ChunkStore:
         self.stats: Dict[str, int] = {}
         self.reset_stats()
 
-    # ---- paths ----
-    def objects_dir(self) -> Path:
-        return self.root / "objects"
-
+    # ---- addressing (backend-independent) ----
     def object_path(self, digest: str) -> Path:
-        return self.objects_dir() / digest[:2] / f"{digest}.chunk"
+        """Filesystem path of ``digest`` when a path-backed tier exists
+        (tests and offline tools poke object files directly)."""
+        p = self.backend.path_of(digest)
+        if p is None:
+            raise NotImplementedError(
+                f"backend {self.backend.name!r} has no filesystem paths")
+        return p
 
     def object_relpath(self, digest: str) -> str:
-        return str(self.object_path(digest).relative_to(self.root))
+        """Advisory root-relative location recorded in manifests.  Pure
+        string math — the digest, not the path, is what reads resolve."""
+        return f"objects/{digest[:2]}/{digest}.chunk"
 
     def has(self, digest: str) -> bool:
-        return self.object_path(digest).is_file()
+        return self.backend.has(digest)
 
     def exists(self, ref: ChunkRef) -> bool:
-        return (self.root / ref.relpath).is_file()
+        return bool(ref.digest) and self.backend.has(ref.digest)
 
     def iter_digests(self) -> Iterator[str]:
-        if self.objects_dir().is_dir():
-            for f in sorted(self.objects_dir().glob("*/*.chunk")):
-                yield f.stem
+        return self.backend.keys()
+
+    def locate(self, digest: str) -> Optional[str]:
+        """Fastest tier currently holding ``digest`` (backend-specific
+        name, e.g. "hot"/"durable"/"local"; None if absent)."""
+        return self.backend.locate(digest)
 
     # ---- stats ----
     def reset_stats(self) -> None:
@@ -315,7 +337,7 @@ class ChunkStore:
 
     # ---- object io ----
     def _read_envelope(self, digest: str) -> Dict[str, Any]:
-        blob = self.object_path(digest).read_bytes()
+        blob = self.backend.read(digest)
         # Any parse failure of a corrupt envelope must surface as
         # ChunkCorruption so the restore fallback path catches it.
         try:
@@ -345,13 +367,26 @@ class ChunkStore:
 
     def _write_object(self, digest: str, env: Dict[str, Any]) -> int:
         blob = msgpack.packb(env, use_bin_type=True)
-        _atomic_write(self.object_path(digest), blob, fsync=self.fsync)
+        self.backend.write(digest, blob)
         with self._lock:
             self._info[digest] = {"stored": env["format"],
                                   "base": env.get("base"),
                                   "codec": env.get("codec"),
                                   "nbytes": len(blob)}
         return len(blob)
+
+    # ---- blob-level copy (merge engine: backend-to-backend transfer) ----
+    def read_object_bytes(self, digest: str) -> bytes:
+        """The raw envelope blob of ``digest`` — no decode, no verify.
+        The merge engine moves objects between stores (and backends:
+        RAM-tier source to durable output) with this + write_object_bytes
+        without ever materializing tensors."""
+        return self.backend.read(digest)
+
+    def write_object_bytes(self, digest: str, blob: bytes) -> int:
+        """Store a pre-encoded envelope blob under its digest (atomic,
+        idempotent — content addressing guarantees equal payloads)."""
+        return self.backend.write(digest, blob)
 
     def read_canonical(self, digest: str, *, verify: bool = True,
                        session: Optional[ReadSession] = None) -> bytes:
@@ -526,13 +561,20 @@ class ChunkStore:
     def _claim(self, digest: str) -> Optional[threading.Event]:
         """Claim the right to write ``digest``, or return None when the
         object already exists (dedup).  Concurrent writers persisting the
-        same content wait for the in-flight claim instead of racing."""
+        same content wait for the in-flight claim instead of racing.
+
+        The existence check happens under the same lock as the claim
+        insert: a thread descheduled between a stale negative ``has``
+        and taking the lock must not claim (and double-write/double-
+        count) an object whose writer finished in between.  The winner
+        always completes its backend write before releasing the claim,
+        so a fresh ``has`` under the lock is authoritative."""
         while True:
-            if self.has(digest):
-                return None
             with self._lock:
                 other = self._inflight.get(digest)
                 if other is None:
+                    if self.backend.has(digest):
+                        return None
                     claim = self._inflight[digest] = threading.Event()
                     return claim
             other.wait()  # then loop: has(digest) is now true (or retry)
@@ -747,26 +789,20 @@ class ChunkStore:
 
         Objects absent from the refcount map (orphans from an interrupted
         save) are also swept, as are crash-leftover ``*.tmp-*`` files from
-        ``_atomic_write`` — only call after the current manifest has been
-        committed and increffed, and never concurrently with writes.
+        each tier's atomic-write protocol (``backend.sweep_tmp`` — every
+        tier sweeps its own temporaries and never touches committed
+        objects in another tier) — only call after the current manifest
+        has been committed and increffed, and never concurrently with
+        writes.
         """
-        freed = 0
-        if self.objects_dir().is_dir():
-            for tmp in self.objects_dir().glob("*/*.tmp-*"):
-                try:
-                    freed += tmp.stat().st_size
-                    tmp.unlink()
-                except FileNotFoundError:
-                    continue
+        freed = self.backend.sweep_tmp()
         for digest in list(self.iter_digests()):
             if self.refcount(digest) > 0:
                 continue
-            p = self.object_path(digest)
-            try:
-                freed += p.stat().st_size
-                p.unlink()
-            except FileNotFoundError:
+            reclaimed = self.backend.delete(digest)
+            if reclaimed == 0:
                 continue
+            freed += reclaimed
             with self._lock:
                 self._info.pop(digest, None)
                 self._refcounts.pop(digest, None)
@@ -774,14 +810,37 @@ class ChunkStore:
                 old = self._canon_cache.pop(digest, None)
                 if old is not None:
                     self._canon_cache_bytes -= len(old)
-            parent = p.parent
-            try:
-                parent.rmdir()  # prune empty fan-out dirs opportunistically
-            except OSError:
-                pass
         return freed
 
-    # ---- usage ----
+    # ---- usage / tier passthroughs ----
+    def object_size(self, digest: str) -> int:
+        return self.backend.size(digest)
+
     def total_bytes(self) -> int:
-        return sum(self.object_path(d).stat().st_size
-                   for d in self.iter_digests())
+        return sum(self.backend.size(d) for d in self.iter_digests())
+
+    def drain_spill(self) -> None:
+        """Durability barrier: block until every object written so far
+        has reached the backend's durable tier (no-op off-tiered)."""
+        self.backend.drain()
+
+    def pending_spill(self) -> int:
+        return self.backend.pending_spill()
+
+    def tier_stats(self) -> Dict[str, int]:
+        return self.backend.tier_stats()
+
+    def durability(self) -> Dict[str, Any]:
+        """What the manifest-commit barrier records: which backend this
+        event's objects live on, which tier (if any) survives process
+        exit, and whether spill had already drained at commit time."""
+        pending = self.backend.pending_spill()
+        durable = self.backend.durable_tier()
+        return {"backend": self.backend.name,
+                "durable_tier": durable,
+                "pending_spill": pending,
+                "durable_on": ("none" if durable == "none"
+                               else "hot" if pending else "durable")}
+
+    def close(self) -> None:
+        self.backend.close()

@@ -371,12 +371,16 @@ class RestoreEngine:
 
     # ------------------------------------------------------------- execute
     def _read_target(self, target: UnitRead, session: ReadSession,
-                     plan_step: int, fallbacks: Dict[str, int]
+                     plan_step: int, fallbacks: Dict[str, int],
+                     tiers: Dict[str, str]
                      ) -> Tuple[UnitRead, PyTree]:
         last_exc: Optional[Exception] = None
         for cand in target.chain:
             try:
                 tree, _ = session.read(cand.ref.digest)
+                tier = session.tiers.get(cand.ref.digest)
+                if tier is not None:
+                    tiers[f"{target.unit}/{target.kind}"] = tier
             except (FileNotFoundError, ChunkCorruption) as e:
                 log.warning("chunk %s/%s from manifest %s unreadable (%s); "
                             "falling back", target.unit, target.kind,
@@ -387,8 +391,10 @@ class RestoreEngine:
                 # Covers both read-time fallbacks and candidates the
                 # planner promoted because the target manifest's object
                 # was already missing on disk.
-                log.warning("unit %s/%s restored from older manifest %s",
-                            target.unit, target.kind, cand.manifest_step)
+                log.warning(
+                    "unit %s/%s restored from older manifest %s (tier=%s)",
+                    target.unit, target.kind, cand.manifest_step,
+                    session.tiers.get(cand.ref.digest))
                 fallbacks[f"{target.unit}/{target.kind}"] = cand.manifest_step
             return target, tree
         raise RestoreError(
@@ -418,6 +424,9 @@ class RestoreEngine:
         session = ReadSession(self.store, verify=self.verify)
         placer = _Placer(self.registry, state_like, shardings, plan)
         fallbacks: Dict[str, int] = {}
+        # unit/kind -> tier its object was served from ("hot"/"durable"/
+        # "local"/...): the tier dimension of restore provenance.
+        unit_tiers: Dict[str, str] = {}
         remaining = dict(plan.dependents)
 
         def consume(target: UnitRead, tree: PyTree) -> None:
@@ -441,7 +450,7 @@ class RestoreEngine:
                     max_workers=self.io_threads,
                     thread_name_prefix="ckpt-restore") as pool:
                 futs = {pool.submit(self._read_target, t, session,
-                                    plan.step, fallbacks)
+                                    plan.step, fallbacks, unit_tiers)
                         for t in plan.targets}
                 try:
                     while futs:
@@ -455,7 +464,7 @@ class RestoreEngine:
         else:
             for t in plan.targets:
                 consume(*self._read_target(t, session, plan.step,
-                                           fallbacks))
+                                           fallbacks, unit_tiers))
         state = placer.finish(plan.step)
         jax.block_until_ready(
             [x for part in plan.parts for x in jax.tree.leaves(state[part])])
@@ -477,5 +486,9 @@ class RestoreEngine:
             # unit/kind -> manifest step it actually came from (only
             # entries that fell back from the target manifest)
             "fallback_units": fallbacks,
+            # tier provenance: aggregate object reads per tier, plus the
+            # tier every unit/kind (fallbacks included) was served from
+            "tier_reads": dict(session.tier_reads),
+            "unit_tiers": unit_tiers,
         }
         return state

@@ -12,12 +12,19 @@ Save path (fingerprint pipeline, the default — see docs/perf.md):
        or dirty fraction too high),
   3. the writer threads turn each packet into an object — a block-sparse
      delta (dirty blocks only) or a full chunk — while the training thread
-     is already fingerprinting/gathering the next unit (pipeline overlap),
-  4. after all chunks land, the manifest commits: every unit maps to the
-     digest of the newest chunk holding it (units skipped this event keep
-     their previous refs — the implicit Frankenstein merge),
+     is already fingerprinting/gathering the next unit (pipeline overlap);
+     under ``store_backend="tiered"`` the object lands in the hot RAM
+     tier and the shared transfer pool's spill lane copies it to the
+     durable tier in the background (docs/storage.md),
+  4. after all chunks land (on the fast tier at least; ``spill_barrier``
+     upgrades that to the durable tier), the manifest commits: every unit
+     maps to the digest of the newest chunk holding it (units skipped
+     this event keep their previous refs — the implicit Frankenstein
+     merge), and ``meta["storage"]`` records which tier the event was
+     durable on at commit time,
   5. refcounted GC: manifests beyond the retention window release their
-     references and objects with no remaining references are deleted.
+     references and objects with no remaining references are deleted
+     (from every tier).
 
 ``fingerprint=False`` selects the legacy full-gather path: device_get of
 the whole unit, blake2b over the canonical payload, XOR delta in the
@@ -48,7 +55,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import fingerprint as fputil
-from repro.checkpoint.async_io import AsyncWriter, PendingResult
+from repro.checkpoint.async_io import AsyncWriter, PendingResult, TransferPool
+from repro.checkpoint.backends import StorageBackend, make_backend
 from repro.checkpoint.chunk_store import ChunkRef, ChunkStore
 from repro.checkpoint.restore import (  # noqa: F401 - RestoreError re-export
     DEFAULT_IO_THREADS,
@@ -84,14 +92,48 @@ class CheckpointManager:
         fp_max_dirty_frac: float = 0.5,
         restore_threads: int = DEFAULT_IO_THREADS,
         restore_verify: bool = True,
+        store_backend: "str | StorageBackend" = "local",
+        spill_threads: int = 2,
+        hot_budget_bytes: Optional[int] = None,
+        spill_barrier: bool = False,
     ):
         self.root = Path(root)
         self.registry = registry
         self.policy = policy
-        self.store = ChunkStore(self.root, codec=codec, delta=delta)
+        # One transfer pool carries BOTH the saver's chunk-write lane and
+        # the tiered backend's spill lane (instead of private pools per
+        # producer): write drains never wait on spill, but the threads —
+        # the actual IO resource — are shared and bounded.  A caller who
+        # passes a pre-composed StorageBackend INSTANCE keeps whatever
+        # pool that instance was built with (pass pool= to TieredBackend
+        # to share one explicitly); the saver then only sizes its own
+        # write lane and the spill_threads knob does not apply.
+        own_composition = isinstance(store_backend, StorageBackend)
+        tiered = (not own_composition) and store_backend == "tiered"
+        self.transfer_pool: Optional[TransferPool] = None
+        if async_save or tiered:
+            # The queue is bounded (write-lane backpressure on the
+            # training thread) EXCEPT when the pool also carries the
+            # spill lane: write tasks then submit spill tasks, and a
+            # bounded queue could deadlock with every worker blocked on
+            # a full put (see TransferPool).
+            self.transfer_pool = TransferPool(
+                writer_threads + (spill_threads if tiered else 0),
+                max_queue=0 if tiered else 64)
+        backend = make_backend(store_backend, self.root,
+                               pool=self.transfer_pool,
+                               spill_threads=spill_threads,
+                               hot_budget_bytes=hot_budget_bytes)
+        self.store = ChunkStore(self.root, codec=codec, delta=delta,
+                                backend=backend)
         self.manifests = ManifestStore(self.root)
         self.keep = keep
         self.async_save = async_save
+        # False (default): commit the manifest as soon as every object is
+        # on the FAST tier and let spill keep overlapping training — the
+        # manifest records durable_on="hot".  True: wait the spill lane
+        # down first, so every committed manifest is durable-tier-backed.
+        self.spill_barrier = spill_barrier
         self.restorer = RestoreEngine(self.store, self.manifests, registry,
                                       io_threads=restore_threads,
                                       verify=restore_verify)
@@ -101,7 +143,8 @@ class CheckpointManager:
         # index overhead plus a near-full payload) — gather everything and
         # write a full object instead.
         self.fp_max_dirty_frac = fp_max_dirty_frac
-        self.writer = AsyncWriter(writer_threads) if async_save else None
+        self.writer = (AsyncWriter(pool=self.transfer_pool)
+                       if async_save else None)
         self._event_index = self._infer_event_index()
         self._rebuild_refcounts()
         # (unit, kind) -> device fingerprint vector of the content behind
@@ -217,14 +260,23 @@ class CheckpointManager:
                     entries.setdefault(name, {})[kind] = res
         t_snapshot = time.time() - t0
 
-        # All chunks must land before the manifest commits.
+        # All chunks must land (on the fast tier at least) before the
+        # manifest commits; the optional spill barrier upgrades that to
+        # "on the durable tier".
         if self.writer is not None:
             self.writer.drain()
             for (name, kind), p in pending.items():
                 entries.setdefault(name, {})[kind] = p.result()
+        if self.spill_barrier:
+            self.store.drain_spill()
+        # The durability record is part of the commit: a reader of this
+        # manifest knows which tier the event's objects were durable on
+        # at commit time (e.g. durable_on="hot" while spill is in flight).
+        storage = self.store.durability()
         manifest = Manifest(step=step, entries=entries,
                             meta=dict(meta or {}, event_index=self._event_index,
-                                      policy=self.policy.name),
+                                      policy=self.policy.name,
+                                      storage=storage),
                             saved_units=selected)
         # Re-saving a step overwrites its manifest file: release the
         # replaced manifest's references or its objects leak until restart.
@@ -260,6 +312,10 @@ class CheckpointManager:
             "dedup_hits": io["dedup_hits"],
             "delta_chunks": io["delta_chunks"],
             "full_chunks": io["full_chunks"],
+            # tier accounting (what the manifest recorded at commit time)
+            "backend": storage["backend"],
+            "durable_on": storage["durable_on"],
+            "spill_pending": storage["pending_spill"],
         }
         return manifest
 
@@ -423,16 +479,26 @@ class CheckpointManager:
                 self.store.decref(m.referenced_digests().elements())
         return self.store.gc_objects()
 
+    def drain_spill(self) -> None:
+        """Durability barrier: returns once every written object is on
+        the durable tier (no-op for single-tier backends)."""
+        self.store.drain_spill()
+
     def close(self) -> None:
         if self.writer is not None:
             self.writer.close()
+        # Backend close drains the spill lane first (pending spills are
+        # never abandoned), then the shared transfer pool goes down.
+        self.store.close()
+        if self.transfer_pool is not None:
+            self.transfer_pool.close()
 
     # -------------------------------------------------------------- metrics
     def disk_usage(self) -> Dict[str, int]:
         total = 0
         objects = 0
         for d in self.store.iter_digests():
-            total += self.store.object_path(d).stat().st_size
+            total += self.store.object_size(d)
             objects += 1
         return {"total": total, "objects": objects,
                 "manifests": len(self.manifests.all_steps())}

@@ -20,7 +20,8 @@ from collections import Counter
 from pathlib import Path
 from typing import Any, Dict, List, Optional
 
-from repro.checkpoint.chunk_store import ChunkRef, _atomic_write
+from repro.checkpoint.backends.localfs import atomic_write as _atomic_write
+from repro.checkpoint.chunk_store import ChunkRef
 from repro.core import jsonutil
 
 

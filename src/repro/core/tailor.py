@@ -16,6 +16,17 @@ across sources (or identical between two rules) land as ONE object in the
 output, and a delta-encoded unit brings its full base along exactly once.
 A thread pool overlaps reads and writes (§4.2's multiprocessing analogue;
 compression + file IO release the GIL).
+
+The copy is *backend-to-backend*: objects move as opaque envelope blobs
+through ``ChunkStore.read_object_bytes``/``write_object_bytes``, so a
+source living on a RAM tier (``store_backend="memory"``/``"tiered"``
+within the same process) merges into a durable output exactly like a
+POSIX source — the paper's §4.2 multiprocessing analogue generalized to
+merge-from-RAM-to-durable.  Pass ``stores=`` to hand the merge already-
+open source stores (required for RAM tiers, whose objects a fresh store
+instance cannot see); the output manifest only commits after the output
+backend's spill barrier (``drain_spill``) confirms every object is
+durable.
 """
 from __future__ import annotations
 
@@ -26,7 +37,7 @@ from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
 from typing import Dict, List, Optional, Tuple
 
-from repro.checkpoint.chunk_store import ChunkRef, ChunkStore, _atomic_write
+from repro.checkpoint.chunk_store import ChunkRef, ChunkStore
 from repro.core.manifest import Manifest, ManifestStore
 from repro.core.recipe import CheckpointRef, Recipe
 
@@ -35,29 +46,40 @@ class MergeError(RuntimeError):
     pass
 
 
-def _load_manifest(ref: CheckpointRef) -> Tuple[Manifest, ChunkStore]:
+def _load_manifest(ref: CheckpointRef,
+                   stores: Optional[Dict[str, ChunkStore]] = None
+                   ) -> Tuple[Manifest, ChunkStore]:
     ms = ManifestStore(ref.root)
     m = ms.load(ref.step)
     if m is None:
         raise MergeError(f"no manifest at {ref}")
-    return m, ChunkStore(ref.root)
+    store = (stores or {}).get(str(ref))
+    return m, (store if store is not None else ChunkStore(ref.root))
 
 
-def merge(recipe: Recipe, *, workers: int = 4,
-          verify: bool = True) -> Dict[str, float]:
-    """Execute a recipe.  Returns timing/size stats (Table 7 material)."""
+def merge(recipe: Recipe, *, workers: int = 4, verify: bool = True,
+          stores: Optional[Dict[str, ChunkStore]] = None,
+          out_store: Optional[ChunkStore] = None) -> Dict[str, float]:
+    """Execute a recipe.  Returns timing/size stats (Table 7 material).
+
+    ``stores`` maps ``str(CheckpointRef)`` to an already-open source
+    store — how a RAM-tier (memory/tiered) source is merged, since its
+    hot objects exist only inside that live store instance.  ``out_store``
+    overrides the default durable local output (e.g. to write into a
+    tiered store)."""
     t0 = time.time()
-    base_manifest, _ = _load_manifest(recipe.base)
+    base_manifest, _ = _load_manifest(recipe.base, stores)
     all_units = sorted(base_manifest.entries)
     assignment = recipe.assignment(all_units)
 
     # Open every distinct source once.
     sources: Dict[str, Tuple[Manifest, ChunkStore]] = {}
     for ref in {str(r): r for r in assignment.values()}.values():
-        sources[str(ref)] = _load_manifest(ref)
+        sources[str(ref)] = _load_manifest(ref, stores)
 
     out_root = Path(recipe.output)
-    out_store = ChunkStore(out_root)
+    if out_store is None:
+        out_store = ChunkStore(out_root)
     out_step = base_manifest.step
     kinds = ("weights", "opt") if recipe.optimizer else ("weights",)
 
@@ -82,18 +104,18 @@ def merge(recipe: Recipe, *, workers: int = 4,
         try:
             if out_store.has(digest):
                 return 0
-            src_path = src_store.object_path(digest)
-            if not src_path.is_file():
+            if not src_store.has(digest):
                 raise MergeError(f"source object {digest} missing "
-                                 f"under {src_store.root}")
+                                 f"under {src_store.root} "
+                                 f"(backend={src_store.backend.name})")
             written = 0
             info = src_store.object_info(digest)
             if info["stored"] != "full" and info["base"]:
                 # XOR or block-sparse delta: the base is always a full
                 # object, so this is one level of recursion
                 written += copy_object(src_store, info["base"])
-            _atomic_write(out_store.object_path(digest),
-                          src_path.read_bytes())
+            out_store.write_object_bytes(
+                digest, src_store.read_object_bytes(digest))
             return written + info["nbytes"]
         finally:
             done.set()
@@ -131,13 +153,19 @@ def merge(recipe: Recipe, *, workers: int = 4,
                 if not written:
                     stats["shared_chunks"] += 1
 
+    # Manifest-commit barrier: every copied object must be durable on the
+    # output backend before the manifest referencing it exists (no-op for
+    # the plain local backend; for a tiered output this waits the spill
+    # lane down to zero).
+    out_store.drain_spill()
     # §4.4: configuration/metadata comes from the newest (base) checkpoint.
     manifest = Manifest(
         step=out_step,
         entries=entries,
         meta=dict(base_manifest.meta,
                   merged_from={u: str(r) for u, r in assignment.items()},
-                  recipe_optimizer=recipe.optimizer),
+                  recipe_optimizer=recipe.optimizer,
+                  storage=out_store.durability()),
         saved_units=all_units,
     )
     ManifestStore(out_root).commit(manifest)

@@ -33,14 +33,20 @@ def restore_on_mesh(ckpt_root: str | Path, model: BaseLM, mesh: Mesh,
                     *, step: Optional[int] = None,
                     parts: Tuple[str, ...] = PARTS_ALL,
                     units: Optional[Sequence[str]] = None,
-                    pipelined: bool = True) -> Dict[str, PyTree]:
+                    pipelined: bool = True,
+                    store_backend: str = "local") -> Dict[str, PyTree]:
     """Restore a checkpoint sharded onto ``mesh``; thin wrapper over
     ``CheckpointManager.restore`` (``parts``/``units``/``pipelined``
-    pass straight through to the restore engine)."""
+    pass straight through to the restore engine).  ``store_backend``
+    selects the IO tier stack — a restarted process reads the durable
+    ``objects/`` tree either way (RAM tiers start empty), but "tiered"
+    promotes every read object into the hot tier for subsequent
+    restores in this process."""
     registry = LayerRegistry(model)
     mgr = CheckpointManager(Path(ckpt_root), registry,
                             make_policy("full", model.layer_units()),
-                            async_save=False)
+                            async_save=False,
+                            store_backend=store_backend)
     try:
         like = steps_lib.state_specs(model)
         shardings = steps_lib.state_shardings(model, mesh)

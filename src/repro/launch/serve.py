@@ -46,17 +46,21 @@ def _pad_cache_to(cache, model, batch, target):
 
 def serve(*, arch: str, reduced: bool = True, batch: int = 4,
           prompt_len: int = 64, new_tokens: int = 32,
-          from_ckpt: Optional[str] = None, seed: int = 0,
-          greedy: bool = True) -> dict:
+          from_ckpt: Optional[str] = None, store_backend: str = "local",
+          seed: int = 0, greedy: bool = True) -> dict:
     cfg = get_config(arch, reduced=reduced)
     model = build_model(cfg)
 
     if from_ckpt:
         from repro.checkpoint.saver import CheckpointManager
         registry = LayerRegistry(model)
+        # store_backend="tiered" warms the RAM tier while loading
+        # (promotion-on-read): later loads of the same root in this
+        # process serve weights from memory.
         mgr = CheckpointManager(Path(from_ckpt), registry,
                                 make_policy("full", model.layer_units()),
-                                async_save=False)
+                                async_save=False,
+                                store_backend=store_backend)
         like = steps_lib.state_specs(model)
         # Weights-only partial restore: optimizer objects are never read.
         state = mgr.restore(like, parts=("params",))
@@ -123,12 +127,18 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--from-ckpt")
+    ap.add_argument("--store-backend", default="local",
+                    choices=["local", "memory", "tiered"],
+                    help="IO tier for --from-ckpt weight loading (tiered "
+                         "promotes read objects into the RAM tier)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     print(json.dumps(serve(arch=args.arch, batch=args.batch,
                            prompt_len=args.prompt_len,
                            new_tokens=args.new_tokens,
-                           from_ckpt=args.from_ckpt, seed=args.seed),
+                           from_ckpt=args.from_ckpt,
+                           store_backend=args.store_backend,
+                           seed=args.seed),
                      indent=2))
 
 

@@ -71,6 +71,10 @@ def train(
     ckpt_async: bool = True,
     ckpt_fingerprint: bool = True,
     codec: str = "auto",
+    store_backend: str = "local",
+    spill_threads: int = 2,
+    hot_budget_mb: Optional[int] = None,
+    spill_barrier: bool = False,
     resume: bool = False,
     fail_at: Optional[int] = None,
     seed: int = 0,
@@ -86,7 +90,12 @@ def train(
     policy = make_policy(policy_name, model.layer_units())
     mgr = CheckpointManager(Path(ckpt_dir), registry, policy,
                             codec=codec, async_save=ckpt_async,
-                            fingerprint=ckpt_fingerprint)
+                            fingerprint=ckpt_fingerprint,
+                            store_backend=store_backend,
+                            spill_threads=spill_threads,
+                            hot_budget_bytes=(hot_budget_mb * 2**20
+                                              if hot_budget_mb else None),
+                            spill_barrier=spill_barrier)
     tracker = DeltaTracker(registry) if policy_name == "topk_delta" else None
 
     data = SyntheticTokens(vocab_size=cfg.vocab_size, batch=batch,
@@ -147,6 +156,12 @@ def train(
             f.write("step,loss\n")
             for s, l in losses:
                 f.write(f"{s},{l}\n")
+    # Spill-backlog drain: how far durability lagged the hot tier at the
+    # end of training (0.0 for single-tier backends).
+    t_drain = time.time()
+    mgr.drain_spill()
+    spill_drain_seconds = time.time() - t_drain
+    tier_stats = mgr.store.tier_stats()
     mgr.close()
     usage = mgr.disk_usage()
     return {
@@ -162,6 +177,10 @@ def train(
         "dirty_block_frac": (float(np.mean(dirty_fracs))
                              if dirty_fracs else 0.0),
         "steps": total_steps - start,
+        # tier accounting (see docs/storage.md)
+        "store_backend": store_backend,
+        "spill_drain_seconds": spill_drain_seconds,
+        "tier_stats": tier_stats,
     }
 
 
@@ -181,6 +200,19 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--codec", default="auto",
                     choices=["auto", "zstd", "none", "int8"])
+    ap.add_argument("--store-backend", default="local",
+                    choices=["local", "memory", "tiered"],
+                    help="object IO tier: local POSIX tree, volatile RAM, "
+                         "or RAM hot tier with async spill to disk")
+    ap.add_argument("--spill-threads", type=int, default=2,
+                    help="tiered backend: threads on the spill lane of "
+                         "the shared transfer pool")
+    ap.add_argument("--hot-budget-mb", type=int,
+                    help="tiered backend: hot-tier byte budget; spilled "
+                         "objects are LRU-evicted beyond it")
+    ap.add_argument("--spill-barrier", action="store_true",
+                    help="tiered backend: wait for durable-tier spill "
+                         "before each manifest commit")
     ap.add_argument("--sync-save", action="store_true")
     ap.add_argument("--no-fingerprint", action="store_true",
                     help="legacy full-gather save path (no device-side "
@@ -196,7 +228,11 @@ def main() -> None:
                 policy_name=args.policy, ckpt_interval=args.ckpt_interval,
                 ckpt_dir=args.ckpt_dir, ckpt_async=not args.sync_save,
                 ckpt_fingerprint=not args.no_fingerprint,
-                codec=args.codec, resume=args.resume, fail_at=args.fail_at,
+                codec=args.codec, store_backend=args.store_backend,
+                spill_threads=args.spill_threads,
+                hot_budget_mb=args.hot_budget_mb,
+                spill_barrier=args.spill_barrier,
+                resume=args.resume, fail_at=args.fail_at,
                 seed=args.seed, log_csv=args.log_csv)
     out.pop("losses")
     print(json.dumps(out, indent=2))

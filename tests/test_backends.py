@@ -1,0 +1,410 @@
+"""Storage backends under the content-addressed core: memory tier,
+tiered hot/durable composition (spill, promotion, eviction, per-tier GC
+and tmp sweep), the unified transfer pool's lane isolation, and merge
+across heterogeneous backends."""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    AsyncWriteError,
+    AsyncWriter,
+    ChunkStore,
+    LocalFSBackend,
+    MemoryBackend,
+    TieredBackend,
+    TransferPool,
+)
+from repro.checkpoint.saver import CheckpointManager
+from repro.configs import get_config
+from repro.core import (
+    CheckpointRef,
+    LayerRegistry,
+    ManifestStore,
+    Recipe,
+    SelectRule,
+    make_policy,
+    merge,
+)
+from repro.launch import steps as steps_lib
+from repro.models import build_model
+
+
+def _tree(seed: int, n: int = 512):
+    return {"w": np.random.RandomState(seed)
+            .standard_normal(n).astype(np.float32)}
+
+
+# ---------------------------------------------------------- memory backend
+def test_memory_backend_roundtrip_dedup_gc(tmp_path):
+    store = ChunkStore(tmp_path, backend="memory")
+    r1 = store.write(1, "u", "weights", _tree(0))
+    r2 = store.write(2, "u", "weights", _tree(0))
+    assert r1.digest == r2.digest
+    assert store.stats["dedup_hits"] == 1
+    # nothing touches disk: no objects/ tree exists
+    assert not (tmp_path / "objects").exists()
+    out, _ = store.read(r1)
+    np.testing.assert_array_equal(out["w"], _tree(0)["w"])
+    assert store.locate(r1.digest) == "memory"
+    assert store.durability()["durable_on"] == "none"
+    # refcounted GC frees RAM
+    assert store.gc_objects() == r1.nbytes
+    assert not store.has(r1.digest)
+    assert store.backend.total_bytes() == 0
+
+
+def test_memory_backend_missing_object_raises_file_not_found():
+    be = MemoryBackend()
+    with pytest.raises(FileNotFoundError):
+        be.read("deadbeef")
+    with pytest.raises(FileNotFoundError):
+        be.size("deadbeef")
+
+
+# ---------------------------------------------------------- tiered backend
+def test_tiered_write_lands_hot_then_spills_durable(tmp_path):
+    store = ChunkStore(tmp_path, backend="tiered")
+    ref = store.write(1, "u", "weights", _tree(1))
+    # hot immediately; durable after the spill barrier
+    assert store.backend.hot.has(ref.digest)
+    store.drain_spill()
+    assert store.backend.durable.has(ref.digest)
+    assert store.locate(ref.digest) == "hot"  # fastest holder wins
+    out, _ = store.read_digest(ref.digest)
+    np.testing.assert_array_equal(out["w"], _tree(1)["w"])
+    assert store.tier_stats()["hot_reads"] >= 1
+    assert store.durability()["durable_on"] == "durable"
+    # the durable tier uses the classic objects/ layout
+    assert (tmp_path / "objects").is_dir()
+    store.close()
+
+
+def test_tiered_read_promotes_from_durable(tmp_path):
+    store = ChunkStore(tmp_path, backend="tiered")
+    ref = store.write(1, "u", "weights", _tree(2))
+    store.drain_spill()
+    store.close()
+
+    # "restart": fresh store, empty hot tier, durable tree on disk
+    store2 = ChunkStore(tmp_path, backend="tiered")
+    assert store2.locate(ref.digest) == "durable"
+    out, _ = store2.read_digest(ref.digest)
+    np.testing.assert_array_equal(out["w"], _tree(2)["w"])
+    # promotion-on-read: the object is now hot
+    assert store2.locate(ref.digest) == "hot"
+    assert store2.tier_stats()["promotions"] == 1
+    store2.close()
+
+
+def test_tiered_hot_budget_evicts_only_spilled_lru(tmp_path):
+    store = ChunkStore(tmp_path, backend="tiered",
+                       hot_budget_bytes=1)  # everything spilled is evicted
+    refs = [store.write(i, f"u{i}", "weights", _tree(10 + i))
+            for i in range(4)]
+    store.drain_spill()
+    # after spill + eviction the hot tier is (asymptotically) empty but
+    # every object still reads back bit-exactly from durable
+    assert store.backend.hot.total_bytes() == 0
+    assert store.tier_stats()["evictions"] >= 4
+    for i, r in enumerate(refs):
+        out, _ = store.read_digest(r.digest)
+        np.testing.assert_array_equal(out["w"], _tree(10 + i)["w"])
+    store.close()
+
+
+def test_tiered_unspilled_objects_never_evicted(tmp_path):
+    # A durable tier that cannot accept writes: spill fails, so nothing
+    # is ever evictable and the hot bytes stay past the budget.
+    class RefusingBackend(LocalFSBackend):
+        def write(self, key, data):
+            raise RuntimeError("durable tier down")
+
+    backend = TieredBackend(MemoryBackend(),
+                            RefusingBackend(tmp_path / "objects"),
+                            hot_budget_bytes=1)
+    store = ChunkStore(tmp_path, backend=backend)
+    ref = store.write(1, "u", "weights", _tree(3))
+    with pytest.raises(AsyncWriteError):
+        store.drain_spill()
+    assert backend.hot.has(ref.digest)  # data never dropped
+    assert backend.tier_stats()["evictions"] == 0
+    out, _ = store.read_digest(ref.digest)
+    np.testing.assert_array_equal(out["w"], _tree(3)["w"])
+
+
+def test_failed_spill_keeps_durability_debt_and_retries(tmp_path):
+    """A failed spill must never report durable: pending_spill keeps
+    counting the object, EVERY drain raises while the debt exists (even
+    after the pool's error list was consumed), and the next drain after
+    the outage heals retries and clears it."""
+    class FlakyBackend(LocalFSBackend):
+        fail = True
+
+        def write(self, key, data):
+            if FlakyBackend.fail:
+                raise RuntimeError("transient durable outage")
+            return super().write(key, data)
+
+    FlakyBackend.fail = True
+    backend = TieredBackend(MemoryBackend(),
+                            FlakyBackend(tmp_path / "objects"))
+    store = ChunkStore(tmp_path, backend=backend)
+    ref = store.write(1, "u", "weights", _tree(8))
+    with pytest.raises(AsyncWriteError):
+        store.drain_spill()
+    assert store.pending_spill() == 1
+    assert store.durability()["durable_on"] == "hot"
+    with pytest.raises(AsyncWriteError):   # still failing, still raises
+        store.drain_spill()
+    FlakyBackend.fail = False
+    store.drain_spill()                    # retry heals the debt
+    assert store.pending_spill() == 0
+    assert store.durability()["durable_on"] == "durable"
+    assert backend.durable.has(ref.digest)
+    store.close()
+
+
+def test_promote_on_read_disabled_leaves_hot_cold(tmp_path):
+    store = ChunkStore(tmp_path, backend="tiered")
+    ref = store.write(1, "u", "weights", _tree(9))
+    store.drain_spill()
+    store.close()
+
+    backend = TieredBackend(MemoryBackend(),
+                            LocalFSBackend(tmp_path / "objects"),
+                            promote_on_read=False)
+    store2 = ChunkStore(tmp_path, backend=backend)
+    out, _ = store2.read_digest(ref.digest)
+    np.testing.assert_array_equal(out["w"], _tree(9)["w"])
+    assert store2.locate(ref.digest) == "durable"  # no promotion happened
+    assert backend.hot.total_bytes() == 0
+    assert backend.tier_stats()["promotions"] == 0
+    store2.close()
+
+
+def test_tiered_gc_deletes_from_both_tiers(tmp_path):
+    store = ChunkStore(tmp_path, backend="tiered")
+    keep = store.write(1, "a", "weights", _tree(4))
+    drop = store.write(1, "b", "weights", _tree(5))
+    store.drain_spill()
+    store.incref([keep.digest])
+    freed = store.gc_objects()
+    assert freed == drop.nbytes  # counted once, not per tier
+    assert not store.backend.hot.has(drop.digest)
+    assert not store.backend.durable.has(drop.digest)
+    assert store.backend.hot.has(keep.digest)
+    assert store.backend.durable.has(keep.digest)
+    store.close()
+
+
+def test_tiered_tmp_sweep_per_tier_leaves_durable_alone(tmp_path):
+    """Satellite regression: crash-leftover ``*.tmp-*`` files in the hot
+    tier are swept without touching durable objects.  Uses a LocalFS hot
+    tier (a fast-disk variant) so tmp files can exist there at all."""
+    backend = TieredBackend(LocalFSBackend(tmp_path / "hot"),
+                            LocalFSBackend(tmp_path / "objects"))
+    store = ChunkStore(tmp_path, backend=backend)
+    ref = store.write(1, "u", "weights", _tree(6))
+    store.drain_spill()
+    store.incref([ref.digest])
+    # crash leftovers in BOTH tiers
+    hot_tmp = tmp_path / "hot" / ref.digest[:2] / "x.chunk.tmp-dead-1"
+    dur_tmp = tmp_path / "objects" / ref.digest[:2] / "y.chunk.tmp-dead-2"
+    hot_tmp.write_bytes(b"h" * 70)
+    dur_tmp.write_bytes(b"d" * 30)
+    assert store.gc_objects() == 100
+    assert not hot_tmp.exists() and not dur_tmp.exists()
+    # committed objects in both tiers untouched
+    assert backend.hot.has(ref.digest) and backend.durable.has(ref.digest)
+    out, _ = store.read_digest(ref.digest)
+    np.testing.assert_array_equal(out["w"], _tree(6)["w"])
+    store.close()
+
+
+def test_tiered_concurrent_writers_spill_once(tmp_path):
+    """Bitwise-identical concurrent writes through the shared pool dedup
+    to one object and one spill."""
+    pool = TransferPool(4)
+    backend = TieredBackend(MemoryBackend(),
+                            LocalFSBackend(tmp_path / "objects"), pool=pool)
+    store = ChunkStore(tmp_path, backend=backend)
+    w = AsyncWriter(pool=pool)
+    tree = _tree(7, n=4096)
+    pends = [w.submit(store.write, i, f"u{i}", "weights", tree)
+             for i in range(12)]
+    w.drain()
+    store.drain_spill()
+    refs = [p.result() for p in pends]
+    assert len({r.digest for r in refs}) == 1
+    assert store.stats["full_chunks"] == 1
+    assert store.stats["dedup_hits"] == 11
+    assert backend.tier_stats()["spilled_objects"] == 1
+    pool.close()
+
+
+# ------------------------------------------------------------ transfer pool
+def test_transfer_pool_lane_isolation():
+    """A failure on one lane surfaces on THAT lane's drain only."""
+    pool = TransferPool(2)
+    ok = pool.submit("write", lambda: 42)
+    pool.submit("spill", lambda: 1 / 0)
+    pool.drain("write")          # must not raise: the error is spill's
+    assert ok.result() == 42
+    with pytest.raises(AsyncWriteError):
+        pool.drain("spill")
+    pool.drain("spill")          # errors were consumed by the first drain
+    pool.close()
+
+
+def test_shared_pool_writer_close_keeps_pool_alive():
+    pool = TransferPool(2)
+    w = AsyncWriter(pool=pool)
+    w.submit(lambda: None)
+    w.close()                    # seals the writer lane only
+    with pytest.raises(AsyncWriteError):
+        w.submit(lambda: None)
+    assert pool.submit("spill", lambda: 5).result(5) == 5  # pool lives on
+    pool.close()
+
+
+def test_transfer_pool_close_waits_accepted_work():
+    pool = TransferPool(2)
+    gate = threading.Event()
+    p = pool.submit("write", lambda: gate.wait(5) and 7)
+    threading.Timer(0.05, gate.set).start()
+    pool.close()                 # must wait for the in-flight item
+    assert p.done() and p.result() == 7
+
+
+# ----------------------------------------------------------- manager-level
+@pytest.fixture(scope="module")
+def small_setup():
+    cfg = get_config("llama3.2-3b", reduced=True)
+    model = build_model(cfg)
+    state = steps_lib.init_state(model, jax.random.key(0))
+    registry = LayerRegistry(model)
+    return model, state, registry
+
+
+def _assert_states_equal(a, b, parts=("params", "opt")):
+    for part in parts:
+        for x, y in zip(jax.tree.leaves(a[part]), jax.tree.leaves(b[part])):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_tiered_save_restores_bit_exact_from_either_tier(tmp_path,
+                                                         small_setup):
+    """Acceptance: tiered saves land hot; restore is bit-exact both from
+    the hot tier (same process) and from the durable tier alone (fresh
+    hot tier after a 'restart'), with tier provenance in the stats."""
+    model, state, registry = small_setup
+    pol = make_policy("full", model.layer_units())
+    mgr = CheckpointManager(tmp_path, registry, pol, store_backend="tiered")
+    manifest = mgr.save(state, step=10)
+    assert manifest.meta["storage"]["backend"] == "tiered"
+    assert manifest.meta["storage"]["durable_on"] in ("hot", "durable")
+    like = steps_lib.state_specs(model)
+    # restore while everything is hot
+    got_hot = mgr.restore(like)
+    _assert_states_equal(state, got_hot)
+    s = mgr.last_restore_stats
+    assert s["tier_reads"].get("hot", 0) > 0
+    assert set(s["unit_tiers"].values()) == {"hot"}
+    mgr.drain_spill()
+    mgr.close()
+
+    # "restart": fresh manager, empty hot tier — durable tier must carry
+    # the whole restore, and promotion warms the hot tier
+    mgr2 = CheckpointManager(tmp_path, registry, pol, store_backend="tiered")
+    got_durable = mgr2.restore(like)
+    _assert_states_equal(state, got_durable)
+    s2 = mgr2.last_restore_stats
+    assert s2["tier_reads"].get("durable", 0) > 0
+    assert set(s2["unit_tiers"].values()) == {"durable"}
+    got_promoted = mgr2.restore(like)
+    _assert_states_equal(state, got_promoted)
+    assert set(mgr2.last_restore_stats["unit_tiers"].values()) == {"hot"}
+    mgr2.close()
+
+
+def test_tiered_spill_barrier_commits_durable(tmp_path, small_setup):
+    model, state, registry = small_setup
+    mgr = CheckpointManager(tmp_path, registry,
+                            make_policy("full", model.layer_units()),
+                            store_backend="tiered", spill_barrier=True)
+    manifest = mgr.save(state, step=10)
+    assert manifest.meta["storage"]["durable_on"] == "durable"
+    assert mgr.last_save_stats["spill_pending"] == 0
+    # every referenced object is already on the durable tree
+    for d in manifest.referenced_digests():
+        assert mgr.store.backend.durable.has(d)
+    mgr.close()
+
+
+def test_memory_manager_roundtrip_records_volatile(tmp_path, small_setup):
+    model, state, registry = small_setup
+    mgr = CheckpointManager(tmp_path, registry,
+                            make_policy("full", model.layer_units()),
+                            async_save=False, store_backend="memory")
+    manifest = mgr.save(state, step=10)
+    assert manifest.meta["storage"]["durable_on"] == "none"
+    got = mgr.restore(steps_lib.state_specs(model))
+    _assert_states_equal(state, got)
+    assert not (tmp_path / "objects").exists()
+    mgr.close()
+
+
+def test_merge_across_heterogeneous_backends(tmp_path, small_setup):
+    """Satellite: merge a RAM-tier source with a local source; the output
+    checkpoint restores bit-exactly from the durable tier."""
+    model, state, registry = small_setup
+    pol = make_policy("full", model.layer_units())
+
+    # Source A: volatile RAM store (objects exist only in this instance).
+    mgr_a = CheckpointManager(tmp_path / "a", registry, pol,
+                              async_save=False, store_backend="memory")
+    mgr_a.save(state, step=100)
+
+    # Source B: classic local store with drifted weights.
+    w = registry.extract_unit(state["params"], "block_001")
+    leaves, treedef = jax.tree.flatten(w)
+    bumped = np.asarray(leaves[0]).copy()
+    bumped.reshape(-1)[:8] += np.asarray(1.0, bumped.dtype)
+    state_b = dict(state, params=registry.insert_unit(
+        state["params"], "block_001",
+        jax.tree.unflatten(treedef, [bumped] + leaves[1:])))
+    mgr_b = CheckpointManager(tmp_path / "b", registry, pol,
+                              async_save=False)
+    mgr_b.save(state_b, step=100)
+
+    recipe = Recipe(
+        base=CheckpointRef(tmp_path / "b", 100),
+        output=tmp_path / "merged",
+        select=[SelectRule(units=["embed", "block_000"],
+                           source=CheckpointRef(tmp_path / "a", 100))])
+    stats = merge(recipe, workers=2,
+                  stores={str(CheckpointRef(tmp_path / "a", 100)):
+                          mgr_a.store})
+    assert stats["units"] > 0
+    out_meta = ManifestStore(tmp_path / "merged").load(100).meta
+    assert out_meta["storage"]["backend"] == "local"
+    assert out_meta["storage"]["durable_on"] == "durable"
+
+    # Restore the merged root from its durable objects alone.
+    mgr_out = CheckpointManager(tmp_path / "merged", registry, pol,
+                                async_save=False)
+    got = mgr_out.restore(steps_lib.state_specs(model))
+    exp_b1 = registry.extract_unit(state_b["params"], "block_001")
+    got_b1 = registry.extract_unit(got["params"], "block_001")
+    for x, y in zip(jax.tree.leaves(exp_b1), jax.tree.leaves(got_b1)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    exp_b0 = registry.extract_unit(state["params"], "block_000")
+    got_b0 = registry.extract_unit(got["params"], "block_000")
+    for x, y in zip(jax.tree.leaves(exp_b0), jax.tree.leaves(got_b0)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    mgr_a.close()
+    mgr_b.close()
+    mgr_out.close()
