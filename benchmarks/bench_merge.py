@@ -9,8 +9,13 @@ Scenarios (mirroring the paper's rows):
   layer; our per-layer chunks make it cost the same as merge_2),
 - merge_8: layers striped over 8 checkpoints,
 - merge_L: one layer per checkpoint (L sources),
+- merge_ram_to_durable: the source checkpoint lives on the RAM
+  ``memory`` backend (PR-4) and merges into a durable local output —
+  the ``stores=``/``out_store=`` path, measuring a pure-RAM read side,
 - implicit_restore_parity: LLMTailor-native path — no explicit merge at
   all, the manifest chain restores directly.
+
+Every run writes the structured result set to ``BENCH_merge.json``.
 """
 from __future__ import annotations
 
@@ -19,15 +24,15 @@ import tempfile
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
-from _util import Timer, csv_row
+from _util import Timer, csv_row, write_bench_json
 
 
-def run() -> dict:
+def run(store_backend: str = "local") -> dict:
     from repro.configs import get_config
     from repro.core import LayerRegistry, Recipe, make_policy, merge
     from repro.core.recipe import CheckpointRef, SelectRule
+    from repro.checkpoint.chunk_store import ChunkStore
     from repro.checkpoint.saver import CheckpointManager
     from repro.launch import steps as steps_lib
     from repro.models import build_model
@@ -42,20 +47,26 @@ def run() -> dict:
     root = Path(tempfile.mkdtemp(prefix="bench_merge_"))
     pol = make_policy("full", model.layer_units())
     mgr = CheckpointManager(root / "ck", registry, pol, async_save=False,
-                            keep=64)
+                            keep=64, store_backend=store_backend)
     n_steps = max(8, len(blocks))
     for i in range(n_steps):
         mgr.save(state, step=(i + 1) * 100)
+    mgr.drain_spill()
+    # All merge sources below read through this live store instance, so
+    # the scenarios work identically on RAM-tier backends (whose objects
+    # a fresh ChunkStore could not see).
+    src_stores = {str(CheckpointRef(root / "ck", (i + 1) * 100)): mgr.store
+                  for i in range(n_steps)}
 
     like = steps_lib.state_specs(model)
-    results = {}
+    results = {"store_backend": store_backend}
 
     with Timer() as t:
         mgr.restore(like)
     results["baseline_restore"] = t.seconds
     csv_row("merge_baseline_restore", t.seconds * 1e6, "sources=1")
 
-    def merge_case(name: str, assign_steps):
+    def merge_case(name: str, assign_steps, *, stores=None, out_store=None):
         """assign_steps: unit -> step for non-base units."""
         rules = {}
         for u, s in assign_steps.items():
@@ -66,18 +77,43 @@ def run() -> dict:
             select=[SelectRule(units=us, source=CheckpointRef(root / "ck", s))
                     for s, us in sorted(rules.items())])
         with Timer() as t:
-            stats = merge(recipe, workers=2)
+            stats = merge(recipe, workers=2, stores=stores,
+                          out_store=out_store)
         results[name] = t.seconds
         csv_row(f"merge_{name}", t.seconds * 1e6,
                 f"sources={stats['sources']};chunks={stats['chunks']};"
                 f"MiB={stats['bytes']/2**20:.1f}")
+        return stats
 
     half = len(blocks) // 2
-    merge_case("2", {b: 100 for b in blocks[:half]})
-    merge_case("parity_2", {b: 100 for b in blocks[::2]})
-    merge_case("8", {b: ((i % 8) + 1) * 100 for i, b in enumerate(blocks)})
+    merge_case("2", {b: 100 for b in blocks[:half]}, stores=src_stores)
+    merge_case("parity_2", {b: 100 for b in blocks[::2]}, stores=src_stores)
+    merge_case("8", {b: ((i % 8) + 1) * 100 for i, b in enumerate(blocks)},
+               stores=src_stores)
     merge_case("L", {b: ((i % n_steps) + 1) * 100
-                     for i, b in enumerate(blocks)})
+                     for i, b in enumerate(blocks)}, stores=src_stores)
+
+    # Merge-from-RAM-to-durable (PR-4 backends API): the source
+    # checkpoint exists only on a volatile memory backend; the merge
+    # streams its objects blob-for-blob into a durable local output and
+    # only commits the output manifest after the spill barrier.
+    ram_root = root / "ram_ck"
+    ram_mgr = CheckpointManager(ram_root, registry, pol, async_save=False,
+                                keep=8, store_backend="memory")
+    ram_mgr.save(state, step=100)
+    ram_recipe = Recipe(base=CheckpointRef(ram_root, 100),
+                       output=root / "out_ram", select=[])
+    out_store = ChunkStore(root / "out_ram")
+    with Timer() as t:
+        stats = merge(ram_recipe, workers=2,
+                      stores={str(CheckpointRef(ram_root, 100)):
+                              ram_mgr.store},
+                      out_store=out_store)
+    results["ram_to_durable"] = t.seconds
+    csv_row("merge_ram_to_durable", t.seconds * 1e6,
+            f"sources={stats['sources']};chunks={stats['chunks']};"
+            f"MiB={stats['bytes']/2**20:.1f};src_backend=memory")
+    ram_mgr.close()
 
     # implicit restore across a parity chain (no merge step at all)
     mgr2 = CheckpointManager(root / "ck2", registry,
@@ -93,6 +129,7 @@ def run() -> dict:
     mgr.close()
     mgr2.close()
     shutil.rmtree(root, ignore_errors=True)
+    write_bench_json("merge", results)
     return results
 
 

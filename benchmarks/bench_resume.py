@@ -15,6 +15,11 @@ a full-state restore against a params-only partial restore on the
 reference checkpoint — the partial restore must read strictly fewer
 bytes (it never touches optimizer objects).
 
+A ``resume_sharded_restore_bytes`` row compares a full-array restore of
+a shard-native checkpoint (2 save participants) against per-participant
+resharded restores on a different participant shape (4) — every
+participant must read strictly fewer bytes than the full restore.
+
 Every run also writes the structured result set to ``BENCH_resume.json``
 (machine-readable perf trajectory for later PRs).
 """
@@ -93,6 +98,58 @@ def _full_vs_partial(ckpt_dir: str) -> dict:
     return {"full": full, "partial": partial}
 
 
+def _sharded_restore_bytes() -> dict:
+    """Shard-native save (2 virtual participants) then: a full-array
+    restore vs per-participant resharded restores on a different
+    participant shape (4).  Every participant must read strictly fewer
+    bytes than the full restore — the slice-aware read plan's win."""
+    import shutil as _shutil
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import LayerRegistry, make_policy
+    from repro.checkpoint.saver import CheckpointManager
+    from repro.checkpoint.sharded import (
+        ShardedCheckpointer,
+        participant_wanted,
+    )
+    from repro.launch import steps as steps_lib
+    from repro.models import build_model
+    from _util import Timer
+
+    cfg = get_config(BASE["arch"], reduced=True)
+    model = build_model(cfg)
+    state = steps_lib.init_state(model, jax.random.key(0))
+    reg = LayerRegistry(model)
+    d = tempfile.mkdtemp(prefix="bench_resume_sharded_")
+    try:
+        mgr = CheckpointManager(d, reg,
+                                make_policy("full", model.layer_units()))
+        ck = ShardedCheckpointer(mgr, 2)
+        ck.save(state, step=10)
+        like = steps_lib.state_specs(model)
+        with Timer() as t:
+            mgr.restore(like)
+        full = dict(mgr.last_restore_stats)
+        parts = []
+        for pid in range(4):
+            wanted = participant_wanted(reg, pid, 4)
+            with Timer() as tp:
+                mgr.restore(like, owned=wanted)
+            s = dict(mgr.last_restore_stats)
+            s["seconds_wall"] = tp.seconds
+            assert s["bytes_read"] < full["bytes_read"], (
+                "resharded participant restore must read strictly fewer "
+                f"bytes: {s['bytes_read']} vs {full['bytes_read']}")
+            parts.append(s)
+        mgr.close()
+        return {"full": full, "participants": parts,
+                "full_seconds": t.seconds}
+    finally:
+        _shutil.rmtree(d, ignore_errors=True)
+
+
 def run() -> dict:
     from repro.launch.train import SimulatedFailure, train
 
@@ -115,6 +172,16 @@ def run() -> dict:
             f"params_only_read_bytes={cmp['partial']['bytes_read']};"
             f"params_only_fraction="
             f"{cmp['partial']['bytes_read']/cmp['full']['bytes_read']:.3f}")
+
+    sb = _sharded_restore_bytes()
+    out["sharded_restore_bytes"] = sb
+    worst = max(p["bytes_read"] for p in sb["participants"])
+    csv_row("resume_sharded_restore_bytes", sb["full_seconds"] * 1e6,
+            f"full_read_bytes={sb['full']['bytes_read']};"
+            f"participant_max_read_bytes={worst};"
+            f"participant_fraction="
+            f"{worst / sb['full']['bytes_read']:.3f};"
+            f"shards_skipped={sb['participants'][0]['shards_skipped']}")
 
     for policy in ("full", "parity", "filtered", "topk_delta"):
         d = tempfile.mkdtemp(prefix=f"bench_resume_{policy}_")

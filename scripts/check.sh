@@ -12,10 +12,14 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "# compileall (syntax gate over every python tree)"
 python -m compileall -q src tests benchmarks scripts
 
-echo "# tracked-bytecode guard (no *.pyc may be committed)"
-if git ls-files -- '*.pyc' '*.pyo' | grep -q .; then
-  echo "ERROR: tracked bytecode files found (git ls-files '*.pyc'):" >&2
-  git ls-files -- '*.pyc' '*.pyo' >&2
+echo "# tracked-but-ignored guard (nothing .gitignore matches may be committed)"
+# Generalizes the old tracked-pyc guard: ANY tracked file that the
+# ignore rules match (committed bytecode, BENCH_*.json artifacts,
+# results/ trees, ...) is index drift and fails CI.
+if git ls-files -ci --exclude-standard | grep -q .; then
+  echo "ERROR: tracked files matched by .gitignore (git ls-files -ci):" >&2
+  git ls-files -ci --exclude-standard >&2
+  echo "fix with: git rm --cached <file>" >&2
   exit 1
 fi
 
@@ -28,6 +32,9 @@ if [ "${1:-}" = "smoke" ]; then
   python scripts/restore_smoke.py
   echo "# tiered smoke (save to memory tier -> spill -> restore bit-exact)"
   python scripts/tiered_smoke.py
+  echo "# sharded smoke (2 participants -> barrier commit -> restart ->"
+  echo "#                resharded restore bit-exact, fewer bytes read)"
+  python scripts/sharded_smoke.py
   echo "# bench_ckpt_time --smoke (save+restore pipelines end to end)"
   python benchmarks/bench_ckpt_time.py --smoke
   exit 0

@@ -27,7 +27,13 @@ The package is layered (see docs/architecture.md for the full dataflow):
   manifest commit, GC, and the restore entry point.
 - ``restore`` — the planned, pipelined restore engine: deduplicated
   read plans, a streaming executor overlapping disk/decode/H2D, and
-  partial (weights-only / unit-filtered) restore (see docs/restore.md).
+  partial (weights-only / unit-filtered / slice-owned) restore (see
+  docs/restore.md).
+- ``sharded`` — shard-native checkpointing (see docs/storage.md):
+  ``ShardedSaver`` participants persist only their owned index blocks
+  as shard objects, ``ShardCoordinator`` runs the two-phase manifest
+  commit barrier, and ``participant_wanted`` resolves owned slices for
+  the resharded (save-on-MxN → restore-on-PxQ) restore path.
 """
 from repro.checkpoint.async_io import (  # noqa: F401
     AsyncWriteError,
@@ -60,6 +66,12 @@ _LAZY = {
     "RestoreEngine": "repro.checkpoint.restore",
     "RestorePlan": "repro.checkpoint.restore",
     "plan_restore": "repro.checkpoint.restore",
+    "ShardedSaver": "repro.checkpoint.sharded",
+    "ShardCoordinator": "repro.checkpoint.sharded",
+    "ShardedCheckpointer": "repro.checkpoint.sharded",
+    "ShardBarrierError": "repro.checkpoint.sharded",
+    "participant_wanted": "repro.checkpoint.sharded",
+    "combine_states": "repro.checkpoint.sharded",
 }
 
 

@@ -228,9 +228,19 @@ class ChunkRef:
     digest: str = ""    # blake2b of the canonical payload (required to read)
     stored: str = "full"            # "full" | "delta" (on-disk encoding)
     delta_base: Optional[str] = None  # digest of the full base, if delta
+    # Shard objects only: the ShardSpec JSON recording which index blocks
+    # of the unit's global arrays this object covers (participant id +
+    # per-leaf shape/dtype/blocks — see repro.checkpoint.sharded).  None
+    # for classic global-array objects.  The spec lives in the manifest,
+    # not the envelope: the same content digest may be referenced with
+    # different specs by different save topologies.
+    spec: Optional[Dict[str, Any]] = None
 
     def to_json(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        if d.get("spec") is None:
+            d.pop("spec", None)  # keep global-object manifests unchanged
+        return d
 
     @staticmethod
     def from_json(d: Dict[str, Any]) -> "ChunkRef":

@@ -52,8 +52,14 @@ import numpy as np
 
 from repro.checkpoint.chunk_store import ChunkRef, ChunkStore, ReadSession
 from repro.checkpoint.serial import ChunkCorruption
+from repro.checkpoint.sharded import (
+    WantedFn,
+    assemble_shards,
+    spec_key,
+    spec_overlaps,
+)
 from repro.core.layer_registry import OPT_KINDS, LayerRegistry
-from repro.core.manifest import ManifestStore
+from repro.core.manifest import ManifestStore, entry_refs, is_sharded
 from repro.optim.groups import get_at, set_at
 
 log = logging.getLogger("repro.checkpoint.restore")
@@ -86,11 +92,15 @@ class Candidate:
 
 @dataclasses.dataclass(frozen=True)
 class UnitRead:
-    """Read plan for one (unit, kind): the primary candidate followed by
-    the up-front-resolved older-manifest fallbacks, best first."""
+    """Read plan for one read target: the primary candidate followed by
+    the up-front-resolved older-manifest fallbacks, best first.  For a
+    sharded manifest entry there is one target PER SCHEDULED SHARD
+    OBJECT (``spec`` carries its ShardSpec); for a classic global entry
+    there is exactly one target with ``spec=None``."""
     unit: str
     kind: str               # "weights" | "opt"
     chain: Tuple[Candidate, ...]
+    spec: Optional[Dict[str, Any]] = None
 
     @property
     def primary(self) -> Candidate:
@@ -106,6 +116,12 @@ class RestorePlan:
     # digest -> number of plan dependents (targets + their delta bases),
     # counted over primary candidates: the executor's release schedule.
     dependents: Dict[str, int]
+    # sharded entries only: (unit, kind) -> (scheduled, total) shard
+    # objects.  scheduled < total means the owned filter skipped shards
+    # (the unit assembles zero-filled outside the read blocks).
+    shard_groups: Dict[Tuple[str, str], Tuple[int, int]] = \
+        dataclasses.field(default_factory=dict)
+    shards_skipped: int = 0
 
     @property
     def unique_digests(self) -> int:
@@ -136,7 +152,8 @@ def plan_restore(manifests: ManifestStore, store: ChunkStore,
                  unit_names: Sequence[str], *,
                  step: Optional[int] = None,
                  parts: Sequence[str] = PARTS_ALL,
-                 units: Optional[Sequence[str]] = None) -> RestorePlan:
+                 units: Optional[Sequence[str]] = None,
+                 owned: Optional[WantedFn] = None) -> RestorePlan:
     """Resolve the manifest chain into a deduplicated, fallback-aware
     read plan.
 
@@ -146,6 +163,14 @@ def plan_restore(manifests: ManifestStore, store: ChunkStore,
     for that unit, newest first.  Candidates whose object file (or delta
     base) is already missing on disk are dropped here, so a deleted
     object costs a ``stat`` at plan time instead of a failed read later.
+
+    Sharded entries plan one target per shard object; ``owned`` (a
+    ``wanted(unit, kind, path, shape) -> blocks`` resolver, see
+    :func:`repro.checkpoint.sharded.participant_wanted`) restricts the
+    plan to shard objects whose blocks intersect the caller's slices —
+    the slice-aware resharding read plan.  Fallback candidates for a
+    shard are older-manifest shards with the SAME layout (equal
+    ``spec_key``); a global object never substitutes for one shard.
     """
     parts = tuple(parts)
     for p in parts:
@@ -161,7 +186,7 @@ def plan_restore(manifests: ManifestStore, store: ChunkStore,
     # One pass over the retained manifest chain, oldest -> newest, keeping
     # every older-step entry per (unit, kind).  This is the up-front
     # version of the seed path's per-unit fallback crawl.
-    older: Dict[Tuple[str, str], List[Candidate]] = {}
+    older: Dict[Tuple[str, str], List[Tuple[int, Any]]] = {}
     for s in manifests.all_steps():
         if s >= manifest.step:
             continue
@@ -169,8 +194,8 @@ def plan_restore(manifests: ManifestStore, store: ChunkStore,
         if m is None:
             continue
         for unit, kinds in m.entries.items():
-            for kind, ref in kinds.items():
-                older.setdefault((unit, kind), []).append(Candidate(s, ref))
+            for kind, entry in kinds.items():
+                older.setdefault((unit, kind), []).append((s, entry))
 
     def readable(c: Candidate) -> bool:
         """Plan-time liveness: digest present and (if delta) base present.
@@ -180,39 +205,144 @@ def plan_restore(manifests: ManifestStore, store: ChunkStore,
             return False
         return not c.ref.delta_base or store.has(c.ref.delta_base)
 
+    def resolve_chain(name: str, kind: str, primary: Candidate,
+                      fallbacks: List[Candidate]) -> Optional[Tuple]:
+        chain: List[Candidate] = []
+        seen: set = set()
+        for c in [primary] + fallbacks:
+            key = c.ref.digest or c.ref.relpath
+            if key in seen:
+                continue  # same object — would fail identically
+            seen.add(key)
+            if not readable(c):
+                if c is primary:
+                    log.warning(
+                        "object for %s/%s at step %s missing on disk; "
+                        "fallback resolved at plan time",
+                        name, kind, c.ref.step)
+                continue
+            chain.append(c)
+        return tuple(chain) if chain else None
+
     selected = _select_units(unit_names, units)
     kinds = tuple(_PART_KIND[p] for p in parts)
     targets: List[UnitRead] = []
     dependents: Dict[str, int] = {}
+    shard_groups: Dict[Tuple[str, str], Tuple[int, int]] = {}
+    shards_skipped = 0
+
+    def add_target(t: UnitRead) -> None:
+        targets.append(t)
+        for d in t.primary.digests():
+            dependents[d] = dependents.get(d, 0) + 1
+
     for name in selected:
         if name not in manifest.entries:
             raise RestoreError(f"manifest missing unit {name}")
         for kind in kinds:
-            primary = Candidate(manifest.step, manifest.entries[name][kind])
-            chain: List[Candidate] = []
-            seen: set = set()
-            for c in [primary] + list(reversed(
-                    older.get((name, kind), []))):
-                key = c.ref.digest or c.ref.relpath
-                if key in seen:
-                    continue  # same object — would fail identically
-                seen.add(key)
-                if not readable(c):
-                    if c is primary:
-                        log.warning(
-                            "object for %s/%s at step %s missing on disk; "
-                            "fallback resolved at plan time",
-                            name, kind, c.ref.step)
+            entry = manifest.entries[name][kind]
+            past = older.get((name, kind), [])
+            if not is_sharded(entry):
+                fallbacks = [Candidate(s, e)
+                             for s, e in reversed(past)
+                             if not is_sharded(e)]
+                chain = resolve_chain(name, kind,
+                                      Candidate(manifest.step, entry),
+                                      fallbacks)
+                if chain is None:
+                    raise RestoreError(f"no readable chunk for unit "
+                                       f"{name}/{kind}")
+                add_target(UnitRead(name, kind, chain))
+                continue
+
+            refs = entry_refs(entry)
+            # One pass over the older entries builds the layout-keyed
+            # fallback index; per-ref lookup is then O(1) instead of
+            # rescanning (and re-hashing specs of) every older manifest
+            # per shard ref.
+            older_by_layout: Dict[Tuple, List[Candidate]] = {}
+            for s, e in reversed(past):
+                if not is_sharded(e):
                     continue
-                chain.append(c)
-            if not chain:
-                raise RestoreError(f"no readable chunk for unit "
-                                   f"{name}/{kind}")
-            targets.append(UnitRead(name, kind, tuple(chain)))
-            for d in chain[0].digests():
-                dependents[d] = dependents.get(d, 0) + 1
+                for r in entry_refs(e):
+                    if r.spec is not None:
+                        older_by_layout.setdefault(
+                            spec_key(r.spec), []).append(Candidate(s, r))
+            shard_targets: List[UnitRead] = []
+            # per target: manifest step -> readable candidate serving
+            # that step's content.  An unchanged shard's entry dedups to
+            # the same digest across steps, so ONE object can serve
+            # several steps — the step map (not the digest chain) is
+            # what unit-consistent alignment must reason over.
+            step_maps: List[Dict[int, Candidate]] = []
+            for ref in refs:
+                if ref.spec is None:
+                    raise RestoreError(
+                        f"sharded entry for {name}/{kind} has a ref "
+                        "without a shard spec — manifest is corrupt")
+                if owned is not None and not spec_overlaps(ref.spec, owned,
+                                                           name, kind):
+                    shards_skipped += 1
+                    continue
+                cands = ([Candidate(manifest.step, ref)]
+                         + older_by_layout.get(spec_key(ref.spec), []))
+                chain: List[Candidate] = []
+                steps: Dict[int, Candidate] = {}
+                seen: set = set()
+                for c in cands:  # newest step first
+                    if not readable(c):
+                        if c is cands[0]:
+                            log.warning(
+                                "shard object for %s/%s at step %s "
+                                "missing on disk; fallback resolved at "
+                                "plan time", name, kind, c.manifest_step)
+                        continue
+                    steps[c.manifest_step] = c
+                    if c.ref.digest not in seen:
+                        seen.add(c.ref.digest)
+                        chain.append(c)
+                if not chain:
+                    raise RestoreError(
+                        f"no readable shard object for unit {name}/{kind} "
+                        f"(participant {ref.spec.get('participant')})")
+                shard_targets.append(UnitRead(name, kind, tuple(chain),
+                                              spec=ref.spec))
+                step_maps.append(steps)
+            # Unit-consistent fallback: if any shard's plan-time primary
+            # fell behind the target step, anchor EVERY scheduled shard
+            # of this unit on the newest step all of them can serve —
+            # never assemble one tensor from mixed manifest steps (a
+            # state that never existed).  No common step at all is an
+            # error: serving a torn tensor silently would be worse than
+            # failing the restore.  (Read-time corruption can still walk
+            # each chain's remainder — the documented narrow window.)
+            if (len(shard_targets) > 1
+                    and any(t.primary.manifest_step != manifest.step
+                            for t in shard_targets)):
+                common = set.intersection(*(set(m) for m in step_maps))
+                if not common:
+                    raise RestoreError(
+                        f"unit {name}/{kind}: no single manifest step is "
+                        "readable by every shard — refusing to assemble "
+                        "a mixed-step tensor")
+                best = max(common)
+                shard_targets = [
+                    dataclasses.replace(
+                        t, chain=(m[best],) + tuple(
+                            c for c in t.chain
+                            if c.ref.digest != m[best].ref.digest))
+                    for t, m in zip(shard_targets, step_maps)]
+                log.warning(
+                    "unit %s/%s: aligning all %d shards on manifest "
+                    "step %s (newest step readable by every shard)",
+                    name, kind, len(shard_targets), best)
+            for t in shard_targets:
+                add_target(t)
+            shard_groups[(name, kind)] = (len(shard_targets), len(refs))
     return RestorePlan(step=manifest.step, meta=dict(manifest.meta),
-                       parts=parts, targets=targets, dependents=dependents)
+                       parts=parts, targets=targets, dependents=dependents,
+                       shard_groups=shard_groups,
+                       shards_skipped=shards_skipped)
 
 
 class _Placer:
@@ -241,14 +371,27 @@ class _Placer:
         self._groups: Dict[Tuple[str, ...], Dict[str, Any]] = {}
         self.h2d_bytes = 0
 
+        # Shard accumulation: (unit, kind) -> the decoded shard parts
+        # still outstanding.  The assembled unit enters the ordinary
+        # placement path (stacked groups, device_put) once its last
+        # scheduled shard lands; scheduled < total (owned-filtered plan)
+        # assembles zero-filled outside the read blocks.
+        self._shards: Dict[Tuple[str, str], Dict[str, Any]] = {
+            key: {"remaining": scheduled, "total": total, "parts": []}
+            for key, (scheduled, total) in plan.shard_groups.items()
+            if scheduled > 0}
+
         # Pre-size stacked groups from the plan so a partial restore of a
         # group is detectable (its buffers must start zeroed, not empty).
+        # Sharded entries contribute several targets per (unit, kind) but
+        # place exactly once — count unique pairs.
         want: Dict[Tuple[str, ...], int] = {}
-        for t in plan.targets:
-            u = registry.by_name[t.unit]
+        for unit, kind in dict.fromkeys((t.unit, t.kind)
+                                        for t in plan.targets):
+            u = registry.by_name[unit]
             if u.index is None:
                 continue
-            for root in self._roots(t.unit, t.kind):
+            for root in self._roots(unit, kind):
                 want[root] = want.get(root, 0) + 1
         total: Dict[Tuple[str, ...], int] = {}
         for uu in registry.units:
@@ -282,6 +425,19 @@ class _Placer:
             return jax.tree.map(jax.device_put, host,
                                 get_at(self.shardings, root))
         return jax.tree.map(jnp.asarray, host)
+
+    def add_shard(self, unit: str, kind: str, spec: Dict[str, Any],
+                  tree: PyTree) -> None:
+        """Accumulate one decoded shard object; assemble + place the
+        unit once its last scheduled shard arrives."""
+        g = self._shards[(unit, kind)]
+        g["parts"].append((spec, tree))
+        g["remaining"] -= 1
+        if g["remaining"] == 0:
+            partial = len(g["parts"]) < g["total"]
+            assembled = assemble_shards(g["parts"], partial=partial)
+            g["parts"] = []
+            self.add(unit, kind, assembled)
 
     def add(self, unit: str, kind: str, tree: PyTree) -> None:
         u = self.registry.by_name[unit]
@@ -406,7 +562,8 @@ class RestoreEngine:
                 shardings: Optional[Dict[str, PyTree]] = None,
                 parts: Sequence[str] = PARTS_ALL,
                 units: Optional[Sequence[str]] = None,
-                pipelined: bool = True) -> Dict[str, PyTree]:
+                pipelined: bool = True,
+                owned: Optional[WantedFn] = None) -> Dict[str, PyTree]:
         """Rebuild a train state from the manifest chain (the implicit
         Frankenstein merge), streaming units device-ward as they decode.
 
@@ -414,13 +571,16 @@ class RestoreEngine:
         ShapeDtypeStructs) for the requested ``parts``; ``shardings``
         optionally places every unit onto a mesh as it lands (elastic
         restart onto any device count).  ``parts``/``units`` select a
-        subset (weights-only serving, per-unit-prefix surgery); the
-        returned dict holds exactly the requested parts plus ``step``.
+        subset (weights-only serving, per-unit-prefix surgery); ``owned``
+        restricts sharded entries to the shard objects intersecting the
+        caller's slices (per-participant resharded restore — uncovered
+        regions of those units restore as zeros); the returned dict holds
+        exactly the requested parts plus ``step``.
         """
         t0 = time.time()
         plan = plan_restore(self.manifests, self.store,
                             self.registry.unit_names(), step=step,
-                            parts=parts, units=units)
+                            parts=parts, units=units, owned=owned)
         session = ReadSession(self.store, verify=self.verify)
         placer = _Placer(self.registry, state_like, shardings, plan)
         fallbacks: Dict[str, int] = {}
@@ -430,7 +590,11 @@ class RestoreEngine:
         remaining = dict(plan.dependents)
 
         def consume(target: UnitRead, tree: PyTree) -> None:
-            placer.add(target.unit, target.kind, tree)
+            if target.spec is not None:
+                placer.add_shard(target.unit, target.kind, target.spec,
+                                 tree)
+            else:
+                placer.add(target.unit, target.kind, tree)
             # Release session memory for digests no plan target still
             # needs (fallback digests are not tracked — rare, and freed
             # when the session goes out of scope).
@@ -483,6 +647,12 @@ class RestoreEngine:
             "unique_digests": plan.unique_digests,
             "planned_object_reads": plan.planned_object_reads,
             "h2d_bytes": placer.h2d_bytes,
+            # shard-native accounting: how many targets were shard
+            # objects, and how many the owned filter skipped (the
+            # resharding read-savings the tests pin down)
+            "sharded_targets": sum(1 for t in plan.targets
+                                   if t.spec is not None),
+            "shards_skipped": plan.shards_skipped,
             # unit/kind -> manifest step it actually came from (only
             # entries that fell back from the target manifest)
             "fallback_units": fallbacks,

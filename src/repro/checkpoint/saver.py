@@ -30,6 +30,12 @@ Save path (fingerprint pipeline, the default — see docs/perf.md):
 the whole unit, blake2b over the canonical payload, XOR delta in the
 store.  Both paths' objects coexist in one store and restore uniformly.
 
+Shard-native saves (``repro.checkpoint.sharded``, docs/storage.md) run
+the same pipeline per *participant* over only its owned index blocks —
+one shard object per (unit, kind, participant) — and replace step 4's
+manifest commit with a two-phase barrier; manifest entries then hold
+shard SETS that restore through the same engine (slice-aware plans).
+
 Restore path (= the paper's merge, done lazily — see docs/restore.md):
   ``restore`` delegates to the planned, pipelined engine in
   ``repro.checkpoint.restore``: a planner resolves the manifest chain
@@ -65,8 +71,14 @@ from repro.checkpoint.restore import (  # noqa: F401 - RestoreError re-export
     RestoreError,
 )
 from repro.checkpoint.serial import flatten_with_paths
+from repro.checkpoint.sharded import WantedFn, _usable_prev
 from repro.core.layer_registry import LayerRegistry
-from repro.core.manifest import Manifest, ManifestStore
+from repro.core.manifest import (
+    Manifest,
+    ManifestStore,
+    entry_refs,
+    is_sharded,
+)
 from repro.core.policies import CheckpointPolicy, PolicyContext
 from repro.kernels import block_fp as bfp
 
@@ -154,6 +166,14 @@ class CheckpointManager:
         self.last_save_stats: Dict[str, Any] = {}
 
     def _infer_event_index(self) -> int:
+        """Resume the event counter across restarts from the newest
+        manifest's recorded index.  Counting retained manifests instead
+        would saturate at the retention cap ``keep``, freezing
+        event-alternating policies (parity/interval/filtered) on one
+        half forever."""
+        m = self.manifests.load()
+        if m is not None and "event_index" in m.meta:
+            return int(m.meta["event_index"]) + 1
         return len(self.manifests.all_steps())
 
     def _rebuild_refcounts(self) -> None:
@@ -176,13 +196,19 @@ class CheckpointManager:
                 continue
             counts.update(m.referenced_digests())
             for unit, kinds in m.entries.items():
-                for kind, ref in kinds.items():
-                    key = (unit, kind)
-                    if last_digest.get(key) == ref.digest:
-                        continue  # carried-over entry, not a new write
-                    last_digest[key] = ref.digest
-                    runs[key] = (runs.get(key, 0) + 1
-                                 if ref.stored == "delta" else 0)
+                for kind, entry in kinds.items():
+                    for ref in entry_refs(entry):
+                        # Shard objects run their delta chains per
+                        # participant — same namespace ShardedSaver
+                        # writes under.
+                        ukey = (unit if ref.spec is None else
+                                f"{unit}@p{ref.spec.get('participant', 0)}")
+                        key = (ukey, kind)
+                        if last_digest.get(key) == ref.digest:
+                            continue  # carried-over entry, not a new write
+                        last_digest[key] = ref.digest
+                        runs[key] = (runs.get(key, 0) + 1
+                                     if ref.stored == "delta" else 0)
         self.store.set_refcounts(counts)
         self.store.seed_delta_runs(runs)
 
@@ -194,16 +220,9 @@ class CheckpointManager:
         step = int(state["step"]) if step is None else int(step)
         ctx = PolicyContext(event_index=self._event_index, step=step,
                             drift_scores=drift_scores)
-        prev = self.manifests.load()
-        if prev is not None and any(
-                not r.digest for kinds in prev.entries.values()
-                for r in kinds.values()):
-            # Pre-content-addressing manifest: its digest-less refs can't
-            # be carried forward (the store only reads by digest), so start
-            # a fresh full base rather than commit unrestorable entries.
-            log.warning("previous manifest at step %s predates content "
-                        "addressing; forcing a full save", prev.step)
-            prev = None
+        # Pre-content-addressing manifests (digest-less refs) can't be
+        # carried forward — same rule as the sharded path.
+        prev = _usable_prev(self.manifests.load())
         if prev is None:
             # The very first event is always a full save: every later
             # manifest must be able to reference a complete base.
@@ -216,7 +235,14 @@ class CheckpointManager:
         def prev_entry(name: str, kind: str) -> Optional[ChunkRef]:
             if prev is None:
                 return None
-            return prev.entries.get(name, {}).get(kind)
+            e = prev.entries.get(name, {}).get(kind)
+            if e is None or is_sharded(e):
+                # A previous SHARDED entry can't anchor a global-array
+                # dedup/delta (different payload layout): this global
+                # save starts the unit on a fresh full base.  The shard
+                # set itself still carries forward for unselected units.
+                return None
+            return e
 
         # Snapshot selected units to host (sync) and enqueue writes (async).
         # The fingerprint path replaces the full device_get with a device
@@ -438,7 +464,8 @@ class CheckpointManager:
                 shardings: Optional[Dict[str, PyTree]] = None,
                 parts: Tuple[str, ...] = PARTS_ALL,
                 units: Optional[Tuple[str, ...]] = None,
-                pipelined: bool = True) -> Dict[str, PyTree]:
+                pipelined: bool = True,
+                owned: Optional[WantedFn] = None) -> Dict[str, PyTree]:
         """Rebuild a train state from the manifest chain (the implicit
         merge) via the streaming restore engine — thin wrapper over
         :class:`repro.checkpoint.restore.RestoreEngine`.
@@ -448,13 +475,16 @@ class CheckpointManager:
         optionally places every unit on a mesh as it streams in (elastic
         restart onto any device count).  ``parts=("params",)`` restores
         weights without optimizer state (reading strictly fewer bytes);
-        ``units`` filters by unit-name prefix; ``pipelined=False`` forces
-        the strictly sequential executor.  Per-restore accounting lands
-        in ``last_restore_stats``.
+        ``units`` filters by unit-name prefix; ``owned`` restricts
+        sharded entries to the shard objects overlapping the caller's
+        slices (see ``repro.checkpoint.sharded.participant_wanted``);
+        ``pipelined=False`` forces the strictly sequential executor.
+        Per-restore accounting lands in ``last_restore_stats``.
         """
         return self.restorer.restore(state_like, step=step,
                                      shardings=shardings, parts=parts,
-                                     units=units, pipelined=pipelined)
+                                     units=units, pipelined=pipelined,
+                                     owned=owned)
 
     @property
     def last_restore_stats(self) -> Dict[str, Any]:

@@ -34,6 +34,21 @@ def flatten_with_paths(tree: PyTree, prefix: str = "") -> List[Tuple[str, Any]]:
     return [(prefix.rstrip("/"), tree)]
 
 
+# Shard objects (repro.checkpoint.sharded) serialize each owned block of
+# a leaf as its own tensor record; the block index rides in the record
+# name so a shard payload is an ordinary chunk to everything below the
+# manifest (dedup, deltas, codecs, CRC all apply unchanged).
+SHARD_KEY_SEP = "#b"
+
+
+def shard_leaf_key(path: str, block_index: int) -> str:
+    """Record name for block ``block_index`` of leaf ``path`` inside a
+    shard object's payload.  Consumers reconstruct keys forward from the
+    manifest's ShardSpec (path + block index) — nothing parses them
+    back."""
+    return f"{path}{SHARD_KEY_SEP}{block_index}"
+
+
 def unflatten_from_paths(items: Dict[str, Any]) -> PyTree:
     root: Dict[str, Any] = {}
     for path, value in items.items():

@@ -20,26 +20,50 @@ from collections import Counter
 from pathlib import Path
 from typing import Any, Dict, List, Optional
 
+from typing import Tuple, Union
+
 from repro.checkpoint.backends.localfs import atomic_write as _atomic_write
 from repro.checkpoint.chunk_store import ChunkRef
 from repro.core import jsonutil
+
+# A manifest entry for one (unit, kind) is either a single global-array
+# object ref (the classic layout) or a *shard set*: a tuple of refs, one
+# per shard object, each carrying the ShardSpec describing which index
+# blocks of the unit's global arrays it holds (sharded saves — see
+# repro.checkpoint.sharded and docs/storage.md).
+Entry = Union[ChunkRef, Tuple[ChunkRef, ...]]
+
+
+def is_sharded(entry: Entry) -> bool:
+    return isinstance(entry, (tuple, list))
+
+
+def entry_refs(entry: Entry) -> Tuple[ChunkRef, ...]:
+    """Uniform iteration: the refs behind an entry (1-tuple for a global
+    object)."""
+    return tuple(entry) if is_sharded(entry) else (entry,)
 
 
 @dataclasses.dataclass
 class Manifest:
     step: int
-    entries: Dict[str, Dict[str, ChunkRef]]   # unit -> kind -> ref
+    entries: Dict[str, Dict[str, Entry]]      # unit -> kind -> entry
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
     # Units saved at exactly this step (the policy's selection — used by
     # benchmarks and the paper-table accounting).
     saved_units: List[str] = dataclasses.field(default_factory=list)
 
     def to_json(self) -> bytes:
+        def enc(entry: Entry):
+            if is_sharded(entry):
+                return [r.to_json() for r in entry]
+            return entry.to_json()
+
         d = {
             "step": self.step,
             "meta": self.meta,
             "saved_units": self.saved_units,
-            "entries": {u: {k: r.to_json() for k, r in kinds.items()}
+            "entries": {u: {k: enc(e) for k, e in kinds.items()}
                         for u, kinds in self.entries.items()},
         }
         return jsonutil.dumps(d, indent=True)
@@ -47,11 +71,17 @@ class Manifest:
     @staticmethod
     def from_json(blob: bytes) -> "Manifest":
         d = jsonutil.loads(blob)
+
+        def dec(e) -> Entry:
+            if isinstance(e, list):
+                return tuple(ChunkRef.from_json(r) for r in e)
+            return ChunkRef.from_json(e)
+
         return Manifest(
             step=d["step"],
             meta=d.get("meta", {}),
             saved_units=d.get("saved_units", []),
-            entries={u: {k: ChunkRef.from_json(r) for k, r in kinds.items()}
+            entries={u: {k: dec(e) for k, e in kinds.items()}
                      for u, kinds in d["entries"].items()},
         )
 
@@ -61,20 +91,24 @@ class Manifest:
         A delta object pins its full base alive, so the base digest gets a
         reference alongside the entry's own digest.  Counts (not a set) let
         the store's refcounts be incremented/decremented symmetrically per
-        manifest commit/delete.
+        manifest commit/delete.  Every ref of a shard set counts — each
+        shard object (and its delta base) must outlive this manifest.
         """
         counts: Counter = Counter()
         for kinds in self.entries.values():
-            for ref in kinds.values():
-                if ref.digest:
-                    counts[ref.digest] += 1
-                if ref.delta_base:
-                    counts[ref.delta_base] += 1
+            for entry in kinds.values():
+                for ref in entry_refs(entry):
+                    if ref.digest:
+                        counts[ref.digest] += 1
+                    if ref.delta_base:
+                        counts[ref.delta_base] += 1
         return counts
 
     def staleness(self) -> Dict[str, int]:
         """Per unit: how many steps behind the manifest step its chunk is."""
-        return {u: self.step - max(r.step for r in kinds.values())
+        return {u: self.step - max(r.step
+                                   for e in kinds.values()
+                                   for r in entry_refs(e))
                 for u, kinds in self.entries.items()}
 
 

@@ -114,13 +114,20 @@ class TopKDeltaPolicy(CheckpointPolicy):
         super().__init__(units)
         self.frac = frac
         self._fallback = ParityPolicy(units)
+        self._block_order = {b: i for i, b in enumerate(self.blocks)}
 
     def select(self, ctx: PolicyContext) -> List[str]:
         if not ctx.drift_scores:
             return self._fallback.select(ctx)
         k = max(1, int(len(self.blocks) * self.frac))
+        # Ties break on registry block order, pinned EXPLICITLY in the
+        # sort key: the selection must be reproducible across runs (and
+        # across participants of one sharded save event, whose policy
+        # decisions must agree for the commit barrier) regardless of the
+        # iteration order the caller built drift_scores in.
         ranked = sorted(self.blocks,
-                        key=lambda b: -ctx.drift_scores.get(b, 0.0))
+                        key=lambda b: (-ctx.drift_scores.get(b, 0.0),
+                                       self._block_order[b]))
         return ranked[:k] + list(self.aux)
 
 

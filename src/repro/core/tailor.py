@@ -35,10 +35,10 @@ import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.checkpoint.chunk_store import ChunkRef, ChunkStore
-from repro.core.manifest import Manifest, ManifestStore
+from repro.core.manifest import Manifest, ManifestStore, entry_refs, is_sharded
 from repro.core.recipe import CheckpointRef, Recipe
 
 
@@ -120,38 +120,53 @@ def merge(recipe: Recipe, *, workers: int = 4, verify: bool = True,
         finally:
             done.set()
 
-    def copy_unit(unit: str) -> List[Tuple[str, str, ChunkRef, int]]:
+    def copy_unit(unit: str) -> List[Tuple]:
+        """Copy every object behind one unit — for a sharded entry that
+        is the unit's WHOLE shard set, copied before the entry is
+        emitted, so the output manifest never references a partially
+        copied shard topology (atomic per unit)."""
         src_manifest, src_store = sources[str(assignment[unit])]
         if unit not in src_manifest.entries:
             raise MergeError(f"unit {unit!r} missing from "
                              f"{assignment[unit]}")
-        out_refs = []
+        out_entries = []
         for kind in kinds:
-            ref = src_manifest.entries[unit][kind]
-            if not ref.digest:
-                raise MergeError(
-                    f"unit {unit!r} in {assignment[unit]} is a legacy "
-                    "(pre-content-addressing) chunk; re-save it first")
-            written = copy_object(src_store, ref.digest)
-            if verify:
-                # full round-trip through the output store: crc per tensor
-                # plus canonical-digest check (covers delta reconstruction)
-                out_store.read_digest(ref.digest, verify=True)
-            out_refs.append((unit, kind, ChunkRef(
-                out_step, unit, kind, out_store.object_relpath(ref.digest),
-                ref.nbytes, digest=ref.digest, stored=ref.stored,
-                delta_base=ref.delta_base), written))
-        return out_refs
+            entry = src_manifest.entries[unit][kind]
+            written = 0
+            shared = 0
+            out_refs = []
+            for ref in entry_refs(entry):
+                if not ref.digest:
+                    raise MergeError(
+                        f"unit {unit!r} in {assignment[unit]} is a legacy "
+                        "(pre-content-addressing) chunk; re-save it first")
+                w = copy_object(src_store, ref.digest)
+                written += w
+                shared += 0 if w else 1
+                if verify:
+                    # full round-trip through the output store: crc per
+                    # tensor plus canonical-digest check (covers delta
+                    # reconstruction)
+                    out_store.read_digest(ref.digest, verify=True)
+                out_refs.append(ChunkRef(
+                    out_step, unit, kind,
+                    out_store.object_relpath(ref.digest),
+                    ref.nbytes, digest=ref.digest, stored=ref.stored,
+                    delta_base=ref.delta_base, spec=ref.spec))
+            out_entry = (tuple(out_refs) if is_sharded(entry)
+                         else out_refs[0])
+            out_entries.append((unit, kind, out_entry, written, shared,
+                                len(out_refs)))
+        return out_entries
 
-    entries: Dict[str, Dict[str, ChunkRef]] = {}
+    entries: Dict[str, Dict[str, Any]] = {}
     with ThreadPoolExecutor(max_workers=workers) as pool:
         for refs in pool.map(copy_unit, all_units):
-            for unit, kind, ref, written in refs:
-                entries.setdefault(unit, {})[kind] = ref
+            for unit, kind, entry, written, shared, n_objects in refs:
+                entries.setdefault(unit, {})[kind] = entry
                 stats["bytes"] += written
-                stats["chunks"] += 1
-                if not written:
-                    stats["shared_chunks"] += 1
+                stats["chunks"] += n_objects
+                stats["shared_chunks"] += shared
 
     # Manifest-commit barrier: every copied object must be durable on the
     # output backend before the manifest referencing it exists (no-op for

@@ -111,13 +111,31 @@ def block_fingerprint(x: jax.Array, *,
                         impl=_impl(interpret))
 
 
+def _device_groups(arrs) -> List[List[int]]:
+    """Indices grouped by the arrays' committed device sets: one jit
+    dispatch per co-located group.  A shard-native save hands a
+    participant leaves resident on DIFFERENT devices (each block is one
+    device's addressable shard) — jitting them together is an error, so
+    mixed-device trees dispatch per group (still a single dispatch for
+    the ordinary co-located unit)."""
+    groups: dict = {}
+    for i, a in enumerate(arrs):
+        try:
+            key = frozenset(d.id for d in a.devices())
+        except Exception:  # noqa: BLE001 - non-committed / non-jax arrays
+            key = None
+        groups.setdefault(key, []).append(i)
+    return list(groups.values())
+
+
 def fingerprint_tree(tree, *, block_bytes: int = DEFAULT_BLOCK_BYTES,
                      interpret: Optional[bool] = None) -> List[LeafFP]:
     """Device fingerprint vectors for every leaf, in canonical (sorted
     path) order — the same order ``serial.flatten_with_paths`` serializes,
     so host tables and device vectors line up index-for-index.  One jit
-    dispatch per tree; compilations are shared across units of the same
-    structure (every stacked block reuses one executable)."""
+    dispatch per co-located device group (one per tree in the common
+    case); compilations are shared across units of the same structure
+    (every stacked block reuses one executable)."""
     from repro.checkpoint.serial import flatten_with_paths
 
     flat = flatten_with_paths(tree)
@@ -125,8 +143,15 @@ def fingerprint_tree(tree, *, block_bytes: int = DEFAULT_BLOCK_BYTES,
     n_blocks = tuple(
         max(1, -(-a.size // _block_elems(a.dtype, block_bytes)))
         for a in arrs)
-    fps, sss = _fingerprint_many(arrs, block_bytes=block_bytes,
-                                 n_blocks=n_blocks, impl=_impl(interpret))
+    fps: List = [None] * len(arrs)
+    sss: List = [None] * len(arrs)
+    for idxs in _device_groups(arrs):
+        f, s = _fingerprint_many(tuple(arrs[i] for i in idxs),
+                                 block_bytes=block_bytes,
+                                 n_blocks=tuple(n_blocks[i] for i in idxs),
+                                 impl=_impl(interpret))
+        for i, fp, ss in zip(idxs, f, s):
+            fps[i], sss[i] = fp, ss
     return [LeafFP(path=path, shape=tuple(a.shape), dtype=str(a.dtype),
                    nbytes=a.size * a.dtype.itemsize,
                    block_bytes=block_bytes, fp=fp, sumsq=ss)
@@ -135,15 +160,21 @@ def fingerprint_tree(tree, *, block_bytes: int = DEFAULT_BLOCK_BYTES,
 
 def leaves_match(cur: Sequence[LeafFP], ref: Sequence[LeafFP]) -> bool:
     """True iff every leaf's checksum vector is identical (device compare;
-    only the result bit crosses to host).  ``ref`` may hold device or host
+    only the result bits cross to host).  ``ref`` may hold device or host
     (numpy) fingerprints — e.g. a table reloaded from an object envelope
-    after a restart."""
+    after a restart.  Mixed-device ``cur`` vectors (sharded saves)
+    compare per co-located group."""
     if len(cur) != len(ref):
         return False
     if not all(c.meta_matches(r) for c, r in zip(cur, ref)):
         return False
-    return bool(_all_fp_equal(tuple(c.fp for c in cur),
-                              tuple(jnp.asarray(r.fp) for r in ref)))
+    cur_fps = [c.fp for c in cur]
+    for idxs in _device_groups(cur_fps):
+        if not bool(_all_fp_equal(
+                tuple(cur_fps[i] for i in idxs),
+                tuple(jnp.asarray(ref[i].fp) for i in idxs))):
+            return False
+    return True
 
 
 @functools.partial(jax.jit, static_argnames=("block_bytes",))

@@ -34,14 +34,25 @@ def restore_on_mesh(ckpt_root: str | Path, model: BaseLM, mesh: Mesh,
                     parts: Tuple[str, ...] = PARTS_ALL,
                     units: Optional[Sequence[str]] = None,
                     pipelined: bool = True,
-                    store_backend: str = "local") -> Dict[str, PyTree]:
+                    store_backend: str = "local",
+                    participant: Optional[Tuple[int, int]] = None
+                    ) -> Dict[str, PyTree]:
     """Restore a checkpoint sharded onto ``mesh``; thin wrapper over
     ``CheckpointManager.restore`` (``parts``/``units``/``pipelined``
     pass straight through to the restore engine).  ``store_backend``
     selects the IO tier stack — a restarted process reads the durable
     ``objects/`` tree either way (RAM tiers start empty), but "tiered"
     promotes every read object into the hot tier for subsequent
-    restores in this process."""
+    restores in this process.
+
+    ``participant=(pid, n)`` makes this call one restore participant of
+    ``n``: against a *sharded* checkpoint (see docs/storage.md) the plan
+    schedules only the shard objects overlapping the slices owned by
+    this participant's cut of ``mesh`` — the save-on-MxN →
+    restore-on-PxQ resharding path that reads strictly fewer bytes than
+    a full-array restore whenever the shardings overlap partially.  The
+    returned state is only guaranteed correct on the participant's owned
+    slices (elsewhere zeros for sharded units)."""
     registry = LayerRegistry(model)
     mgr = CheckpointManager(Path(ckpt_root), registry,
                             make_policy("full", model.layer_units()),
@@ -50,7 +61,14 @@ def restore_on_mesh(ckpt_root: str | Path, model: BaseLM, mesh: Mesh,
     try:
         like = steps_lib.state_specs(model)
         shardings = steps_lib.state_shardings(model, mesh)
+        owned = None
+        if participant is not None:
+            from repro.checkpoint.sharded import participant_wanted
+            pid, nparts = participant
+            owned = participant_wanted(registry, pid, nparts,
+                                       shardings=shardings)
         return mgr.restore(like, step=step, shardings=shardings,
-                           parts=parts, units=units, pipelined=pipelined)
+                           parts=parts, units=units, pipelined=pipelined,
+                           owned=owned)
     finally:
         mgr.close()

@@ -27,6 +27,7 @@ from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import TrainConfig
 from repro.core import DeltaTracker, LayerRegistry, make_policy
 from repro.checkpoint.saver import CheckpointManager
+from repro.checkpoint.sharded import ShardedCheckpointer
 from repro.data.synthetic import SyntheticTokens
 from repro.launch import steps as steps_lib
 from repro.models import build_model
@@ -75,6 +76,7 @@ def train(
     spill_threads: int = 2,
     hot_budget_mb: Optional[int] = None,
     spill_barrier: bool = False,
+    shard_participants: int = 1,
     resume: bool = False,
     fail_at: Optional[int] = None,
     seed: int = 0,
@@ -97,6 +99,12 @@ def train(
                                               if hot_budget_mb else None),
                             spill_barrier=spill_barrier)
     tracker = DeltaTracker(registry) if policy_name == "topk_delta" else None
+    # Shard-native save path: N virtual participants (threads) each
+    # gather/fingerprint only their owned slices and the manifest commits
+    # through the two-phase barrier (docs/storage.md).  ``saver`` keeps
+    # the CheckpointManager.save signature either way.
+    saver = (ShardedCheckpointer(mgr, shard_participants)
+             if shard_participants > 1 else mgr)
 
     data = SyntheticTokens(vocab_size=cfg.vocab_size, batch=batch,
                            seq_len=seq_len, seed=seed)
@@ -136,7 +144,7 @@ def train(
         if (step + 1) % ckpt_interval == 0:
             t_save = time.time()
             scores = tracker.scores(state["params"]) if tracker else None
-            manifest = mgr.save(
+            manifest = saver.save(
                 state, step=step + 1,
                 meta={"data_state": data.state_dict(), "arch": arch,
                       "reduced": reduced, "tcfg": tcfg.model_dump()},
@@ -181,6 +189,8 @@ def train(
         "store_backend": store_backend,
         "spill_drain_seconds": spill_drain_seconds,
         "tier_stats": tier_stats,
+        # sharded-save accounting (1 = classic global-array save)
+        "shard_participants": shard_participants,
     }
 
 
@@ -213,6 +223,10 @@ def main() -> None:
     ap.add_argument("--spill-barrier", action="store_true",
                     help="tiered backend: wait for durable-tier spill "
                          "before each manifest commit")
+    ap.add_argument("--shard-participants", type=int, default=1,
+                    help="shard-native save: N virtual participants each "
+                         "persist only their owned slices; the manifest "
+                         "commits through the two-phase barrier")
     ap.add_argument("--sync-save", action="store_true")
     ap.add_argument("--no-fingerprint", action="store_true",
                     help="legacy full-gather save path (no device-side "
@@ -232,6 +246,7 @@ def main() -> None:
                 spill_threads=args.spill_threads,
                 hot_budget_mb=args.hot_budget_mb,
                 spill_barrier=args.spill_barrier,
+                shard_participants=args.shard_participants,
                 resume=args.resume, fail_at=args.fail_at,
                 seed=args.seed, log_csv=args.log_csv)
     out.pop("losses")
