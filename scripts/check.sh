@@ -35,6 +35,9 @@ if [ "${1:-}" = "smoke" ]; then
   echo "# sharded smoke (2 participants -> barrier commit -> restart ->"
   echo "#                resharded restore bit-exact, fewer bytes read)"
   python scripts/sharded_smoke.py
+  echo "# supervisor smoke (SIGKILL + SIGTERM drills -> elastic restart ->"
+  echo "#                   goodput report; writes BENCH_resiliency.json)"
+  python scripts/supervisor_smoke.py
   echo "# bench_ckpt_time --smoke (save+restore pipelines end to end)"
   python benchmarks/bench_ckpt_time.py --smoke
   exit 0

@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""Resiliency-supervisor smoke for the CI smoke tier (``check.sh smoke``).
+
+One short supervised run that exercises the whole failure loop
+(docs/resiliency.md):
+
+1. attempt 0 (2 shard participants) is SIGKILLed mid-run — a hard node
+   loss with no flushing,
+2. attempt 1 resumes from the last committed manifest and is SIGTERMed —
+   a preemption notice: the trainer commits an immediate full-capture
+   hot save and exits ``EXIT_PREEMPTED``,
+3. attempt 2 restarts on a SMALLER participant count (elastic restore)
+   and finishes the step budget.
+
+Asserts the accounting invariants: the kill loses at most one checkpoint
+cadence of steps, the preemption loses none, goodput lands in (0, 1],
+and every interruption has a closed MTTR window.  Writes the goodput
+report to ``BENCH_resiliency.json``.
+"""
+from __future__ import annotations
+
+import shutil
+import sys
+import tempfile
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SRC = ROOT / "src"
+for p in (str(SRC), str(ROOT)):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+STEPS, INTERVAL = 10, 5
+
+
+def main() -> int:
+    from benchmarks._util import write_bench_json
+    from repro.launch.supervisor import Injection, Supervisor, merged_losses
+
+    tmp = Path(tempfile.mkdtemp(prefix="supervisor_smoke_"))
+    try:
+        sup = Supervisor(
+            tmp / "ckpt", run_dir=tmp / "run",
+            arch="llama3.2-3b", steps=STEPS, interval=INTERVAL,
+            batch=2, seq_len=16, policy="full", seed=7,
+            participants=(2, 2, 1),
+            injections=[Injection("kill", at_step=6),
+                        Injection("sigterm", at_step=8)],
+            verify_restore=True)
+        report = sup.run()
+
+        assert report["completed"], report
+        assert report["n_interruptions"] == 2, report
+        kill, preempt = report["interruptions"]
+        assert kill["kind"] == "kill"
+        assert 0 <= kill["lost_steps"] <= INTERVAL, kill
+        assert preempt["kind"] == "sigterm" and preempt["preempted"], preempt
+        assert preempt["lost_steps"] == 0, preempt
+        for inter in (kill, preempt):
+            assert inter["mttr_seconds"] is not None, inter
+            assert not inter["restore_probe"]["fallback_units"], inter
+        assert report["goodput_steps"] is not None
+        assert 0 < report["goodput_steps"] <= 1.0, report
+        merged = merged_losses(tmp / "run")
+        assert merged and max(merged) == STEPS - 1, sorted(merged)
+
+        write_bench_json("resiliency", report)
+        print(f"supervisor_smoke: OK (kill lost {kill['lost_steps']} "
+              f"step(s) <= cadence {INTERVAL}, preemption lost 0, "
+              f"goodput_steps={report['goodput_steps']:.2f}, "
+              f"mttr_mean={report['mttr_seconds_mean']:.2f}s)")
+        return 0
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

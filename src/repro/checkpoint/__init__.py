@@ -41,12 +41,15 @@ from repro.checkpoint.async_io import (  # noqa: F401
     TransferPool,
 )
 from repro.checkpoint.backends import (  # noqa: F401
+    FaultInjectingBackend,
     LocalFSBackend,
     MemoryBackend,
     StorageBackend,
     TieredBackend,
     make_backend,
 )
+from repro.checkpoint.faults import InjectedCrash  # noqa: F401
+from repro.checkpoint import faults  # noqa: F401
 from repro.checkpoint.chunk_store import (  # noqa: F401
     ChunkRef,
     ChunkStore,

@@ -33,6 +33,8 @@ import queue
 import threading
 from typing import Callable, Dict, List, Optional
 
+from repro.checkpoint.faults import crash_point
+
 _SENTINEL = object()
 
 
@@ -114,6 +116,11 @@ class TransferPool:
                     return
                 lane, fn, args, kwargs, pending = item
                 try:
+                    # Fault-injection seam: ``pool:<lane>`` fires before
+                    # each task of that lane executes (a worker-thread
+                    # death; surfaces on the lane's drain like any other
+                    # transfer failure).  No-op unless armed.
+                    crash_point(f"pool:{lane}")
                     pending._value = fn(*args, **kwargs)
                 except BaseException as e:  # noqa: BLE001
                     pending._error = e

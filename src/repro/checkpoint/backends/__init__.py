@@ -26,6 +26,9 @@ from repro.checkpoint.backends.localfs import (  # noqa: F401
     LocalFSBackend,
     atomic_write,
 )
+from repro.checkpoint.backends.faulty import (  # noqa: F401
+    FaultInjectingBackend,
+)
 from repro.checkpoint.backends.memory import MemoryBackend  # noqa: F401
 from repro.checkpoint.backends.tiered import (  # noqa: F401
     SPILL_LANE,

@@ -1,0 +1,190 @@
+"""FaultInjectingBackend — a hostile IO tier for resiliency drills.
+
+Wraps any :class:`~repro.checkpoint.backends.base.StorageBackend` and
+misbehaves on cue: crash on the Nth write, raise IO errors, tear a write
+in half, or add per-op latency.  Tests compose it under a
+:class:`~repro.checkpoint.backends.tiered.TieredBackend` as the durable
+tier to prove the hot tier never drops an unspilled object and GC never
+collects under durable-tier failures (tests/test_backends.py), and the
+crash matrix (tests/test_resiliency.py) uses it where a *backend-level*
+failure — rather than a named pipeline crash point — is the drill.
+
+Fault knobs (all independent, all optional):
+
+- ``crash_on_write=N``     the Nth matching write calls the ``spill``-style
+                           action: ``crash_mode="raise"`` raises
+                           :class:`InjectedCrash` before the inner write,
+                           ``"exit"`` hard-kills the process (``os._exit``);
+- ``error_on_write=N|{N,...}|"all"``   raise ``write_error`` (default
+                           ``OSError``) on those 1-based write indices;
+- ``error_on_read=...``    same, for reads;
+- ``torn_on_write=N|{N,...}``  those writes pass only the first half of
+                           the payload to the inner backend, then raise —
+                           a torn write that an honest tier must detect
+                           (LocalFSBackend's tmp+rename protocol makes
+                           this impossible on POSIX, so tearing is
+                           simulated at this layer for tiers that trust
+                           ``has()``);
+- ``write_latency`` / ``read_latency``  seconds slept per matching op;
+- ``match=fn``             only keys with ``fn(key)`` true are counted /
+                           faulted; everything else passes through clean.
+
+Counters only advance on *matching* ops, so ``error_on_write=2`` with a
+``match`` predicate means "the 2nd write of a matching key".
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from pathlib import Path
+from typing import Callable, Dict, Iterator, Optional, Set, Union
+
+from repro.checkpoint.backends.base import StorageBackend
+from repro.checkpoint.faults import EXIT_CRASHED, InjectedCrash
+
+_Idx = Union[int, Set[int], frozenset, str, None]  # N | {N,...} | "all"
+
+
+def _due(spec: _Idx, n: int) -> bool:
+    if spec is None:
+        return False
+    if spec == "all":
+        return True
+    if isinstance(spec, int):
+        return n == spec
+    return n in spec
+
+
+class FaultInjectingBackend(StorageBackend):
+    """A StorageBackend decorator that injects failures on demand."""
+
+    name = "faulty"
+
+    def __init__(self, inner: StorageBackend, *,
+                 crash_on_write: Optional[int] = None,
+                 crash_mode: str = "raise",
+                 exit_code: int = EXIT_CRASHED,
+                 error_on_write: _Idx = None,
+                 write_error: Optional[Exception] = None,
+                 error_on_read: _Idx = None,
+                 read_error: Optional[Exception] = None,
+                 torn_on_write: _Idx = None,
+                 write_latency: float = 0.0,
+                 read_latency: float = 0.0,
+                 match: Optional[Callable[[str], bool]] = None) -> None:
+        if crash_mode not in ("raise", "exit"):
+            raise ValueError(f"unknown crash_mode {crash_mode!r}")
+        self.inner = inner
+        self.crash_on_write = crash_on_write
+        self.crash_mode = crash_mode
+        self.exit_code = exit_code
+        self.error_on_write = error_on_write
+        self.write_error = write_error or OSError("injected write error")
+        self.error_on_read = error_on_read
+        self.read_error = read_error or OSError("injected read error")
+        self.torn_on_write = torn_on_write
+        self.write_latency = write_latency
+        self.read_latency = read_latency
+        self.match = match
+        self.writes = 0          # matching writes attempted (1-based count)
+        self.reads = 0
+        self.faults = 0          # faults actually fired
+        self._lock = threading.Lock()
+
+    # ---- knob management (tests flip faults mid-scenario) ----
+    def heal(self) -> None:
+        """Drop every fault knob; subsequent ops pass straight through
+        (counters keep advancing so indices stay meaningful)."""
+        self.crash_on_write = None
+        self.error_on_write = None
+        self.error_on_read = None
+        self.torn_on_write = None
+        self.write_latency = 0.0
+        self.read_latency = 0.0
+
+    def _matches(self, key: str) -> bool:
+        return self.match is None or self.match(key)
+
+    # ---- byte IO ----
+    def write(self, key: str, data: bytes) -> int:
+        if not self._matches(key):
+            return self.inner.write(key, data)
+        with self._lock:
+            self.writes += 1
+            n = self.writes
+            crash = (self.crash_on_write is not None
+                     and n == self.crash_on_write)
+            err = _due(self.error_on_write, n)
+            torn = _due(self.torn_on_write, n)
+            if crash or err or torn:
+                self.faults += 1
+        if self.write_latency:
+            time.sleep(self.write_latency)
+        if crash:
+            if self.crash_mode == "exit":
+                os._exit(self.exit_code)
+            raise InjectedCrash(
+                f"injected crash on write #{n} of {key!r}")
+        if torn:
+            # Half the payload reaches the inner tier, then the writer
+            # "dies".  The torn object IS visible to the inner tier's
+            # has()/read() — that's the point of the drill.
+            self.inner.write(key, data[: max(1, len(data) // 2)])
+            raise self.write_error
+        if err:
+            raise self.write_error
+        return self.inner.write(key, data)
+
+    def read(self, key: str) -> bytes:
+        if self._matches(key):
+            with self._lock:
+                self.reads += 1
+                n = self.reads
+                err = _due(self.error_on_read, n)
+                if err:
+                    self.faults += 1
+            if self.read_latency:
+                time.sleep(self.read_latency)
+            if err:
+                raise self.read_error
+        return self.inner.read(key)
+
+    def has(self, key: str) -> bool:
+        return self.inner.has(key)
+
+    def size(self, key: str) -> int:
+        return self.inner.size(key)
+
+    def delete(self, key: str) -> int:
+        return self.inner.delete(key)
+
+    def keys(self) -> Iterator[str]:
+        return self.inner.keys()
+
+    # ---- maintenance / introspection: pure passthrough ----
+    def sweep_tmp(self) -> int:
+        return self.inner.sweep_tmp()
+
+    def close(self) -> None:
+        self.inner.close()
+
+    def locate(self, key: str) -> Optional[str]:
+        return self.inner.locate(key)
+
+    def durable_tier(self) -> str:
+        return self.inner.durable_tier()
+
+    def drain(self) -> None:
+        self.inner.drain()
+
+    def pending_spill(self) -> int:
+        return self.inner.pending_spill()
+
+    def tier_stats(self) -> Dict[str, int]:
+        stats = dict(self.inner.tier_stats())
+        stats["injected_faults"] = self.faults
+        return stats
+
+    def path_of(self, key: str) -> Optional[Path]:
+        return self.inner.path_of(key)

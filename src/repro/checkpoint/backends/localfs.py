@@ -89,10 +89,20 @@ class LocalFSBackend(StorageBackend):
 
     # ---- maintenance ----
     def sweep_tmp(self) -> int:
-        """Crash-leftover ``*.tmp-*`` files from ``atomic_write``."""
+        """Crash-leftover ``*.tmp-*`` files from ``atomic_write``.
+
+        Only files from OTHER processes are swept: ``atomic_write``
+        embeds the writer's pid in the tmp name, and a tmp file carrying
+        our own pid may be a live in-flight write on another thread
+        (e.g. a spill-lane ``atomic_write`` racing the post-commit GC's
+        sweep) — unlinking it between the write and the ``os.replace``
+        would fail that writer and strand its durability debt."""
         freed = 0
+        own = f"{os.getpid():x}-"
         if self.root.is_dir():
             for tmp in self.root.glob("*/*.tmp-*"):
+                if tmp.name.rsplit(".tmp-", 1)[-1].startswith(own):
+                    continue
                 try:
                     freed += tmp.stat().st_size
                     tmp.unlink()

@@ -34,6 +34,7 @@ from typing import Dict, Iterator, Optional
 
 from repro.checkpoint.async_io import AsyncWriteError, TransferPool
 from repro.checkpoint.backends.base import StorageBackend
+from repro.checkpoint.faults import crash_point
 from repro.checkpoint.backends.memory import MemoryBackend
 
 log = logging.getLogger("repro.checkpoint.backends")
@@ -90,6 +91,22 @@ class TieredBackend(StorageBackend):
                 self._inflight.discard(key)
             raise
 
+    def _durable_holds(self, key: str, nbytes: int) -> bool:
+        """Whether the durable tier already holds a FULL copy of ``key``.
+
+        ``has()`` alone is not enough: a durable tier without an atomic
+        write protocol (or with injected torn writes) can expose a
+        truncated copy, and trusting it would mark the object "spilled"
+        → evictable → silent data loss.  Content addressing makes equal
+        keys carry equal bytes, so a length check suffices to reject a
+        truncated copy; a short one is simply rewritten."""
+        if not self.durable.has(key):
+            return False
+        try:
+            return self.durable.size(key) == nbytes
+        except FileNotFoundError:
+            return False
+
     def _spill_one(self, key: str) -> None:
         try:
             try:
@@ -98,7 +115,8 @@ class TieredBackend(StorageBackend):
                 # GC (or an eviction after an earlier duplicate spill)
                 # removed the object before this task ran — nothing owed.
                 return
-            if not self.durable.has(key):
+            crash_point("spill")
+            if not self._durable_holds(key, len(blob)):
                 self.durable.write(key, blob)
             with self._lock:
                 if self._resident.get(key) == "dirty":
@@ -168,7 +186,8 @@ class TieredBackend(StorageBackend):
             self._stats["hot_writes"] += 1
             already = self._resident.get(key)
             self._resident[key] = ("spilled" if already == "spilled"
-                                   or self.durable.has(key) else "dirty")
+                                   or self._durable_holds(key, len(data))
+                                   else "dirty")
             dirty = self._resident[key] == "dirty"
         if dirty:
             self._enqueue_spill(key)

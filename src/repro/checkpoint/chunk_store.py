@@ -70,7 +70,7 @@ from typing import Any, Dict, Iterable, Iterator, Optional, Tuple
 
 import msgpack
 
-from repro.checkpoint import compression, serial
+from repro.checkpoint import compression, faults, serial
 from repro.checkpoint import fingerprint as fputil
 from repro.checkpoint.backends import StorageBackend, make_backend
 # Back-compat alias: the manifest store and several tests import the
@@ -377,6 +377,7 @@ class ChunkStore:
 
     def _write_object(self, digest: str, env: Dict[str, Any]) -> int:
         blob = msgpack.packb(env, use_bin_type=True)
+        faults.crash_point("object_write")
         self.backend.write(digest, blob)
         with self._lock:
             self._info[digest] = {"stored": env["format"],

@@ -54,12 +54,13 @@ import logging
 import time
 from collections import Counter
 from pathlib import Path
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import faults
 from repro.checkpoint import fingerprint as fputil
 from repro.checkpoint.async_io import AsyncWriter, PendingResult, TransferPool
 from repro.checkpoint.backends import StorageBackend, make_backend
@@ -215,7 +216,19 @@ class CheckpointManager:
     # ------------------------------------------------------------------ save
     def save(self, state: Dict[str, PyTree], *, step: Optional[int] = None,
              meta: Optional[Dict] = None,
-             drift_scores: Optional[Dict[str, float]] = None) -> Manifest:
+             drift_scores: Optional[Dict[str, float]] = None,
+             units: Optional[Sequence[str]] = None,
+             durability_barrier: Optional[bool] = None) -> Manifest:
+        """Persist one checkpoint event and commit its manifest.
+
+        ``units`` overrides the policy's selection for this event (the
+        supervisor's preemption save captures every unit regardless of
+        policy — cheap under fingerprint dedup since unchanged units
+        resolve without payload movement).  ``durability_barrier``
+        overrides ``self.spill_barrier`` for this event: False commits as
+        soon as objects are on the fast tier — the preemption hot save —
+        and True waits the spill lane down first.
+        """
         t0 = time.time()
         step = int(state["step"]) if step is None else int(step)
         ctx = PolicyContext(event_index=self._event_index, step=step,
@@ -227,6 +240,8 @@ class CheckpointManager:
             # The very first event is always a full save: every later
             # manifest must be able to reference a complete base.
             selected = self.policy.all_units()
+        elif units is not None:
+            selected = list(dict.fromkeys(units))
         else:
             selected = list(dict.fromkeys(self.policy.select(ctx)))
         entries: Dict[str, Dict[str, ChunkRef]] = (
@@ -264,6 +279,7 @@ class CheckpointManager:
                 pref = prev_entry(name, kind)
                 if not self.fingerprint:
                     host = jax.device_get(tree)
+                    faults.crash_point("gather")
                     d2h_bytes += sum(np.asarray(x).nbytes
                                      for x in jax.tree.leaves(host))
                     if self.writer is not None:
@@ -293,7 +309,9 @@ class CheckpointManager:
             self.writer.drain()
             for (name, kind), p in pending.items():
                 entries.setdefault(name, {})[kind] = p.result()
-        if self.spill_barrier:
+        barrier = (self.spill_barrier if durability_barrier is None
+                   else durability_barrier)
+        if barrier:
             self.store.drain_spill()
         # The durability record is part of the commit: a reader of this
         # manifest knows which tier the event's objects were durable on
@@ -355,6 +373,7 @@ class CheckpointManager:
         counted as payload."""
         bb = self.fp_block_bytes
         cur = bfp.fingerprint_tree(tree, block_bytes=bb)
+        faults.crash_point("fingerprint")
         nb_total = sum(l.n_blocks for l in cur)
         logical = sum(l.nbytes for l in cur)
         stats = {"d2h_bytes": 0, "blocks_moved": 0, "blocks_total": nb_total}
@@ -451,6 +470,9 @@ class CheckpointManager:
             packet = fputil.FingerprintPacket(
                 digest=digest, table=tblob, leaves=leaves, full=True,
                 base_digest=None, logical_bytes=logical)
+        # The unit's payload has fully crossed device->host; nothing has
+        # been written yet — the canonical "died after gather" drill.
+        faults.crash_point("gather")
         if self.writer is not None:
             return (self.writer.submit(self.store.write_fp, step, name,
                                        kind, packet, prev_ref=pref),

@@ -56,6 +56,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro.checkpoint import faults
 from repro.checkpoint.async_io import PendingResult
 from repro.checkpoint.backends.localfs import atomic_write
 from repro.checkpoint.chunk_store import ChunkRef
@@ -402,7 +403,9 @@ class ShardedSaver:
                     step: Optional[int] = None,
                     meta: Optional[Dict] = None,
                     drift_scores: Optional[Dict[str, float]] = None,
-                    prev: Any = _LOAD_PREV) -> ParticipantResult:
+                    prev: Any = _LOAD_PREV,
+                    units: Optional[Sequence[str]] = None,
+                    durability_barrier: bool = True) -> ParticipantResult:
         """Write this participant's shard objects for one save event and
         publish its completion record.  Returns only after every owned
         object is durable on the store's durable tier (writer drained +
@@ -412,7 +415,14 @@ class ShardedSaver:
         ``prev`` lets a single-process orchestrator
         (:class:`ShardedCheckpointer`) load + parse the newest manifest
         once and share it, instead of N parses per event; omitted, the
-        participant loads it itself (the multi-process mode)."""
+        participant loads it itself (the multi-process mode).
+
+        ``units`` overrides the policy selection (every participant of
+        one event must pass the SAME list — the barrier checks
+        agreement); ``durability_barrier=False`` skips the pre-publish
+        spill drain, publishing as soon as objects are on the fast tier —
+        the supervisor's preemption hot save (the manifest then records
+        ``durable_on="hot"``; see docs/resiliency.md)."""
         mgr = self.mgr
         t0 = time.time()
         step = int(state["step"]) if step is None else int(step)
@@ -432,6 +442,8 @@ class ShardedSaver:
                             drift_scores=drift_scores)
         if prev is None:
             selected = mgr.policy.all_units()
+        elif units is not None:
+            selected = list(dict.fromkeys(units))
         else:
             selected = list(dict.fromkeys(mgr.policy.select(ctx)))
 
@@ -479,8 +491,11 @@ class ShardedSaver:
         for key, p in pending.items():
             refs[key] = p.result()
         # Durability before publish: the record is the participant's
-        # claim that its whole shard set survives a process loss.
-        mgr.store.drain_spill()
+        # claim that its whole shard set survives a process loss.  The
+        # preemption hot save waives it — objects on the fast tier are
+        # enough to commit against in the seconds before SIGKILL.
+        if durability_barrier:
+            mgr.store.drain_spill()
 
         # Attach the spec and restore the clean unit name (the
         # per-participant store key is an internal delta-run namespace).
@@ -504,6 +519,7 @@ class ShardedSaver:
             "storage": mgr.store.durability(),
             "complete": True,
         }
+        faults.crash_point("participant_record")
         path = _record_path(mgr.root, step, self.participant_id)
         path.parent.mkdir(parents=True, exist_ok=True)
         atomic_write(path, jsonutil.dumps(record, indent=True))
@@ -674,6 +690,10 @@ class ShardCoordinator:
                 entries[unit] = dict(entries.get(unit, {}))
                 entries[unit][kind] = tuple(refs)
 
+        # Every record validated, every object durable: the point of no
+        # return is next (the manifest write itself has its own
+        # manifest_commit/manifest_latest points inside).
+        faults.crash_point("barrier")
         event_index = int(first["event_index"])
         storage = mgr.store.durability()
         manifest = Manifest(
@@ -732,7 +752,9 @@ class ShardedCheckpointer:
 
     def save(self, state: Dict[str, PyTree], *, step: Optional[int] = None,
              meta: Optional[Dict] = None,
-             drift_scores: Optional[Dict[str, float]] = None) -> Manifest:
+             drift_scores: Optional[Dict[str, float]] = None,
+             units: Optional[Sequence[str]] = None,
+             durability_barrier: Optional[bool] = None) -> Manifest:
         t0 = time.time()
         step = int(state["step"]) if step is None else int(step)
         self.mgr.store.reset_stats()
@@ -740,10 +762,14 @@ class ShardedCheckpointer:
         # participant (they must agree on it anyway — the barrier checks
         # the derived event_index).
         prev = self.mgr.manifests.load()
+        barrier = (True if durability_barrier is None
+                   else durability_barrier)
 
         def run(saver: ShardedSaver) -> ParticipantResult:
             return saver.save_shards(state, step=step, meta=meta,
-                                     drift_scores=drift_scores, prev=prev)
+                                     drift_scores=drift_scores, prev=prev,
+                                     units=units,
+                                     durability_barrier=barrier)
 
         if self.parallel and self.n_participants > 1:
             with ThreadPoolExecutor(

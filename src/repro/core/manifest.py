@@ -24,6 +24,7 @@ from typing import Tuple, Union
 
 from repro.checkpoint.backends.localfs import atomic_write as _atomic_write
 from repro.checkpoint.chunk_store import ChunkRef
+from repro.checkpoint.faults import crash_point
 from repro.core import jsonutil
 
 # A manifest entry for one (unit, kind) is either a single global-array
@@ -121,7 +122,13 @@ class ManifestStore:
         return self.root / "manifests" / f"manifest-{step:08d}.json"
 
     def commit(self, manifest: Manifest) -> None:
+        # Crash drills for the two interesting deaths of the manifest-last
+        # protocol: before anything is published, and the torn commit —
+        # manifest file on disk but LATEST still pointing at the previous
+        # step (which must stay authoritative).
+        crash_point("manifest_commit")
         _atomic_write(self.path(manifest.step), manifest.to_json())
+        crash_point("manifest_latest")
         _atomic_write(self.root / "LATEST",
                       str(manifest.step).encode())
 

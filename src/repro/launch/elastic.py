@@ -72,3 +72,46 @@ def restore_on_mesh(ckpt_root: str | Path, model: BaseLM, mesh: Mesh,
                            owned=owned)
     finally:
         mgr.close()
+
+
+def probe_restore(ckpt_root: str | Path, arch: str, *,
+                  reduced: bool = True,
+                  parts: Tuple[str, ...] = ("params",),
+                  store_backend: str = "local") -> Dict[str, Any]:
+    """Restorability check without a training process: rebuild the model
+    from its arch id, restore ``parts`` onto a fresh single-host mesh,
+    and report what the plan had to do.  The supervisor runs this between
+    a death and the relaunch (the cost lands inside MTTR) so a checkpoint
+    a restarted trainer would choke on is caught *before* the restart
+    burns a JIT warmup — and the returned ``fallback_units`` exposes
+    units that had to fall back to an older manifest (e.g. a hot-only
+    preemption commit whose spill never finished)."""
+    import time
+
+    from repro.configs import get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import build_model
+
+    t0 = time.time()
+    cfg = get_config(arch, reduced=reduced)
+    model = build_model(cfg)
+    mesh = make_host_mesh()
+    registry = LayerRegistry(model)
+    mgr = CheckpointManager(Path(ckpt_root), registry,
+                            make_policy("full", model.layer_units()),
+                            async_save=False, store_backend=store_backend)
+    try:
+        like = steps_lib.state_specs(model)
+        shardings = steps_lib.state_shardings(model, mesh)
+        state = mgr.restore(like, shardings=shardings, parts=parts)
+        stats = dict(mgr.last_restore_stats)
+        return {
+            "step": int(state["step"]) if "step" in state
+            else mgr.manifests.latest_step(),
+            "parts": list(parts),
+            "bytes_read": stats.get("bytes_read"),
+            "fallback_units": stats.get("fallback_units", []),
+            "seconds": time.time() - t0,
+        }
+    finally:
+        mgr.close()

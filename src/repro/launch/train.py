@@ -6,7 +6,19 @@
 Fault-tolerance surface exercised here:
 - selective checkpoints every ``ckpt_interval`` steps (policy-driven),
 - async write overlap (training continues while chunks land),
-- ``--fail-at N`` raises a simulated failure mid-run,
+- ``--fail-at N`` raises a simulated failure at a step boundary;
+  ``--fail-at N@point`` arms a named crash point (see
+  repro.checkpoint.faults) at step N so the death happens *mid-save*
+  inside that pipeline stage (``--fail-mode exit`` hard-kills instead of
+  raising — the supervisor's crash drills),
+- ``--handle-sigterm`` turns SIGTERM into a preemption: an immediate
+  full-capture hot save (durability barrier waived), then the spill
+  backlog drains during the grace period and the process exits with
+  code ``EXIT_PREEMPTED`` — no committed work is lost and no queued
+  write is abandoned (docs/resiliency.md),
+- ``--progress-file`` appends machine-readable progress lines
+  (``start/step/ckpt/preempt/done,<n>,<unix-time>``) the supervisor
+  tails to time interruptions and compute goodput,
 - ``--resume`` restores the implicit Frankenstein merge and continues with
   byte-identical data (the data state rides in the manifest meta),
 - loss log written as CSV for trajectory-overlay comparisons (Table 1/4).
@@ -16,9 +28,12 @@ from __future__ import annotations
 import argparse
 import json
 import logging
+import signal
+import sys
+import threading
 import time
 from pathlib import Path
-from typing import Dict, Optional
+from typing import Dict, Optional, Union
 
 import jax
 import numpy as np
@@ -26,6 +41,7 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import TrainConfig
 from repro.core import DeltaTracker, LayerRegistry, make_policy
+from repro.checkpoint import faults
 from repro.checkpoint.saver import CheckpointManager
 from repro.checkpoint.sharded import ShardedCheckpointer
 from repro.data.synthetic import SyntheticTokens
@@ -34,9 +50,33 @@ from repro.models import build_model
 
 log = logging.getLogger("repro.train")
 
+#: Exit code of a clean preemption (SIGTERM handled, hot save committed):
+#: the supervisor restarts the run but does not count it as a crash.
+EXIT_PREEMPTED = 17
+
 
 class SimulatedFailure(RuntimeError):
     pass
+
+
+class _Progress:
+    """Append-only machine-readable progress feed for the supervisor:
+    one ``kind,step,unix-time`` line per event, flushed per line (the
+    reader is another process and the writer may die at any moment)."""
+
+    def __init__(self, path: Optional[str]):
+        self._f = None
+        if path:
+            Path(path).parent.mkdir(parents=True, exist_ok=True)
+            self._f = open(path, "a", buffering=1)
+
+    def emit(self, kind: str, step: int) -> None:
+        if self._f is not None:
+            self._f.write(f"{kind},{step},{time.time():.6f}\n")
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
 
 
 def make_batch_fn(model, data: SyntheticTokens):
@@ -78,11 +118,17 @@ def train(
     spill_barrier: bool = False,
     shard_participants: int = 1,
     resume: bool = False,
-    fail_at: Optional[int] = None,
+    fail_at: Optional[Union[int, str]] = None,
+    fail_mode: str = "raise",
+    handle_sigterm: bool = False,
+    progress_file: Optional[str] = None,
     seed: int = 0,
     log_csv: Optional[str] = None,
     lr: float = 1e-3,
 ) -> Dict:
+    fail_step, fail_point, fail_hit = (None, None, 1)
+    if fail_at is not None:
+        fail_step, fail_point, fail_hit = faults.parse_fail_at(fail_at)
     cfg = get_config(arch, reduced=reduced)
     model = build_model(cfg)
     tcfg = TrainConfig(learning_rate=lr, warmup_steps=20,
@@ -112,6 +158,24 @@ def train(
     train_step = jax.jit(steps_lib.make_train_step(model, tcfg),
                          donate_argnums=0)
 
+    # Preemption: SIGTERM only sets a flag — the save happens on the
+    # training thread at the next step boundary, where the state is
+    # consistent (mid-train_step state is donated/partial).
+    preempt_flag = threading.Event()
+    if handle_sigterm:
+        def _on_sigterm(signum, frame):  # noqa: ARG001
+            preempt_flag.set()
+        try:
+            signal.signal(signal.SIGTERM, _on_sigterm)
+        except ValueError:
+            # Not the main thread (in-process test harness): the caller
+            # can still set the flag by sending SIGTERM to the process
+            # group or calling train with its own orchestration.
+            log.warning("cannot install SIGTERM handler off the main "
+                        "thread; preemption handling disabled")
+
+    progress = _Progress(progress_file)
+
     if resume:
         like = steps_lib.state_specs(model)
         state = mgr.restore(like)
@@ -132,31 +196,72 @@ def train(
     d2h_bytes = 0
     hashed_bytes = 0
     dirty_fracs = []
+    preempted_at: Optional[int] = None
+    progress.emit("start", start)
+
+    def event_meta():
+        return {"data_state": data.state_dict(), "arch": arch,
+                "reduced": reduced, "tcfg": tcfg.model_dump()}
+
     for step in range(start, total_steps):
         raw = data.peek(step)
         data.state.step = step + 1
         state, metrics = train_step(state, to_batch(raw))
         loss = float(metrics["loss"])
         losses.append((step, loss))
-        if fail_at is not None and step + 1 == fail_at:
-            mgr.close()
-            raise SimulatedFailure(f"injected failure at step {fail_at}")
+        progress.emit("step", step + 1)
+        if fail_step is not None and step + 1 == fail_step:
+            if fail_point is None:
+                mgr.close()
+                raise SimulatedFailure(
+                    f"injected failure at step {fail_step}")
+            # Arm the named pipeline crash point: the death happens
+            # inside the save machinery (possibly on a writer/spill
+            # thread, surfacing on a drain), not at this step boundary.
+            faults.arm(fail_point, hit=fail_hit, mode=fail_mode)
+            log.info("armed crash point %r (hit=%d mode=%s) at step %d",
+                     fail_point, fail_hit, fail_mode, fail_step)
+        if preempt_flag.is_set():
+            # Preemption save: capture EVERY unit (cheap — unchanged
+            # units dedup with zero payload movement) so resume is
+            # bit-exact regardless of policy, and skip the durable spill
+            # barrier so the manifest commits immediately; the grace
+            # period below is spent draining the spill backlog instead
+            # of gathering.
+            manifest = saver.save(state, step=step + 1, meta=event_meta(),
+                                  units=mgr.policy.all_units(),
+                                  durability_barrier=False)
+            preempted_at = step + 1
+            progress.emit("preempt", step + 1)
+            log.info("preempted: hot save committed at step %d "
+                     "(durable_on=%s)", step + 1,
+                     manifest.meta["storage"]["durable_on"])
+            break
         if (step + 1) % ckpt_interval == 0:
             t_save = time.time()
             scores = tracker.scores(state["params"]) if tracker else None
             manifest = saver.save(
-                state, step=step + 1,
-                meta={"data_state": data.state_dict(), "arch": arch,
-                      "reduced": reduced, "tcfg": tcfg.model_dump()},
+                state, step=step + 1, meta=event_meta(),
                 drift_scores=scores)
             if tracker:
                 tracker.mark_saved(state["params"], manifest.saved_units)
             save_seconds += time.time() - t_save
+            progress.emit("ckpt", step + 1)
             s = mgr.last_save_stats
             d2h_bytes += s.get("d2h_bytes", 0)
             hashed_bytes += s.get("hashed_bytes", 0)
             dirty_fracs.append(s.get("dirty_block_frac", 1.0))
     total = time.time() - t0
+
+    if fail_point is not None and fail_point in faults.pending():
+        # The armed point was never reached (e.g. a dedup hit skipped the
+        # stage, or the step had no checkpoint event): fail loudly — a
+        # crash drill that silently didn't drill is worse than a failure.
+        faults.disarm(fail_point)
+        mgr.close()
+        raise SimulatedFailure(
+            f"crash point {fail_point!r} armed at step {fail_step} was "
+            "never reached before the run ended")
 
     if log_csv:
         Path(log_csv).parent.mkdir(parents=True, exist_ok=True)
@@ -165,14 +270,23 @@ def train(
             for s, l in losses:
                 f.write(f"{s},{l}\n")
     # Spill-backlog drain: how far durability lagged the hot tier at the
-    # end of training (0.0 for single-tier backends).
+    # end of training (0.0 for single-tier backends).  After a preemption
+    # this is the grace period put to work: the hot-committed manifest
+    # becomes durable-tier-backed before the process exits — queued
+    # writes are drained, never abandoned.
     t_drain = time.time()
     mgr.drain_spill()
     spill_drain_seconds = time.time() - t_drain
     tier_stats = mgr.store.tier_stats()
     mgr.close()
     usage = mgr.disk_usage()
+    progress.emit("preempt_durable" if preempted_at is not None else "done",
+                  preempted_at if preempted_at is not None
+                  else total_steps)
+    progress.close()
     return {
+        "preempted": preempted_at is not None,
+        "preempted_at": preempted_at,
         "final_loss": losses[-1][1] if losses else float("nan"),
         "losses": losses,
         "train_seconds": total,
@@ -232,7 +346,23 @@ def main() -> None:
                     help="legacy full-gather save path (no device-side "
                          "block fingerprinting)")
     ap.add_argument("--resume", action="store_true")
-    ap.add_argument("--fail-at", type=int)
+    ap.add_argument("--fail-at",
+                    help="simulated failure: a bare step number N dies at "
+                         "that step boundary; N@<point> (e.g. 12@spill) "
+                         "arms the named crash point at step N so the "
+                         "death happens mid-save inside that pipeline "
+                         "stage; N@<point>:K fires on the Kth hit")
+    ap.add_argument("--fail-mode", default="raise",
+                    choices=["raise", "exit"],
+                    help="armed crash points raise InjectedCrash (clean "
+                         "traceback) or os._exit (hard kill, no cleanup)")
+    ap.add_argument("--handle-sigterm", action="store_true",
+                    help="treat SIGTERM as a preemption: immediate "
+                         "full-capture hot save, drain queued/spilling "
+                         "writes, exit with code %d" % EXIT_PREEMPTED)
+    ap.add_argument("--progress-file",
+                    help="append kind,step,time progress lines here (the "
+                         "supervisor's monitoring feed)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-csv")
     args = ap.parse_args()
@@ -248,9 +378,14 @@ def main() -> None:
                 spill_barrier=args.spill_barrier,
                 shard_participants=args.shard_participants,
                 resume=args.resume, fail_at=args.fail_at,
+                fail_mode=args.fail_mode,
+                handle_sigterm=args.handle_sigterm,
+                progress_file=args.progress_file,
                 seed=args.seed, log_csv=args.log_csv)
     out.pop("losses")
     print(json.dumps(out, indent=2))
+    if out["preempted"]:
+        sys.exit(EXIT_PREEMPTED)
 
 
 if __name__ == "__main__":

@@ -12,6 +12,8 @@ from repro.checkpoint import (
     AsyncWriteError,
     AsyncWriter,
     ChunkStore,
+    FaultInjectingBackend,
+    InjectedCrash,
     LocalFSBackend,
     MemoryBackend,
     TieredBackend,
@@ -408,3 +410,117 @@ def test_merge_across_heterogeneous_backends(tmp_path, small_setup):
     mgr_a.close()
     mgr_b.close()
     mgr_out.close()
+
+
+# --------------------------------------------------------- fault injection
+def test_faulty_crash_on_nth_write_preserves_prior_objects(tmp_path):
+    """The Nth write dies before reaching the inner tier; everything
+    written before it stays intact and readable."""
+    fb = FaultInjectingBackend(LocalFSBackend(tmp_path / "objects"),
+                               crash_on_write=2)
+    store = ChunkStore(tmp_path, backend=fb)
+    r1 = store.write(1, "u0", "weights", _tree(1))
+    with pytest.raises(InjectedCrash):
+        store.write(1, "u1", "weights", _tree(2))
+    assert fb.faults == 1
+    out, _ = store.read_digest(r1.digest)
+    np.testing.assert_array_equal(out["w"], _tree(1)["w"])
+    # the crashed write left nothing behind, not even a torn object
+    assert sum(1 for _ in fb.keys()) == 1
+
+
+def test_faulty_torn_durable_write_detected_and_healed(tmp_path):
+    """A torn durable-tier copy (visible to has(), half the bytes) must
+    NOT satisfy the spill: the object stays dirty/hot, the durability
+    barrier refuses to pass, and once the tier heals the retry rewrites
+    the full bytes over the truncated copy."""
+    fb = FaultInjectingBackend(LocalFSBackend(tmp_path / "objects"),
+                               torn_on_write={1, 2})  # the retry tears too
+    backend = TieredBackend(MemoryBackend(), fb)
+    key, data = "deadbeef01", b"\xab" * 1024
+    backend.write(key, data)
+    with pytest.raises(AsyncWriteError):
+        backend.drain()
+    # The torn half-copy IS on the durable tree and has() sees it...
+    assert fb.has(key) and fb.size(key) == len(data) // 2
+    # ...but the tier never trusts it: still dirty, never evictable.
+    assert backend.pending_spill() == 1
+    assert backend.locate(key) == "hot"
+
+    fb.heal()
+    backend.drain()  # retry detects the short copy and rewrites in full
+    assert backend.pending_spill() == 0
+    assert fb.size(key) == len(data)
+    # a fresh durable-only reader gets the full bytes
+    assert LocalFSBackend(tmp_path / "objects").read(key) == data
+    backend.close()
+
+
+def test_faulty_durable_outage_never_drops_or_collects(tmp_path):
+    """With the durable tier hard-down, an unspilled object is pinned in
+    the hot tier (a 1-byte budget cannot evict it) and refcounted GC
+    cannot collect it; when the tier heals, the debt drains."""
+    fb = FaultInjectingBackend(LocalFSBackend(tmp_path / "objects"),
+                               error_on_write="all")
+    backend = TieredBackend(MemoryBackend(), fb, hot_budget_bytes=1)
+    store = ChunkStore(tmp_path, backend=backend)
+    ref = store.write(1, "u0", "weights", _tree(31))
+    store.incref([ref.digest])
+    with pytest.raises(AsyncWriteError):
+        store.drain_spill()
+    assert store.pending_spill() == 1
+    assert backend.locate(ref.digest) == "hot"
+    assert backend.tier_stats()["evictions"] == 0
+    assert store.gc_objects() == 0  # referenced + dirty: untouchable
+    out, _ = store.read_digest(ref.digest)
+    np.testing.assert_array_equal(out["w"], _tree(31)["w"])
+
+    fb.heal()
+    store.drain_spill()  # the retry clears the durability debt
+    assert store.pending_spill() == 0
+    assert LocalFSBackend(tmp_path / "objects").has(ref.digest)
+    store.close()
+
+
+def test_faulty_spill_latency_objects_stay_hot_until_durable(tmp_path):
+    """Injected durable-tier latency: the write returns immediately (hot
+    tier decouples save latency), the object shows as pending/hot while
+    the slow spill is in flight, and the drain barrier delivers it."""
+    fb = FaultInjectingBackend(LocalFSBackend(tmp_path / "objects"),
+                               write_latency=0.3)
+    backend = TieredBackend(MemoryBackend(), fb)
+    store = ChunkStore(tmp_path, backend=backend)
+    ref = store.write(1, "u0", "weights", _tree(41))
+    # the spill sleeps >= 0.3s in the injected latency: right now the
+    # object is only hot and the durability debt is visible
+    assert store.pending_spill() == 1
+    assert store.durability()["durable_on"] == "hot"
+    store.drain_spill()
+    assert store.pending_spill() == 0
+    assert store.durability()["durable_on"] == "durable"
+    # bit-exact from the durable tree alone
+    store2 = ChunkStore(tmp_path, backend=LocalFSBackend(
+        tmp_path / "objects"))
+    out, _ = store2.read_digest(ref.digest)
+    np.testing.assert_array_equal(out["w"], _tree(41)["w"])
+    store.close()
+
+
+def test_sweep_tmp_spares_own_process_inflight_tmp_files(tmp_path):
+    """Regression: the post-commit GC's sweep_tmp must not unlink a tmp
+    file that belongs to a live in-flight atomic_write of THIS process
+    (a spill-lane write racing the sweep) — only crash leftovers from
+    other processes are reclaimable."""
+    import os
+
+    be = LocalFSBackend(tmp_path / "objects")
+    be.write("ab123", b"payload")
+    d = tmp_path / "objects" / "ab"
+    live = d / f"ab123.chunk.tmp-{os.getpid():x}-deadbeef"
+    live.write_bytes(b"inflight")
+    stale = d / "ab123.chunk.tmp-99999999-1"
+    stale.write_bytes(b"old")
+    freed = be.sweep_tmp()
+    assert not stale.exists()
+    assert live.exists(), "sweep unlinked a live in-flight write"
+    assert freed == len(b"old")

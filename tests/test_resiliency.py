@@ -1,0 +1,249 @@
+"""Resiliency: the crash matrix (every named crash point x every save
+path must leave the previous manifest authoritative and restore
+bit-exact), the --fail-at N@point trainer CLI, and the supervisor
+acceptance drill (kill + SIGTERM preemption -> elastic restart on fewer
+participants -> bit-exact resume with no committed step lost)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import faults
+from repro.checkpoint.async_io import AsyncWriteError
+from repro.checkpoint.faults import InjectedCrash
+from repro.checkpoint.saver import CheckpointManager
+from repro.checkpoint.sharded import ShardBarrierError, ShardedCheckpointer
+from repro.configs import get_config
+from repro.core import LayerRegistry, make_policy
+from repro.launch import steps as steps_lib
+from repro.models import build_model
+
+ARCH = "mamba2-370m"
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    # A crash test that dies mid-assert must not leave an armed point
+    # behind to detonate inside an unrelated test.
+    faults.disarm()
+    yield
+    faults.disarm()
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config(ARCH, reduced=True)
+    model = build_model(cfg)
+    state1 = steps_lib.init_state(model, jax.random.key(0))
+
+    def poke(x):
+        x = np.array(x)
+        x.flat[:1] += 1
+        return x
+
+    # Every leaf of every unit drifts, so every (unit, kind) of the
+    # second event really exercises gather/write (no dedup early-outs
+    # that would skip an armed point).
+    state2 = {"step": np.array(state1["step"]),
+              "params": jax.tree.map(poke, state1["params"]),
+              "opt": jax.tree.map(poke, state1["opt"])}
+    return model, LayerRegistry(model), state1, state2
+
+
+def _assert_states_equal(a, b, parts=("params", "opt")):
+    for part in parts:
+        for x, y in zip(jax.tree.leaves(a[part]), jax.tree.leaves(b[part])):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# --------------------------------------------------------------- the matrix
+# Which named crash points are reachable on which save path.  "spill"
+# needs the tiered backend (and is armed sticky: the tiered drain
+# RETRIES failed spills, so a one-shot crash would heal mid-save and the
+# commit would legitimately succeed).  The sharded path adds the
+# two-phase-commit points.
+MATRIX = (
+    [("local", p) for p in ("fingerprint", "gather", "object_write",
+                            "manifest_commit", "manifest_latest")]
+    + [("tiered", p) for p in ("fingerprint", "gather", "object_write",
+                               "spill", "manifest_commit",
+                               "manifest_latest")]
+    + [("sharded", p) for p in ("fingerprint", "gather", "object_write",
+                                "participant_record", "barrier",
+                                "manifest_commit", "manifest_latest")]
+)
+
+
+def _make_saver(path_kind, root, model, registry):
+    pol = make_policy("full", model.layer_units())
+    # 4 KiB fingerprint blocks: one-element pokes stay block-sparse.
+    if path_kind == "tiered":
+        # spill_barrier=True makes the commit DEPEND on the spill drain,
+        # so an injected spill failure must abort the event.
+        mgr = CheckpointManager(root, registry, pol, fp_block_bytes=4096,
+                                store_backend="tiered", spill_barrier=True)
+        return mgr, mgr
+    mgr = CheckpointManager(root, registry, pol, fp_block_bytes=4096)
+    if path_kind == "sharded":
+        return mgr, ShardedCheckpointer(mgr, 2)
+    return mgr, mgr
+
+
+@pytest.mark.parametrize("path_kind,point", MATRIX,
+                         ids=[f"{b}-{p}" for b, p in MATRIX])
+def test_crash_matrix_previous_manifest_stays_authoritative(
+        setup, tmp_path, path_kind, point):
+    """Arm one crash point, die mid-save of event 2, and prove event 1
+    is untouched: its manifest is still LATEST, restore is bit-exact,
+    with zero fallbacks, and survives a GC."""
+    model, registry, state1, state2 = setup
+    mgr, saver = _make_saver(path_kind, tmp_path, model, registry)
+    saver.save(state1, step=10)
+
+    with faults.scoped(point, sticky=(point == "spill")):
+        with pytest.raises((InjectedCrash, AsyncWriteError,
+                            ShardBarrierError)):
+            saver.save(state2, step=20)
+    assert not faults.pending()  # scoped() left nothing armed behind
+    try:
+        # Best-effort shutdown of the wounded manager: lanes may still
+        # hold the injected error, exactly like a dying process.
+        mgr.close()
+    except (AsyncWriteError, InjectedCrash):
+        pass
+
+    # "Restart": a fresh manager on the same root sees step 10 as the
+    # committed truth, whatever debris step 20 left behind (half-written
+    # objects, participant records, even a manifest file without a
+    # LATEST pointer for the manifest_latest case).
+    backend = "tiered" if path_kind == "tiered" else "local"
+    pol = make_policy("full", model.layer_units())
+    mgr2 = CheckpointManager(tmp_path, registry, pol, async_save=False,
+                             store_backend=backend)
+    assert mgr2.manifests.latest_step() == 10
+    like = steps_lib.state_specs(model)
+    got = mgr2.restore(like)
+    assert int(np.asarray(got["step"])) == 10
+    _assert_states_equal(state1, got)
+    assert not mgr2.last_restore_stats["fallback_units"]
+    # GC with the rebuilt refcounts must not touch the live manifest's
+    # objects (step 20's orphans MAY be swept — they are unreferenced).
+    mgr2.gc()
+    got2 = mgr2.restore(like)
+    _assert_states_equal(state1, got2)
+    mgr2.close()
+
+
+def test_crash_then_retry_same_step_commits(setup, tmp_path):
+    """After a mid-save death the SAME step can be retried and commits
+    cleanly — the restart path a supervisor actually takes."""
+    model, registry, state1, state2 = setup
+    mgr, saver = _make_saver("sharded", tmp_path, model, registry)
+    saver.save(state1, step=10)
+    with faults.scoped("participant_record"):
+        with pytest.raises(InjectedCrash):
+            saver.save(state2, step=20)
+    manifest = saver.save(state2, step=20)  # retry, same step
+    assert manifest.step == 20
+    assert mgr.manifests.latest_step() == 20
+    got = mgr.restore(steps_lib.state_specs(model))
+    _assert_states_equal(state2, got)
+    mgr.close()
+
+
+# ----------------------------------------------------------- trainer CLI
+def test_fail_at_crash_point_reaches_mid_save_and_resumes(tmp_path):
+    """--fail-at N@point dies INSIDE the save pipeline (here: between
+    the manifest write and the LATEST flip — the torn commit), and a
+    --resume run picks up from the last committed step."""
+    from repro.launch.train import train
+
+    kw = dict(arch=ARCH, total_steps=8, batch=2, seq_len=16,
+              ckpt_interval=4, ckpt_dir=str(tmp_path), seed=3)
+    with pytest.raises(InjectedCrash):
+        train(fail_at="8@manifest_latest", **kw)
+    faults.disarm()
+    from repro.core.manifest import ManifestStore
+    ms = ManifestStore(tmp_path)
+    # the torn commit: manifest file exists, LATEST still points at 4
+    assert ms.latest_step() == 4
+    assert (tmp_path / "manifests" / "manifest-00000008.json").is_file()
+
+    out = train(resume=True, **kw)
+    assert out["steps"] == 4  # resumed from 4, not from 0 or 8
+    assert ms.latest_step() == 8
+
+
+def test_fail_at_unreached_point_fails_loudly(tmp_path):
+    """An armed point the run never reaches must error, not silently
+    pass the drill."""
+    from repro.launch.train import SimulatedFailure, train
+
+    with pytest.raises(SimulatedFailure, match="never reached"):
+        # step 6 has no checkpoint event (interval 4, total 6 -> only
+        # step 4 saves AFTER the arming at step 6... no event follows).
+        train(arch=ARCH, total_steps=6, batch=2, seq_len=16,
+              ckpt_interval=4, ckpt_dir=str(tmp_path), seed=3,
+              fail_at="6@gather")
+    assert not faults.pending()
+
+
+# ------------------------------------------------------------- supervisor
+@pytest.mark.slow
+def test_supervisor_kill_and_preempt_bit_exact_acceptance(tmp_path):
+    """The ISSUE acceptance drill: SIGKILL mid-run, then SIGTERM
+    preemption (hot save, durability barrier waived), each restart on a
+    possibly smaller participant count, and the merged loss trajectory
+    is bit-exact against an uninterrupted reference run — no committed
+    step lost, preemption loses nothing at all."""
+    from repro.launch.elastic import probe_restore
+    from repro.launch.supervisor import (
+        Injection,
+        Supervisor,
+        merged_losses,
+    )
+    from repro.launch.train import train
+
+    kw = dict(arch="llama3.2-3b", total_steps=18, batch=2, seq_len=16,
+              ckpt_interval=6, seed=11)
+    ref = train(ckpt_dir=str(tmp_path / "ref"), **kw)
+    ref_losses = dict(ref["losses"])
+
+    sup = Supervisor(
+        tmp_path / "ckpt", run_dir=tmp_path / "run",
+        arch="llama3.2-3b", steps=18, interval=6, batch=2, seq_len=16,
+        policy="full", seed=11,
+        participants=(2, 2, 1),  # shrink to 1 for the final attempt
+        injections=[Injection("kill", at_step=7),
+                    Injection("sigterm", at_step=13)],
+        verify_restore=True)
+    report = sup.run()
+
+    assert report["completed"]
+    kill, preempt = report["interruptions"]
+    assert kill["kind"] == "kill" and not kill["preempted"]
+    # a hard kill loses at most one checkpoint cadence of steps
+    assert 0 <= kill["lost_steps"] <= 6
+    assert kill["committed_step"] >= 6
+    assert preempt["kind"] == "sigterm" and preempt["preempted"]
+    # preemption-time hot save: NOTHING committed is lost
+    assert preempt["lost_steps"] == 0
+    assert preempt["committed_step"] == preempt["reached_step"]
+    for inter in (kill, preempt):
+        assert inter["mttr_seconds"] is not None
+        assert not inter["restore_probe"]["fallback_units"]
+    assert report["goodput_steps"] is not None
+    assert 0 < report["goodput_steps"] <= 1.0
+
+    # Bit-exact resume: every step the (surviving) attempt CSVs recorded
+    # matches the uninterrupted reference exactly, through both the
+    # crash restart and the preemption restart, across the 2->1
+    # participant shrink.
+    merged = merged_losses(tmp_path / "run")
+    assert merged and max(merged) == 17  # the final attempt finished
+    for s, loss in merged.items():
+        assert loss == ref_losses[s], (s, loss, ref_losses[s])
+
+    # And the finished checkpoint restores on a fresh single-host mesh.
+    probe = probe_restore(tmp_path / "ckpt", "llama3.2-3b")
+    assert probe["step"] == 18
+    assert not probe["fallback_units"]
