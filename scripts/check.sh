@@ -32,6 +32,10 @@ if [ "${1:-}" = "smoke" ]; then
   python scripts/restore_smoke.py
   echo "# tiered smoke (save to memory tier -> spill -> restore bit-exact)"
   python scripts/tiered_smoke.py
+  echo "# remote smoke (flaky remote save -> outage -> degraded commit ->"
+  echo "#               restart -> scrub repair/backfill -> bit-exact;"
+  echo "#               writes BENCH_remote.json)"
+  python scripts/remote_smoke.py
   echo "# sharded smoke (2 participants -> barrier commit -> restart ->"
   echo "#                resharded restore bit-exact, fewer bytes read)"
   python scripts/sharded_smoke.py

@@ -14,9 +14,15 @@ The package is layered (see docs/architecture.md for the full dataflow):
   IO is delegated to a backend.
 - ``backends`` — the swappable IO tiers under the core (see
   docs/storage.md): ``LocalFSBackend`` (the classic ``objects/`` tree),
-  ``MemoryBackend`` (volatile RAM tier), and ``TieredBackend`` (hot RAM
+  ``MemoryBackend`` (volatile RAM tier), ``TieredBackend`` (hot RAM
   over durable disk with async spill, promotion-on-read, and LRU
-  eviction under a byte budget).
+  eviction under a byte budget), and ``RemoteBackend`` (an S3/GCS-shaped
+  object tier with retry/backoff, hedged GETs, and a circuit breaker —
+  ``store_backend="remote3"`` composes all three: RAM → disk → remote).
+- ``scrub`` — ``StoreScrubber``, the store-wide integrity scrub &
+  repair pass (fsck): re-verifies every manifest-referenced object in
+  every tier, repairs from any good copy, quarantines the unrecoverable
+  (see docs/resiliency.md).
 - ``fingerprint`` — host-side plumbing for the device-side block
   fingerprint save path (tables, digests, packets; see docs/perf.md).
 - ``async_io`` — ``TransferPool``, the unified bounded transfer
@@ -41,9 +47,16 @@ from repro.checkpoint.async_io import (  # noqa: F401
     TransferPool,
 )
 from repro.checkpoint.backends import (  # noqa: F401
+    CircuitBreaker,
     FaultInjectingBackend,
     LocalFSBackend,
     MemoryBackend,
+    RemoteBackend,
+    RemoteError,
+    RemoteOutage,
+    RemoteUnavailable,
+    RetryPolicy,
+    SimulatedObjectService,
     StorageBackend,
     TieredBackend,
     make_backend,
@@ -75,6 +88,8 @@ _LAZY = {
     "ShardBarrierError": "repro.checkpoint.sharded",
     "participant_wanted": "repro.checkpoint.sharded",
     "combine_states": "repro.checkpoint.sharded",
+    "StoreScrubber": "repro.checkpoint.scrub",
+    "scrub_root": "repro.checkpoint.scrub",
 }
 
 

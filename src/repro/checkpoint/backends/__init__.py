@@ -8,17 +8,25 @@ object bytes live is behind :class:`StorageBackend`:
 - :class:`MemoryBackend` — a RAM tier for high-frequency volatile
   checkpoints,
 - :class:`TieredBackend` — hot tier + durable tier with asynchronous
-  spill, promotion-on-read, and LRU eviction under a hot-byte budget.
+  spill, promotion-on-read, and LRU eviction under a hot-byte budget,
+- :class:`RemoteBackend` — an S3/GCS-shaped object tier (multipart PUT,
+  ranged GET) simulated locally, hardened with retry/backoff, hedged
+  GETs, and a circuit breaker (see backends/remote.py).
 
 ``make_backend`` maps the user-facing ``store_backend=`` knob
-("local" | "memory" | "tiered") to a configured instance rooted under a
-checkpoint root's ``objects/`` (durable) and ``hot/`` (tiered fast-disk
-variants) directories.  See docs/storage.md.
+("local" | "memory" | "tiered" | "remote" | "remote3") to a configured
+instance rooted under a checkpoint root's ``objects/`` (durable disk)
+and ``remote/`` (simulated bucket) directories.  ``remote3`` is the
+three-tier composition RAM → disk → remote: the outer tier spills to
+disk on the shared pool's ``spill`` lane, the inner (best-effort) tier
+replicates disk → remote on a ``remote_spill`` lane and degrades to
+honest disk-durable commits when the remote is down.  See
+docs/storage.md.
 """
 from __future__ import annotations
 
 from pathlib import Path
-from typing import Optional
+from typing import Any, Dict, Optional
 
 from repro.checkpoint.async_io import TransferPool
 from repro.checkpoint.backends.base import StorageBackend  # noqa: F401
@@ -30,25 +38,67 @@ from repro.checkpoint.backends.faulty import (  # noqa: F401
     FaultInjectingBackend,
 )
 from repro.checkpoint.backends.memory import MemoryBackend  # noqa: F401
+from repro.checkpoint.backends.retry import (  # noqa: F401
+    CircuitBreaker,
+    LatencyTracker,
+    RetryPolicy,
+)
+from repro.checkpoint.backends.remote import (  # noqa: F401
+    RemoteBackend,
+    RemoteError,
+    RemoteOutage,
+    RemoteThrottle,
+    RemoteTimeout,
+    RemoteUnavailable,
+    SimulatedObjectService,
+)
 from repro.checkpoint.backends.tiered import (  # noqa: F401
     SPILL_LANE,
     TieredBackend,
 )
 
-BACKEND_NAMES = ("local", "memory", "tiered")
+BACKEND_NAMES = ("local", "memory", "tiered", "remote", "remote3")
+
+#: lane of the disk → remote replication spill (the RAM → disk spill
+#: keeps the classic SPILL_LANE), so one pool carries both without the
+#: barriers entangling.
+REMOTE_SPILL_LANE = "remote_spill"
+
+# remote_opts keys consumed by the simulated service (everything else
+# configures the RemoteBackend's policy/hedging).
+_SERVICE_KEYS = ("latency", "error_rate", "throttle_rate", "spike_rate",
+                 "spike_latency", "spike_ops", "seed")
+_POLICY_KEYS = ("attempts", "base_delay", "max_delay", "jitter", "timeout")
+
+
+def _build_remote(root: Path, opts: Dict[str, Any]) -> RemoteBackend:
+    opts = dict(opts)
+    service_kw = {k: opts.pop(k) for k in _SERVICE_KEYS if k in opts}
+    policy_kw = {k: opts.pop(k) for k in _POLICY_KEYS if k in opts}
+    service = SimulatedObjectService(root / "remote", **service_kw)
+    policy = RetryPolicy(**policy_kw) if policy_kw else None
+    breaker_kw = {k: opts.pop(k) for k in ("failures", "cooldown")
+                  if k in opts}
+    breaker = CircuitBreaker(**breaker_kw) if breaker_kw else None
+    return RemoteBackend(service, policy=policy, breaker=breaker, **opts)
 
 
 def make_backend(spec: "str | StorageBackend", root: Path | str, *,
                  fsync: bool = False,
                  pool: Optional[TransferPool] = None,
                  spill_threads: int = 2,
-                 hot_budget_bytes: Optional[int] = None) -> StorageBackend:
+                 hot_budget_bytes: Optional[int] = None,
+                 remote_opts: Optional[Dict[str, Any]] = None
+                 ) -> StorageBackend:
     """Resolve a ``store_backend`` knob into a backend instance.
 
     ``root`` is the checkpoint root; the durable object tree lives at
-    ``root/objects`` (unchanged on-disk layout).  ``spec`` may already be
-    a StorageBackend (passed through untouched — the caller composed its
-    own tiers, e.g. fast-disk over slow-disk).
+    ``root/objects`` (unchanged on-disk layout) and the simulated remote
+    bucket at ``root/remote``.  ``spec`` may already be a StorageBackend
+    (passed through untouched — the caller composed its own tiers, e.g.
+    fast-disk over slow-disk).  ``remote_opts`` configures the simulated
+    service's fault knobs (latency/error_rate/seed/...), the retry
+    policy (attempts/timeout/...), and the RemoteBackend's hedging.
     """
     if isinstance(spec, StorageBackend):
         return spec
@@ -62,6 +112,28 @@ def make_backend(spec: "str | StorageBackend", root: Path | str, *,
             MemoryBackend(), LocalFSBackend(root / "objects", fsync=fsync),
             pool=pool, spill_threads=spill_threads,
             hot_budget_bytes=hot_budget_bytes)
+    if spec == "remote":
+        return _build_remote(root, dict(remote_opts or {}))
+    if spec == "remote3":
+        remote = _build_remote(root, dict(remote_opts or {}))
+        own_pool = pool is None
+        if pool is None:
+            # One pool, two lanes (RAM→disk and disk→remote); unbounded
+            # queue because spill tasks submit follow-on spill tasks.
+            pool = TransferPool(max(2, spill_threads * 2), max_queue=0)
+        inner = TieredBackend(
+            LocalFSBackend(root / "objects", fsync=fsync), remote,
+            pool=pool, lane=REMOTE_SPILL_LANE,
+            hot_label="durable", durable_label=None,
+            promote_on_read=True,  # a lost disk blob re-warms from remote
+            required=False)        # remote down => degrade, don't fail
+        outer = TieredBackend(
+            MemoryBackend(), inner, pool=pool,
+            hot_budget_bytes=hot_budget_bytes, durable_label=None)
+        # The outer tier owns the shared pool iff we created it here (its
+        # close() tears the durable side down before closing the pool).
+        outer._owns_pool = own_pool
+        return outer
     raise ValueError(
         f"unknown store backend {spec!r}; expected one of {BACKEND_NAMES} "
         "or a StorageBackend instance")

@@ -87,9 +87,33 @@ class StorageBackend:
         """Objects written but not yet durable (0 for single-tier)."""
         return 0
 
+    def durability(self) -> Dict[str, object]:
+        """The durability snapshot the manifest-commit barrier records
+        (``meta["storage"]``, minus the ``backend`` name the store adds).
+
+        ``durable_on`` names the deepest durability LEVEL every object
+        written so far has reached: "none" (volatile), "hot" (written
+        but spill still owed), or "durable" (the tier that survives
+        process exit holds everything).  Tiered compositions override
+        this recursively — a three-tier RAM→disk→remote stack can answer
+        "durable" (disk has it, remote still owed: the honest degraded
+        commit) or "remote" (fully replicated)."""
+        durable = self.durable_tier()
+        pending = self.pending_spill()
+        return {"durable_tier": durable,
+                "pending_spill": pending,
+                "durable_on": ("none" if durable == "none"
+                               else "hot" if pending else "durable")}
+
     def tier_stats(self) -> Dict[str, int]:
         """Monotonic per-tier counters (reads/writes/spills/...)."""
         return {}
+
+    def tier_backends(self) -> Dict[str, "StorageBackend"]:
+        """Label -> concrete backend for every tier, fastest first (one
+        entry for single-tier backends).  The scrubber uses this to read
+        and repair each tier's copy of an object independently."""
+        return {self.name: self}
 
     def path_of(self, key: str) -> Optional[Path]:
         """Filesystem path of ``key`` if some tier is path-backed (tests

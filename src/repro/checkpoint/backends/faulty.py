@@ -26,6 +26,13 @@ Fault knobs (all independent, all optional):
                            simulated at this layer for tiers that trust
                            ``has()``);
 - ``write_latency`` / ``read_latency``  seconds slept per matching op;
+- ``error_rate_write`` / ``error_rate_read``  seeded *probabilistic*
+                           per-op error rates: op N fails iff
+                           ``hash(seed, kind, N) < rate`` — deterministic
+                           given the seed (a scenario replays the exact
+                           same fault schedule in CI), independent across
+                           ops (flaky-but-recoverable, the retry-policy
+                           drill), composable with the hard counters;
 - ``match=fn``             only keys with ``fn(key)`` true are counted /
                            faulted; everything else passes through clean.
 
@@ -34,6 +41,7 @@ Counters only advance on *matching* ops, so ``error_on_write=2`` with a
 """
 from __future__ import annotations
 
+import hashlib
 import os
 import threading
 import time
@@ -56,6 +64,14 @@ def _due(spec: _Idx, n: int) -> bool:
     return n in spec
 
 
+def _seeded_due(rate: float, seed: int, kind: str, n: int) -> bool:
+    """Deterministic Bernoulli(rate) draw for op ``n`` of ``kind``."""
+    if rate <= 0.0:
+        return False
+    h = hashlib.blake2b(f"{seed}:{kind}:{n}".encode(), digest_size=8)
+    return int.from_bytes(h.digest(), "big") / 2.0 ** 64 < rate
+
+
 class FaultInjectingBackend(StorageBackend):
     """A StorageBackend decorator that injects failures on demand."""
 
@@ -72,6 +88,9 @@ class FaultInjectingBackend(StorageBackend):
                  torn_on_write: _Idx = None,
                  write_latency: float = 0.0,
                  read_latency: float = 0.0,
+                 error_rate_write: float = 0.0,
+                 error_rate_read: float = 0.0,
+                 seed: int = 0,
                  match: Optional[Callable[[str], bool]] = None) -> None:
         if crash_mode not in ("raise", "exit"):
             raise ValueError(f"unknown crash_mode {crash_mode!r}")
@@ -86,6 +105,9 @@ class FaultInjectingBackend(StorageBackend):
         self.torn_on_write = torn_on_write
         self.write_latency = write_latency
         self.read_latency = read_latency
+        self.error_rate_write = error_rate_write
+        self.error_rate_read = error_rate_read
+        self.seed = seed
         self.match = match
         self.writes = 0          # matching writes attempted (1-based count)
         self.reads = 0
@@ -102,6 +124,8 @@ class FaultInjectingBackend(StorageBackend):
         self.torn_on_write = None
         self.write_latency = 0.0
         self.read_latency = 0.0
+        self.error_rate_write = 0.0
+        self.error_rate_read = 0.0
 
     def _matches(self, key: str) -> bool:
         return self.match is None or self.match(key)
@@ -115,7 +139,9 @@ class FaultInjectingBackend(StorageBackend):
             n = self.writes
             crash = (self.crash_on_write is not None
                      and n == self.crash_on_write)
-            err = _due(self.error_on_write, n)
+            err = (_due(self.error_on_write, n)
+                   or _seeded_due(self.error_rate_write, self.seed,
+                                  "w", n))
             torn = _due(self.torn_on_write, n)
             if crash or err or torn:
                 self.faults += 1
@@ -141,7 +167,9 @@ class FaultInjectingBackend(StorageBackend):
             with self._lock:
                 self.reads += 1
                 n = self.reads
-                err = _due(self.error_on_read, n)
+                err = (_due(self.error_on_read, n)
+                       or _seeded_due(self.error_rate_read, self.seed,
+                                      "r", n))
                 if err:
                     self.faults += 1
             if self.read_latency:

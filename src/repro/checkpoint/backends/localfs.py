@@ -19,6 +19,15 @@ from typing import Dict, Iterator, Optional
 from repro.checkpoint.backends.base import StorageBackend
 
 
+def _fsync_dir(path: Path) -> None:
+    """fsync a directory so a just-renamed entry survives power loss."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def atomic_write(path: Path, data: bytes, *, fsync: bool = True) -> None:
     # Unique tmp name: concurrent writers of the SAME destination (two
     # async-writer threads persisting bitwise-identical units dedup to one
@@ -33,6 +42,13 @@ def atomic_write(path: Path, data: bytes, *, fsync: bool = True) -> None:
             f.flush()
             os.fsync(f.fileno())
     os.replace(tmp, path)
+    if fsync:
+        # POSIX durability of the RENAME itself: fsyncing the file makes
+        # its bytes durable, but the directory entry published by
+        # os.replace lives in the parent directory's data — without this
+        # second fsync a "durable" object or manifest can vanish from the
+        # namespace on power loss even though its inode was synced.
+        _fsync_dir(path.parent)
 
 
 class LocalFSBackend(StorageBackend):

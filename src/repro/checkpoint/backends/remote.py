@@ -1,0 +1,480 @@
+"""RemoteBackend — an S3/GCS-shaped object tier, simulated locally.
+
+Two layers:
+
+- :class:`SimulatedObjectService` — the "cloud": a directory-backed
+  bucket speaking object-store verbs (multipart PUT: initiate / put_part
+  / complete, ranged GET, HEAD, DELETE, LIST) through a fault-injecting
+  transport.  Per-op latency, seeded probabilistic errors/throttles,
+  deterministic latency spikes, and a cross-process *outage marker file*
+  (``OUTAGE`` in the bucket root — a supervisor or smoke script can take
+  the "cloud" down for a child trainer by touching a file) mean CI needs
+  no credentials and no network.  All randomness is a blake2 hash of
+  ``(seed, verb, op_index)``, so a scenario replays identically.
+- :class:`RemoteBackend` — the :class:`StorageBackend` adapter that makes
+  the service safe to sit under a
+  :class:`~repro.checkpoint.backends.tiered.TieredBackend`: every verb
+  runs through a :class:`~repro.checkpoint.backends.retry.RetryPolicy`
+  (bounded exponential backoff, deterministic jitter, per-op timeouts),
+  GETs are *hedged* — once the first attempt outlives the tracked
+  latency percentile × factor, a second GET races it and the first
+  success wins — and a :class:`CircuitBreaker` fails ops fast during a
+  sustained outage so the tier above degrades to disk instead of paying
+  a full retry schedule per object.  ``tier_stats`` exposes the retry /
+  hedge / breaker counters the benchmarks and tests pin down.
+
+Failure semantics at the StorageBackend surface:
+
+- ``read``/``write`` raise (after bounded retries) — the tier above
+  keeps the object dirty and retries at the next durability barrier.
+- ``has``/``delete``/``keys`` degrade softly (False / 0 / empty) with a
+  counter, so dedup probes and GC sweeps never crash a save over a
+  remote blip; an object skipped by a degraded GC round is reclaimed by
+  the next one.
+"""
+from __future__ import annotations
+
+import hashlib
+import logging
+import os
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Set
+
+from repro.checkpoint.backends.base import StorageBackend
+from repro.checkpoint.backends.localfs import atomic_write
+from repro.checkpoint.backends.retry import (
+    CircuitBreaker,
+    LatencyTracker,
+    RetryPolicy,
+)
+
+log = logging.getLogger("repro.checkpoint.backends")
+
+
+class RemoteError(OSError):
+    """Base for simulated remote-service failures (transient by the
+    default classifier: RemoteError is an OSError)."""
+
+
+class RemoteOutage(RemoteError):
+    """Service unavailable (5xx-shaped / injected outage window)."""
+
+
+class RemoteThrottle(RemoteError):
+    """Rate limited (429-shaped)."""
+
+
+class RemoteTimeout(RemoteError):
+    """Op exceeded its per-op timeout budget."""
+
+
+class RemoteUnavailable(RemoteError):
+    """Fast-fail: the circuit breaker is open (no attempt was made)."""
+
+
+def _h01(seed: int, tag: str, n: int) -> float:
+    h = hashlib.blake2b(f"{seed}:{tag}:{n}".encode(), digest_size=8)
+    return int.from_bytes(h.digest(), "big") / 2.0 ** 64
+
+
+DEFAULT_PART_SIZE = 8 << 20
+
+
+class SimulatedObjectService:
+    """Directory-backed bucket behind a fault-injecting transport.
+
+    Keys are opaque strings (content digests here); blobs live at
+    ``<root>/<key[:2]>/<key>.blob`` so a "remote" bucket survives process
+    restarts like a real one.  Multipart uploads stage parts under
+    ``<root>/uploads/`` and publish atomically on ``complete`` — an
+    upload that dies mid-part leaves staged garbage (swept by
+    ``sweep_uploads``), never a torn object.
+    """
+
+    def __init__(self, root: Path | str, *, latency: float = 0.0,
+                 error_rate: float = 0.0, throttle_rate: float = 0.0,
+                 spike_rate: float = 0.0, spike_latency: float = 0.0,
+                 spike_ops: Optional[Set[int]] = None, seed: int = 0):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.latency = latency
+        self.error_rate = error_rate
+        self.throttle_rate = throttle_rate
+        self.spike_rate = spike_rate
+        self.spike_latency = spike_latency
+        self.spike_ops = spike_ops  # explicit 1-based op indices (tests)
+        self.seed = seed
+        self._lock = threading.Lock()
+        self._op_n = 0
+        self.ops: Dict[str, int] = {}
+
+    # ---- fault controls -------------------------------------------------
+    @property
+    def outage_marker(self) -> Path:
+        return self.root / "OUTAGE"
+
+    def set_outage(self, down: bool) -> None:
+        """Cross-process outage switch: while the marker file exists,
+        every op raises RemoteOutage (a supervisor can fail a child
+        trainer's "cloud" by touching a file)."""
+        if down:
+            self.outage_marker.touch()
+        else:
+            try:
+                self.outage_marker.unlink()
+            except FileNotFoundError:
+                pass
+
+    def heal(self) -> None:
+        self.set_outage(False)
+        self.error_rate = self.throttle_rate = 0.0
+        self.spike_rate = 0.0
+        self.spike_ops = None
+
+    # ---- transport ------------------------------------------------------
+    def _op(self, verb: str, *, timeout: Optional[float] = None) -> None:
+        with self._lock:
+            self._op_n += 1
+            n = self._op_n
+            self.ops[verb] = self.ops.get(verb, 0) + 1
+        if self.outage_marker.exists():
+            raise RemoteOutage(f"remote outage (op #{n} {verb})")
+        if self.error_rate and _h01(self.seed, "err", n) < self.error_rate:
+            raise RemoteOutage(f"injected remote error (op #{n} {verb})")
+        if self.throttle_rate \
+                and _h01(self.seed, "thr", n) < self.throttle_rate:
+            raise RemoteThrottle(f"injected throttle (op #{n} {verb})")
+        lat = self.latency
+        if (self.spike_ops is not None and n in self.spike_ops) or (
+                self.spike_rate
+                and _h01(self.seed, "spk", n) < self.spike_rate):
+            lat += self.spike_latency
+        if timeout is not None and lat > timeout:
+            # Sleep only the budget, not the whole simulated latency.
+            time.sleep(timeout)
+            raise RemoteTimeout(
+                f"op #{n} {verb} exceeded {timeout}s (simulated {lat}s)")
+        if lat:
+            time.sleep(lat)
+
+    # ---- object verbs ---------------------------------------------------
+    def blob_path(self, key: str) -> Path:
+        return self.root / key[:2] / f"{key}.blob"
+
+    def head(self, key: str, *, timeout: Optional[float] = None) -> int:
+        self._op("head", timeout=timeout)
+        try:
+            return self.blob_path(key).stat().st_size
+        except FileNotFoundError:
+            raise FileNotFoundError(f"remote object {key} not found")
+
+    def get(self, key: str, start: int = 0, end: Optional[int] = None,
+            *, timeout: Optional[float] = None) -> bytes:
+        """Ranged GET: bytes [start, end) (end=None → to EOF)."""
+        self._op("get", timeout=timeout)
+        try:
+            with open(self.blob_path(key), "rb") as f:
+                f.seek(start)
+                return f.read() if end is None else f.read(end - start)
+        except FileNotFoundError:
+            raise FileNotFoundError(f"remote object {key} not found")
+
+    def initiate(self, key: str, *, timeout: Optional[float] = None) -> str:
+        self._op("initiate", timeout=timeout)
+        upload = (f"{key}.{os.getpid():x}-{threading.get_ident():x}"
+                  f"-{time.monotonic_ns():x}")
+        (self.root / "uploads" / upload).mkdir(parents=True, exist_ok=True)
+        return upload
+
+    def put_part(self, upload: str, index: int, data: bytes,
+                 *, timeout: Optional[float] = None) -> None:
+        self._op("put_part", timeout=timeout)
+        part = self.root / "uploads" / upload / f"part-{index:06d}"
+        part.write_bytes(data)
+
+    def complete(self, key: str, upload: str,
+                 *, timeout: Optional[float] = None) -> int:
+        self._op("complete", timeout=timeout)
+        stage = self.root / "uploads" / upload
+        blob = b"".join(p.read_bytes()
+                        for p in sorted(stage.glob("part-*")))
+        atomic_write(self.blob_path(key), blob, fsync=False)
+        for p in stage.glob("part-*"):
+            p.unlink()
+        try:
+            stage.rmdir()
+        except OSError:
+            pass
+        return len(blob)
+
+    def abort(self, upload: str) -> None:
+        stage = self.root / "uploads" / upload
+        if stage.is_dir():
+            for p in stage.glob("part-*"):
+                p.unlink()
+            try:
+                stage.rmdir()
+            except OSError:
+                pass
+
+    def delete(self, key: str, *, timeout: Optional[float] = None) -> int:
+        self._op("delete", timeout=timeout)
+        p = self.blob_path(key)
+        try:
+            freed = p.stat().st_size
+            p.unlink()
+        except FileNotFoundError:
+            return 0
+        try:
+            p.parent.rmdir()
+        except OSError:
+            pass
+        return freed
+
+    def list_keys(self, *, timeout: Optional[float] = None) -> List[str]:
+        self._op("list", timeout=timeout)
+        return sorted(p.stem for p in self.root.glob("*/*.blob"))
+
+    def sweep_uploads(self) -> int:
+        """Reclaim staged parts of uploads that died before complete()."""
+        freed = 0
+        updir = self.root / "uploads"
+        if updir.is_dir():
+            own = f".{os.getpid():x}-"
+            for stage in updir.iterdir():
+                if own in stage.name:
+                    continue  # possibly live in this very process tree
+                for p in stage.glob("part-*"):
+                    freed += p.stat().st_size
+                    p.unlink()
+                try:
+                    stage.rmdir()
+                except OSError:
+                    pass
+        return freed
+
+
+class RemoteBackend(StorageBackend):
+    """StorageBackend over a :class:`SimulatedObjectService` with retry,
+    hedged GETs, and a circuit breaker (see module docstring)."""
+
+    name = "remote"
+
+    def __init__(self, service: SimulatedObjectService, *,
+                 policy: Optional[RetryPolicy] = None,
+                 breaker: Optional[CircuitBreaker] = None,
+                 part_size: int = DEFAULT_PART_SIZE,
+                 range_bytes: Optional[int] = None,
+                 hedge: bool = True, hedge_percentile: float = 95.0,
+                 hedge_factor: float = 2.0,
+                 hedge_min_delay: float = 0.005):
+        self.service = service
+        self.policy = policy if policy is not None else RetryPolicy()
+        self.breaker = breaker if breaker is not None else CircuitBreaker()
+        self.part_size = max(1, part_size)
+        # None → whole-object GETs; set to chunk reads into ranged GETs
+        # (a mid-blob transient error then retries one range, not the blob).
+        self.range_bytes = range_bytes
+        self.hedge = hedge
+        self.hedge_percentile = hedge_percentile
+        self.hedge_factor = hedge_factor
+        self.hedge_min_delay = hedge_min_delay
+        self.latencies = LatencyTracker()
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._lock = threading.Lock()
+        self._stats = {"remote_gets": 0, "remote_puts": 0,
+                       "remote_put_parts": 0, "remote_retries": 0,
+                       "remote_hedges": 0, "remote_hedge_wins": 0,
+                       "remote_breaker_opens": 0, "remote_fast_fails": 0,
+                       "remote_soft_fails": 0}
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        with self._lock:
+            self._stats[key] += n
+
+    # ---- retry/breaker plumbing ----------------------------------------
+    def _call(self, verb: str, key: str, fn):
+        """Run ``fn()`` under breaker + retry policy, recording latency.
+        ``fn`` must accept a ``timeout=`` kwarg-bound op (callers bind
+        ``self.policy.timeout`` themselves)."""
+        if not self.breaker.allow():
+            self._bump("remote_fast_fails")
+            raise RemoteUnavailable(
+                f"remote circuit open; {verb} {key} failed fast")
+
+        def on_retry(attempt: int, exc: BaseException) -> None:
+            self._bump("remote_retries")
+            self.breaker.record_failure()
+
+        t0 = time.monotonic()
+        before = self.breaker.opens
+        try:
+            out = self.policy.run(fn, key=f"{verb}:{key}",
+                                  on_retry=on_retry)
+        except FileNotFoundError:
+            # An absent key is an answer from a healthy service.
+            self.breaker.record_success()
+            raise
+        except BaseException:
+            self.breaker.record_failure()
+            if self.breaker.opens > before:
+                self._bump("remote_breaker_opens",
+                           self.breaker.opens - before)
+                log.warning("remote circuit OPEN after repeated %s "
+                            "failures; degrading to lower tiers", verb)
+            raise
+        self.breaker.record_success()
+        self.latencies.record(time.monotonic() - t0)
+        return out
+
+    # ---- byte IO --------------------------------------------------------
+    def _get_once(self, key: str) -> bytes:
+        to = self.policy.timeout
+        if self.range_bytes is None:
+            return self.service.get(key, timeout=to)
+        size = self.service.head(key, timeout=to)
+        parts = [self.service.get(key, off, min(off + self.range_bytes,
+                                                size), timeout=to)
+                 for off in range(0, size, self.range_bytes)]
+        return b"".join(parts) if parts else b""
+
+    def _hedge_after(self) -> Optional[float]:
+        p = self.latencies.percentile(self.hedge_percentile)
+        if p is None:
+            return None
+        return max(self.hedge_min_delay, p * self.hedge_factor)
+
+    def read(self, key: str) -> bytes:
+        self._bump("remote_gets")
+        run = lambda: self._call("get", key, lambda: self._get_once(key))  # noqa: E731,E501
+        after = self._hedge_after() if self.hedge else None
+        if after is None:
+            return run()
+        with self._lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=4, thread_name_prefix="remote-hedge")
+            pool = self._pool
+        primary = pool.submit(run)
+        done, _ = wait({primary}, timeout=after)
+        if done:
+            return primary.result()
+        # Primary has outlived the latency percentile: race a second GET.
+        self._bump("remote_hedges")
+        hedged = pool.submit(run)
+        pending = {primary, hedged}
+        last_exc: Optional[BaseException] = None
+        while pending:
+            done, pending = wait(pending, return_when=FIRST_COMPLETED)
+            for f in done:
+                exc = f.exception()
+                if exc is None:
+                    if f is hedged:
+                        self._bump("remote_hedge_wins")
+                    for p in pending:
+                        p.cancel()
+                    return f.result()
+                last_exc = exc
+        raise last_exc  # both attempts failed
+
+    def write(self, key: str, data: bytes) -> int:
+        self._bump("remote_puts")
+        to = self.policy.timeout
+        upload = self._call("initiate", key,
+                            lambda: self.service.initiate(key, timeout=to))
+        try:
+            for i, off in enumerate(range(0, len(data), self.part_size)):
+                chunk = data[off:off + self.part_size]
+                self._bump("remote_put_parts")
+                self._call(
+                    "put_part", key,
+                    lambda u=upload, i=i, c=chunk:
+                        self.service.put_part(u, i, c, timeout=to))
+            if not data:  # zero-byte object still publishes
+                self._call("put_part", key,
+                           lambda: self.service.put_part(upload, 0, b"",
+                                                         timeout=to))
+            self._call("complete", key,
+                       lambda: self.service.complete(key, upload,
+                                                     timeout=to))
+        except BaseException:
+            self.service.abort(upload)
+            raise
+        return len(data)
+
+    def has(self, key: str) -> bool:
+        try:
+            self._call("head", key,
+                       lambda: self.service.head(
+                           key, timeout=self.policy.timeout))
+            return True
+        except FileNotFoundError:
+            return False
+        except OSError:
+            # Soft failure: a dedup probe or plan-time liveness check
+            # must not crash a save over a remote blip; "not visible
+            # right now" is the honest degraded answer.
+            self._bump("remote_soft_fails")
+            return False
+
+    def size(self, key: str) -> int:
+        return self._call("head", key,
+                          lambda: self.service.head(
+                              key, timeout=self.policy.timeout))
+
+    def delete(self, key: str) -> int:
+        try:
+            return self._call("delete", key,
+                              lambda: self.service.delete(
+                                  key, timeout=self.policy.timeout))
+        except OSError:
+            # GC must not crash over a blip; the orphan is swept by a
+            # later GC round once the service recovers.
+            self._bump("remote_soft_fails")
+            return 0
+
+    def keys(self) -> Iterator[str]:
+        try:
+            ks = self._call("list", "*",
+                            lambda: self.service.list_keys(
+                                timeout=self.policy.timeout))
+        except OSError:
+            self._bump("remote_soft_fails")
+            return iter(())
+        return iter(ks)
+
+    # ---- maintenance / introspection ------------------------------------
+    def sweep_tmp(self) -> int:
+        try:
+            return self.service.sweep_uploads()
+        except OSError:
+            return 0
+
+    def close(self) -> None:
+        with self._lock:
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
+
+    def durable_tier(self) -> str:
+        return "remote"
+
+    def durability(self) -> Dict[str, object]:
+        return {"durable_tier": "remote", "pending_spill": 0,
+                "durable_on": "remote"}
+
+    def tier_stats(self) -> Dict[str, int]:
+        with self._lock:
+            out = dict(self._stats)
+        out["remote_breaker_state"] = self.breaker.state
+        for verb, n in self.service.ops.items():
+            out[f"remote_op_{verb}"] = n
+        return out
+
+    def path_of(self, key: str) -> Optional[Path]:
+        # Deliberately None: a remote tier has no local filesystem path.
+        # Tests poke the simulated bucket via ``service.blob_path``.
+        return None

@@ -22,8 +22,21 @@ Lifecycle rules that keep the composition safe:
   cancels its pending-spill obligation.
 - ``drain()`` is the durability barrier: after it returns, every object
   written so far is on the durable tier (spill errors surface here, on
-  the spill lane, never on the saver's write lane).
+  the spill lane, never on the saver's write lane).  The drain CASCADES
+  into the durable side, so a nested composition (three tiers:
+  RAM → disk → remote) barriers all the way down.
 - ``close()`` drains first — pending spills are never abandoned.
+
+Three-tier nesting (``store_backend="remote3"``): the durable side of
+one TieredBackend may itself be a TieredBackend (disk over remote).  The
+inner tier is constructed with ``required=False`` — its own hot side
+(disk) already survives process exit, so when the remote service is down
+a drain records a *degraded* barrier (objects stay dirty, retried at the
+next barrier) instead of failing the save.  ``durability()`` then
+reports the honest ``durable_on="durable"`` (disk, not remote) with
+``degraded=True``, which the manifest commit records verbatim.
+``hot_label``/``durable_label`` give each tier its reporting name, so
+``locate``/``tier_reads`` distinguish "hot"/"durable"/"remote".
 """
 from __future__ import annotations
 
@@ -48,13 +61,30 @@ class TieredBackend(StorageBackend):
     def __init__(self, hot: StorageBackend, durable: StorageBackend, *,
                  pool: Optional[TransferPool] = None, spill_threads: int = 2,
                  hot_budget_bytes: Optional[int] = None,
-                 promote_on_read: bool = True):
+                 promote_on_read: bool = True,
+                 lane: str = SPILL_LANE,
+                 hot_label: str = "hot",
+                 durable_label: Optional[str] = "durable",
+                 required: bool = True):
         self.hot = hot
         self.durable = durable
         self._owns_pool = pool is None
         self.pool = pool if pool is not None \
             else TransferPool(max(1, spill_threads))
         self.hot_budget_bytes = hot_budget_bytes
+        # Distinct lanes let a nested composition share ONE pool while
+        # each tier drains only its own spill traffic.
+        self.lane = lane
+        # Reporting names for locate()/tier_backends(); durable_label=None
+        # delegates to the durable side's own locate (nested tiers).
+        self.hot_label = hot_label
+        self.durable_label = durable_label
+        # required=False: this tier's durability is BEST-EFFORT — a drain
+        # that cannot reach the durable side records a degraded barrier
+        # (objects stay dirty, retried next drain) instead of raising.
+        # Only safe when the hot side itself survives process exit (the
+        # disk tier of a disk-over-remote composition).
+        self.required = required
         # Promotion warms the hot tier for the NEXT read of the same
         # object; with no hot_budget_bytes it can duplicate a whole
         # checkpoint into RAM during a restore-from-durable, so one-shot
@@ -76,7 +106,8 @@ class TieredBackend(StorageBackend):
         self._closed = False
         self._stats = {"hot_writes": 0, "hot_reads": 0, "durable_reads": 0,
                        "spilled_objects": 0, "spilled_bytes": 0,
-                       "promotions": 0, "evictions": 0, "evicted_bytes": 0}
+                       "promotions": 0, "evictions": 0, "evicted_bytes": 0,
+                       "degraded_drains": 0}
 
     # ------------------------------------------------------------- spill
     def _enqueue_spill(self, key: str) -> None:
@@ -85,7 +116,7 @@ class TieredBackend(StorageBackend):
                 return  # a queued task will pick up the current bytes
             self._inflight.add(key)
         try:
-            self.pool.submit(SPILL_LANE, self._spill_one, key)
+            self.pool.submit(self.lane, self._spill_one, key)
         except BaseException:
             with self._lock:
                 self._inflight.discard(key)
@@ -228,22 +259,45 @@ class TieredBackend(StorageBackend):
         when this returns, or AsyncWriteError raises.  Spills that failed
         earlier (their keys are still dirty with no task in flight) are
         retried once per drain, so a transient durable-tier outage heals
-        on the next barrier instead of wedging forever."""
+        on the next barrier instead of wedging forever.
+
+        ``required=False`` turns failure into *degradation*: spill
+        errors are tolerated, stuck objects stay dirty (still counted by
+        ``pending_spill``/``durability``, retried next barrier) and the
+        drain returns — the honest-degraded-commit path of a disk-over-
+        remote tier during a remote outage.  The barrier then cascades
+        into the durable side so a nested composition drains bottom-up.
+        """
         with self._lock:
             retry = [k for k, v in self._resident.items()
                      if v == "dirty" and k not in self._inflight]
         for k in retry:
             self._enqueue_spill(k)
-        self.pool.drain(SPILL_LANE)
+        try:
+            self.pool.drain(self.lane)
+        except AsyncWriteError:
+            if self.required:
+                raise
+            # Errors consumed; the dirty residents keep the debt honest.
         # Even if this drain's errors were consumed elsewhere (or a prior
         # drain already raised them), a remaining dirty object means the
         # barrier's promise does not hold — say so, never return clean.
         with self._lock:
             stuck = [k for k, v in self._resident.items() if v == "dirty"]
         if stuck:
-            raise AsyncWriteError(
-                f"{len(stuck)} object(s) failed to spill to the durable "
-                f"tier (e.g. {stuck[0]})")
+            if self.required:
+                raise AsyncWriteError(
+                    f"{len(stuck)} object(s) failed to spill to the "
+                    f"durable tier (e.g. {stuck[0]})")
+            with self._lock:
+                self._stats["degraded_drains"] += 1
+            log.warning(
+                "degraded durability barrier: %d object(s) still owed to "
+                "the %s tier (e.g. %s); will retry at the next barrier",
+                len(stuck), self.durable.name, stuck[0])
+        # Cascade: a durability barrier means the whole stack below, not
+        # just the next tier (no-op for single-tier durables).
+        self.durable.drain()
 
     def close(self) -> None:
         with self._lock:
@@ -253,31 +307,64 @@ class TieredBackend(StorageBackend):
         try:
             self.drain()
         finally:
-            # Pools and tiers come down even when the drain raises (the
-            # durability failure has been surfaced; leaking threads on
-            # top of it helps nobody).
-            if self._owns_pool:
-                self.pool.close()
-            self.hot.close()
-            self.durable.close()
+            # Tiers come down even when the drain raises (the durability
+            # failure has been surfaced; leaking threads on top of it
+            # helps nobody).  The durable side closes BEFORE the pool: a
+            # nested durable tier drains its own spill lane on close and
+            # needs the shared pool alive to do it.
+            try:
+                self.durable.close()
+            finally:
+                self.hot.close()
+                if self._owns_pool:
+                    self.pool.close()
 
     # ------------------------------------------------------ introspection
     def locate(self, key: str) -> Optional[str]:
         if self.hot.has(key):
-            return "hot"
-        if self.durable.has(key):
-            return "durable"
-        return None
+            return self.hot_label
+        if self.durable_label is not None:
+            return self.durable_label if self.durable.has(key) else None
+        # Nested composition: let the durable side name its own tier
+        # ("durable" vs "remote" for a disk-over-remote inner tier).
+        return self.durable.locate(key)
 
     def durable_tier(self) -> str:
         return self.durable.durable_tier()
 
-    def pending_spill(self) -> int:
-        """Objects not yet durable — dirty residents, whether their spill
-        task is queued, running, or previously FAILED.  This is what the
-        manifest's durability record keys off, so it must never undercount."""
+    def _own_pending(self) -> int:
         with self._lock:
             return sum(1 for v in self._resident.values() if v == "dirty")
+
+    def pending_spill(self) -> int:
+        """Objects not yet FULLY durable — this tier's dirty residents
+        (whether their spill task is queued, running, or previously
+        FAILED) plus everything the durable side still owes further down.
+        This is what the manifest's durability record keys off, so it
+        must never undercount."""
+        return self._own_pending() + self.durable.pending_spill()
+
+    def durability(self) -> Dict[str, object]:
+        """Recursive durability snapshot: the durable side answers for
+        the stack below; any dirty resident HERE caps ``durable_on`` at
+        this tier's hot label ("hot" for the RAM tier, "durable" for the
+        disk tier of a disk-over-remote composition — the honest
+        degraded commit).  ``tiers`` maps each boundary's label to the
+        objects still owed across it; ``degraded`` is sticky-true when a
+        best-effort (required=False) boundary is behind."""
+        sub = self.durable.durability()
+        own = self._own_pending()
+        out = dict(sub)
+        out["pending_spill"] = own + int(sub.get("pending_spill", 0))
+        tiers = dict(sub.get("tiers", {}))
+        tiers[self.hot_label] = own
+        out["tiers"] = tiers
+        if own and sub.get("durable_on") != "none":
+            # A fully-volatile stack stays "none" no matter what is owed.
+            out["durable_on"] = self.hot_label
+        out["degraded"] = bool(sub.get("degraded")) \
+            or (not self.required and own > 0)
+        return out
 
     def tier_stats(self) -> Dict[str, int]:
         pending = self.pending_spill()
@@ -286,6 +373,20 @@ class TieredBackend(StorageBackend):
         hot_bytes = getattr(self.hot, "total_bytes", None)
         if hot_bytes is not None:
             out["hot_resident_bytes"] = hot_bytes()
+        # Surface the durable side's counters too (retry/hedge/breaker
+        # numbers of a remote tier); on a key collision — a nested tiered
+        # durable has hot_writes/... of its own — prefix with its name.
+        for k, v in self.durable.tier_stats().items():
+            out[k if k not in out else f"{self.durable.name}_{k}"] = v
+        return out
+
+    def tier_backends(self) -> Dict[str, StorageBackend]:
+        out: Dict[str, StorageBackend] = {self.hot_label: self.hot}
+        sub = self.durable.tier_backends()
+        if len(sub) == 1 and self.durable_label is not None:
+            out[self.durable_label] = next(iter(sub.values()))
+        else:
+            out.update(sub)
         return out
 
     def path_of(self, key: str) -> Optional[Path]:

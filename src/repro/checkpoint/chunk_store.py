@@ -63,6 +63,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import json
 import threading
 from collections import Counter
 from pathlib import Path
@@ -73,6 +74,7 @@ import msgpack
 from repro.checkpoint import compression, faults, serial
 from repro.checkpoint import fingerprint as fputil
 from repro.checkpoint.backends import StorageBackend, make_backend
+from repro.checkpoint.backends.retry import RetryPolicy
 # Back-compat alias: the manifest store and several tests import the
 # atomic-write protocol from here; the implementation now lives with the
 # rest of the filesystem IO in the backends package.
@@ -93,6 +95,10 @@ REBASE_EVERY = 4
 # Reconstructed canonical payloads cached for delta encoding (save path
 # diffs against the previous full object without re-reading it every event).
 CANON_CACHE_BYTES = 64 << 20
+# Transient-IO retry schedule for object reads: a flaky backend gets a
+# few quick retries BEFORE the store declares corruption and restore
+# spends a fallback (see docs/resiliency.md).
+READ_RETRY = RetryPolicy(attempts=3, base_delay=0.002, max_delay=0.05)
 
 
 def content_digest(blob: bytes) -> str:
@@ -254,13 +260,18 @@ class ChunkStore:
                  rebase_every: int = REBASE_EVERY,
                  backend: "str | StorageBackend" = "local",
                  spill_threads: int = 2,
-                 hot_budget_bytes: Optional[int] = None):
+                 hot_budget_bytes: Optional[int] = None,
+                 read_retry: Optional[RetryPolicy] = None,
+                 remote_opts: Optional[Dict[str, Any]] = None):
         self.root = Path(root)
         self.codec = compression.resolve_codec(codec)
         self.fsync = fsync
         self.backend = make_backend(backend, self.root, fsync=fsync,
                                     spill_threads=spill_threads,
-                                    hot_budget_bytes=hot_budget_bytes)
+                                    hot_budget_bytes=hot_budget_bytes,
+                                    remote_opts=remote_opts)
+        self.read_retry = read_retry if read_retry is not None \
+            else READ_RETRY
         self.delta = delta
         self.delta_ratio = delta_ratio
         self.rebase_every = max(1, rebase_every)
@@ -278,6 +289,18 @@ class ChunkStore:
         self._inflight: Dict[str, threading.Event] = {}
         self._canon_cache: Dict[str, bytes] = {}
         self._canon_cache_bytes = 0
+        # Monotonic (never reset per event): transient backend-read
+        # errors that a bounded retry absorbed.  The restore engine
+        # delta-samples it into last_stats["io_retries"] — distinct from
+        # fallbacks, which burn a restore candidate.
+        self.io_retries = 0
+        # Digests the scrubber declared unrecoverable (corrupt in every
+        # tier): restore's planner skips them up front so fallback chains
+        # never discover the corruption mid-restore.  Persisted in
+        # QUARANTINE.json next to the manifests; cleared per digest when
+        # a later scrub finds (or rebuilds) a good copy.
+        self._quarantine: Dict[str, Dict[str, Any]] = \
+            self._load_quarantine()
         self.stats: Dict[str, int] = {}
         self.reset_stats()
 
@@ -345,9 +368,72 @@ class ChunkStore:
             self._canon_cache[digest] = canon
             self._canon_cache_bytes += len(canon)
 
+    # ---- quarantine (scrub-demoted digests; see checkpoint/scrub.py) ----
+    @property
+    def quarantine_path(self) -> Path:
+        return self.root / "QUARANTINE.json"
+
+    def _load_quarantine(self) -> Dict[str, Dict[str, Any]]:
+        try:
+            return dict(json.loads(self.quarantine_path.read_bytes()))
+        except FileNotFoundError:
+            return {}
+        except Exception:  # noqa: BLE001 - a mangled sidecar must not
+            return {}      # take the store down; scrub rewrites it
+
+    def quarantined(self, digest: str) -> bool:
+        with self._lock:
+            return digest in self._quarantine
+
+    def quarantine(self) -> Dict[str, Dict[str, Any]]:
+        with self._lock:
+            return {d: dict(v) for d, v in self._quarantine.items()}
+
+    def set_quarantine(self, entries: Dict[str, Dict[str, Any]]) -> None:
+        """Replace the quarantine set (scrubber-only), persisted
+        atomically so a crash never leaves a torn sidecar."""
+        with self._lock:
+            self._quarantine = {d: dict(v) for d, v in entries.items()}
+        if entries:
+            _atomic_write(self.quarantine_path,
+                          json.dumps(entries, indent=2).encode(),
+                          fsync=self.fsync)
+        else:
+            try:
+                self.quarantine_path.unlink()
+            except FileNotFoundError:
+                pass
+
     # ---- object io ----
-    def _read_envelope(self, digest: str) -> Dict[str, Any]:
-        blob = self.backend.read(digest)
+    def _backend_read(self, digest: str) -> bytes:
+        """Backend read with bounded transient-IO retries.
+
+        A flaky-but-alive backend (remote blip, injected error rate)
+        raises OSErrors that are NOT corruption; retrying a few times
+        here keeps restore from burning an older-manifest fallback on a
+        transient.  FileNotFoundError passes straight through (absence
+        is an answer); a transient that survives every retry is then
+        declared corruption so the fallback machinery takes over."""
+        def on_retry(attempt: int, exc: BaseException) -> None:
+            with self._lock:
+                self.io_retries += 1
+
+        try:
+            return self.read_retry.run(
+                lambda: self.backend.read(digest), key=digest,
+                on_retry=on_retry)
+        except FileNotFoundError:
+            raise
+        except OSError as e:
+            raise serial.ChunkCorruption(
+                f"object {digest} unreadable after "
+                f"{self.read_retry.attempts} attempts: {e!r}") from e
+
+    def _parse_envelope(self, digest: str, blob: bytes, *,
+                        remember: bool = True) -> Dict[str, Any]:
+        """Unpack + sanity-check an envelope blob.  ``remember=False``
+        keeps a scrub probe of a possibly-corrupt copy from poisoning
+        the info cache."""
         # Any parse failure of a corrupt envelope must surface as
         # ChunkCorruption so the restore fallback path catches it.
         try:
@@ -358,12 +444,16 @@ class ChunkStore:
         if not isinstance(env, dict) or env.get("v") != OBJECT_VERSION:
             raise serial.ChunkCorruption(
                 f"bad object envelope/version for {digest}")
-        with self._lock:
-            self._info[digest] = {"stored": env.get("format"),
-                                  "base": env.get("base"),
-                                  "codec": env.get("codec"),
-                                  "nbytes": len(blob)}
+        if remember:
+            with self._lock:
+                self._info[digest] = {"stored": env.get("format"),
+                                      "base": env.get("base"),
+                                      "codec": env.get("codec"),
+                                      "nbytes": len(blob)}
         return env
+
+    def _read_envelope(self, digest: str) -> Dict[str, Any]:
+        return self._parse_envelope(digest, self._backend_read(digest))
 
     def object_info(self, digest: str) -> Dict[str, Any]:
         """{"stored": "full"|"delta", "base": digest|None, "nbytes": int}."""
@@ -392,7 +482,7 @@ class ChunkStore:
         The merge engine moves objects between stores (and backends:
         RAM-tier source to durable output) with this + write_object_bytes
         without ever materializing tensors."""
-        return self.backend.read(digest)
+        return self._backend_read(digest)
 
     def write_object_bytes(self, digest: str, blob: bytes) -> int:
         """Store a pre-encoded envelope blob under its digest (atomic,
@@ -413,6 +503,17 @@ class ChunkStore:
             return cached
         env = (session.envelope(digest) if session is not None
                else self._read_envelope(digest))
+        canon = self._canonical_from_env(digest, env, verify=verify,
+                                         session=session)
+        self._canon_remember(digest, canon)
+        return canon
+
+    def _canonical_from_env(self, digest: str, env: Dict[str, Any], *,
+                            verify: bool,
+                            session: Optional[ReadSession] = None) -> bytes:
+        """Resolve an already-parsed envelope to its canonical blob (the
+        decode half of ``read_canonical``, shared with the scrubber's
+        per-tier blob verification)."""
         if env.get("fp") is not None:
             tree, _ = self._tree_from_fp_env(digest, env, verify=verify,
                                              session=session)
@@ -434,8 +535,18 @@ class ChunkStore:
         if (verify and env.get("fp") is None
                 and content_digest(canon) != digest):
             raise serial.ChunkCorruption(f"digest mismatch for {digest}")
-        self._canon_remember(digest, canon)
         return canon
+
+    def verify_object_blob(self, digest: str, blob: bytes) -> Dict[str, Any]:
+        """Full integrity check of one envelope blob AGAINST its digest:
+        parse, resolve to canonical (following delta bases through the
+        store), and compare content/fingerprint digests.  Raises
+        ChunkCorruption on any mismatch; returns the parsed envelope on
+        success.  ``remember=False`` throughout — probing a suspect
+        tier's copy must not poison caches with bad data."""
+        env = self._parse_envelope(digest, blob, remember=False)
+        self._canonical_from_env(digest, env, verify=True, session=None)
+        return env
 
     def _tree_from_fp_env(self, digest: str, env: Dict[str, Any],
                           *, verify: bool,
@@ -843,15 +954,13 @@ class ChunkStore:
 
     def durability(self) -> Dict[str, Any]:
         """What the manifest-commit barrier records: which backend this
-        event's objects live on, which tier (if any) survives process
-        exit, and whether spill had already drained at commit time."""
-        pending = self.backend.pending_spill()
-        durable = self.backend.durable_tier()
-        return {"backend": self.backend.name,
-                "durable_tier": durable,
-                "pending_spill": pending,
-                "durable_on": ("none" if durable == "none"
-                               else "hot" if pending else "durable")}
+        event's objects live on, the deepest durability level every
+        object has reached (``durable_on``), and — for compositions with
+        a best-effort tier — whether the commit is degraded (remote
+        replication still owed).  Tiered backends answer recursively."""
+        d = dict(self.backend.durability())
+        d["backend"] = self.backend.name
+        return d
 
     def close(self) -> None:
         self.backend.close()

@@ -122,6 +122,10 @@ class RestorePlan:
     shard_groups: Dict[Tuple[str, str], Tuple[int, int]] = \
         dataclasses.field(default_factory=dict)
     shards_skipped: int = 0
+    # candidates dropped at plan time because the scrubber quarantined
+    # their object (or its delta base) as unrecoverable — the fallback
+    # chain skipped the demoted manifests up front.
+    quarantined_skipped: int = 0
 
     @property
     def unique_digests(self) -> int:
@@ -197,11 +201,20 @@ def plan_restore(manifests: ManifestStore, store: ChunkStore,
             for kind, entry in kinds.items():
                 older.setdefault((unit, kind), []).append((s, entry))
 
+    quarantined_skipped = [0]  # mutated by readable() below
+
     def readable(c: Candidate) -> bool:
         """Plan-time liveness: digest present and (if delta) base present.
-        Corruption is only discoverable at read time — the executor walks
-        the remaining chain for that."""
+        Undiscovered corruption is only findable at read time — the
+        executor walks the remaining chain for that — but corruption the
+        scrubber already PROVED unrecoverable (quarantined digests) is
+        rejected here, so demoted manifests never enter a chain."""
         if not c.ref.digest or not store.has(c.ref.digest):
+            return False
+        if (store.quarantined(c.ref.digest)
+                or (c.ref.delta_base
+                    and store.quarantined(c.ref.delta_base))):
+            quarantined_skipped[0] += 1
             return False
         return not c.ref.delta_base or store.has(c.ref.delta_base)
 
@@ -342,7 +355,8 @@ def plan_restore(manifests: ManifestStore, store: ChunkStore,
     return RestorePlan(step=manifest.step, meta=dict(manifest.meta),
                        parts=parts, targets=targets, dependents=dependents,
                        shard_groups=shard_groups,
-                       shards_skipped=shards_skipped)
+                       shards_skipped=shards_skipped,
+                       quarantined_skipped=quarantined_skipped[0])
 
 
 class _Placer:
@@ -578,6 +592,7 @@ class RestoreEngine:
         exactly the requested parts plus ``step``.
         """
         t0 = time.time()
+        io_retries0 = self.store.io_retries
         plan = plan_restore(self.manifests, self.store,
                             self.registry.unit_names(), step=step,
                             parts=parts, units=units, owned=owned)
@@ -656,6 +671,13 @@ class RestoreEngine:
             # unit/kind -> manifest step it actually came from (only
             # entries that fell back from the target manifest)
             "fallback_units": fallbacks,
+            # transient backend-read errors a bounded retry absorbed
+            # during THIS restore — distinct from fallbacks, which burn
+            # a manifest candidate (satellite: flaky != corrupt)
+            "io_retries": self.store.io_retries - io_retries0,
+            # plan-time candidates dropped because the scrubber had
+            # quarantined their object as unrecoverable
+            "quarantined_skipped": plan.quarantined_skipped,
             # tier provenance: aggregate object reads per tier, plus the
             # tier every unit/kind (fallbacks included) was served from
             "tier_reads": dict(session.tier_reads),

@@ -109,6 +109,7 @@ class CheckpointManager:
         spill_threads: int = 2,
         hot_budget_bytes: Optional[int] = None,
         spill_barrier: bool = False,
+        remote_opts: Optional[Dict[str, Any]] = None,
     ):
         self.root = Path(root)
         self.registry = registry
@@ -122,7 +123,11 @@ class CheckpointManager:
         # to share one explicitly); the saver then only sizes its own
         # write lane and the spill_threads knob does not apply.
         own_composition = isinstance(store_backend, StorageBackend)
-        tiered = (not own_composition) and store_backend == "tiered"
+        tiered = (not own_composition) and store_backend in ("tiered",
+                                                             "remote3")
+        # remote3 runs TWO spill lanes (RAM→disk and disk→remote) on the
+        # shared pool, so it gets a second helping of spill threads.
+        spill_lanes = 2 if store_backend == "remote3" else 1
         self.transfer_pool: Optional[TransferPool] = None
         if async_save or tiered:
             # The queue is bounded (write-lane backpressure on the
@@ -131,12 +136,14 @@ class CheckpointManager:
             # bounded queue could deadlock with every worker blocked on
             # a full put (see TransferPool).
             self.transfer_pool = TransferPool(
-                writer_threads + (spill_threads if tiered else 0),
+                writer_threads + (spill_threads * spill_lanes
+                                  if tiered else 0),
                 max_queue=0 if tiered else 64)
         backend = make_backend(store_backend, self.root,
                                pool=self.transfer_pool,
                                spill_threads=spill_threads,
-                               hot_budget_bytes=hot_budget_bytes)
+                               hot_budget_bytes=hot_budget_bytes,
+                               remote_opts=remote_opts)
         self.store = ChunkStore(self.root, codec=codec, delta=delta,
                                 backend=backend)
         self.manifests = ManifestStore(self.root)
@@ -535,6 +542,14 @@ class CheckpointManager:
         """Durability barrier: returns once every written object is on
         the durable tier (no-op for single-tier backends)."""
         self.store.drain_spill()
+
+    def scrub(self, *, repair: bool = True) -> Dict[str, Any]:
+        """Store-wide integrity scrub & repair (fsck) over every
+        committed manifest; returns the machine-readable report.  See
+        :class:`repro.checkpoint.scrub.StoreScrubber`."""
+        from repro.checkpoint.scrub import StoreScrubber
+        return StoreScrubber(self.store, self.manifests).scrub(
+            repair=repair)
 
     def close(self) -> None:
         if self.writer is not None:

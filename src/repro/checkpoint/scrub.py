@@ -1,0 +1,279 @@
+"""StoreScrubber — store-wide integrity scrub & repair (fsck).
+
+Silent corruption is the failure mode the restore fallback machinery
+cannot beat on its own: a flipped bit in an object that is never read
+until the one restore that needs it turns a recoverable incident into a
+fire drill.  The scrubber walks every committed manifest, re-verifies
+every referenced object's digest in EVERY tier that holds a copy
+(envelope parse, codec decode, delta-base replay, content/fingerprint
+digest — the same checks a verified read performs, via
+``ChunkStore.verify_object_blob``), and self-heals what it can:
+
+- a tier holding a corrupt copy is repaired **bit-exact** from any tier
+  holding a good one (content addressing makes equal digests carry
+  equal bytes, so cross-tier replication is the repair);
+- the DEEPEST tier missing its copy entirely is backfilled from a good
+  one: a degraded commit (remote outage) whose process died afterwards
+  leaves replication debt no in-memory spill state remembers — the
+  scrub is what restores full replication after the restart;
+- an object corrupt in *every* tier is re-derived when possible: if the
+  store's canonical cache still holds its payload (scrub-after-save in
+  the same process), a fresh full envelope is rebuilt under the same
+  digest — valid because canonical-addressed digests hash the payload,
+  not the envelope bytes;
+- anything else is **unrecoverable**: the digest is quarantined (with
+  manifest provenance) so restore's planner skips the affected
+  manifests up front instead of discovering the corruption mid-restore.
+
+Objects are verified bases-before-dependents (a delta replays through
+its base, so repairing the base first keeps a healthy dependent from
+being misdiagnosed).  The scrub emits a machine-readable fsck report —
+schema in docs/resiliency.md — and a later scrub that finds a digest
+healthy again (an operator restored the bytes) releases its quarantine.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+import msgpack
+
+from repro.checkpoint import serial
+from repro.checkpoint.chunk_store import ChunkStore, content_digest
+from repro.core.manifest import ManifestStore
+
+log = logging.getLogger("repro.checkpoint.scrub")
+
+REPORT_VERSION = 1
+
+
+class StoreScrubber:
+    """Walks committed manifests and verifies/repairs every referenced
+    object across all storage tiers.  ``repair=False`` turns the scrub
+    into a pure audit (report only, no writes, no quarantine update)."""
+
+    def __init__(self, store: ChunkStore,
+                 manifests: Optional[ManifestStore] = None) -> None:
+        self.store = store
+        self.manifests = manifests or ManifestStore(store.root)
+
+    # ------------------------------------------------------------ walk
+    def _collect(self) -> Tuple[Dict[str, Dict[str, Any]], List[int]]:
+        """digest -> {"manifests": [steps], "units": [(unit, kind)]}
+        over every committed manifest, plus the step list walked."""
+        prov: Dict[str, Dict[str, Any]] = {}
+        steps = self.manifests.all_steps()
+        for step in steps:
+            m = self.manifests.load(step)
+            if m is None:  # racing deletion by retention GC
+                continue
+            for digest, sites in m.digest_provenance().items():
+                rec = prov.setdefault(digest,
+                                      {"manifests": [], "units": []})
+                rec["manifests"].append(step)
+                for unit, kind, _role in sites:
+                    if (unit, kind) not in rec["units"]:
+                        rec["units"].append((unit, kind))
+        return prov, steps
+
+    def _base_of(self, digest: str) -> Optional[str]:
+        """Lenient envelope peek for dependency ordering: the delta base
+        of ``digest`` per the first tier whose copy parses (None when no
+        copy parses — ordering then treats it as a leaf)."""
+        for tier in self.store.backend.tier_backends().values():
+            try:
+                if not tier.has(digest):
+                    continue
+                env = msgpack.unpackb(tier.read(digest), raw=False)
+                if isinstance(env, dict):
+                    return env.get("base")
+            except Exception:  # noqa: BLE001 - corrupt copies expected here
+                continue
+        return None
+
+    def _ordered(self, digests: Set[str]) -> List[str]:
+        """Bases before dependents (delta chains verify bottom-up)."""
+        base_of = {d: self._base_of(d) for d in digests}
+        order: List[str] = []
+        seen: Set[str] = set()
+
+        def visit(d: str, trail: Set[str]) -> None:
+            if d in seen or d not in digests:
+                return
+            b = base_of.get(d)
+            if b and b not in trail:  # trail guards a corrupt base cycle
+                visit(b, trail | {d})
+            if d not in seen:
+                seen.add(d)
+                order.append(d)
+
+        for d in sorted(digests):  # sorted => deterministic reports
+            visit(d, set())
+        return order
+
+    # ---------------------------------------------------------- verify
+    def _check_tier(self, label: str, tier, digest: str) -> Optional[bool]:
+        """True = good copy, False = corrupt copy, None = no copy."""
+        try:
+            if not tier.has(digest):
+                return None
+            blob = tier.read(digest)
+        except FileNotFoundError:
+            return None
+        except OSError:
+            # Tier unreachable (remote outage): not evidence of
+            # corruption — skip it this scrub rather than "repairing" a
+            # copy we cannot see.
+            log.warning("scrub: tier %s unreachable for %s; skipping",
+                        label, digest)
+            return None
+        try:
+            self.store.verify_object_blob(digest, blob)
+            return True
+        except serial.ChunkCorruption:
+            return False
+
+    def _rederive(self, digest: str) -> Optional[bytes]:
+        """Rebuild a full envelope blob for ``digest`` when no tier holds
+        a good copy: from the store's canonical cache (same-process
+        scrub-after-save).  Only canonical-addressed objects — an
+        fp-addressed digest hashes its fingerprint table, which is gone
+        with the envelope."""
+        canon = self.store._canon_cached(digest)
+        if canon is None or content_digest(canon) != digest:
+            return None
+        env = {"v": 1, "format": "full", "codec": "none", "payload": canon}
+        return msgpack.packb(env, use_bin_type=True)
+
+    # ------------------------------------------------------------ scrub
+    def scrub(self, *, repair: bool = True) -> Dict[str, Any]:
+        """Verify every manifest-referenced object in every tier; repair
+        what a good copy (or re-derivation) allows; quarantine the rest.
+        Returns the machine-readable fsck report."""
+        t0 = time.monotonic()
+        self.store.drain_spill()  # settle in-flight spills first
+        prov, steps = self._collect()
+        tiers = self.store.backend.tier_backends()
+        checked_tiers = {label: 0 for label in tiers}
+        healthy: List[str] = []
+        repaired: List[Dict[str, Any]] = []
+        unrecoverable: List[Dict[str, Any]] = []
+        bad_digests: Set[str] = set()
+
+        for digest in self._ordered(set(prov)):
+            verdicts = {}
+            for label, tier in tiers.items():
+                v = self._check_tier(label, tier, digest)
+                if v is not None:
+                    checked_tiers[label] += 1
+                    verdicts[label] = v
+            good = [lbl for lbl, ok in verdicts.items() if ok]
+            bad = [lbl for lbl, ok in verdicts.items() if not ok]
+            # Replication debt: the deepest tier has NO copy (a degraded
+            # commit's process died before the remote outage healed — no
+            # in-memory spill state survives to retry it).  Absence from
+            # a faster tier is normal (eviction), absence from the last
+            # one is debt the scrub backfills.
+            deepest = next(reversed(tiers)) if len(tiers) > 1 else None
+            missing_deep = (deepest is not None and good
+                            and deepest not in verdicts)
+            if good and not bad and not missing_deep:
+                healthy.append(digest)
+                continue
+            if good:  # replicate the good copy over corrupt/missing ones
+                src = good[0]
+                fix = bad + ([deepest] if missing_deep else [])
+                if repair:
+                    blob = tiers[src].read(digest)
+                    for lbl in fix:
+                        try:
+                            tiers[lbl].write(digest, blob)
+                        except OSError as e:
+                            # Tier unreachable mid-repair (remote outage):
+                            # the good copies stand; retried next scrub.
+                            log.warning("scrub: repair write of %s to "
+                                        "tier %s failed (%s)", digest,
+                                        lbl, e)
+                if bad:
+                    repaired.append({"digest": digest, "bad_tiers": bad,
+                                     "repaired_from": src,
+                                     "method": "replicate",
+                                     "repaired": bool(repair)})
+                if missing_deep:
+                    repaired.append({"digest": digest,
+                                     "bad_tiers": [deepest],
+                                     "repaired_from": src,
+                                     "method": "backfill",
+                                     "repaired": bool(repair)})
+                continue
+            blob = self._rederive(digest) if repair else None
+            if blob is not None:
+                for lbl in (bad or list(tiers)):
+                    tiers[lbl].write(digest, blob)
+                repaired.append({"digest": digest, "bad_tiers": bad,
+                                 "repaired_from": "canonical-cache",
+                                 "method": "rederive", "repaired": True})
+                continue
+            reason = ("corrupt in every tier" if bad
+                      else "missing from every tier")
+            unrecoverable.append({
+                "digest": digest, "reason": reason, "bad_tiers": bad,
+                "manifests": prov[digest]["manifests"],
+                "units": [list(uk) for uk in prov[digest]["units"]],
+            })
+            bad_digests.add(digest)
+
+        demoted = sorted({s for rec in unrecoverable
+                          for s in rec["manifests"]})
+        released: List[str] = []
+        if repair:
+            # Quarantine update: add this scrub's unrecoverables, release
+            # digests that verify again (operator restored the bytes).
+            q = self.store.quarantine()
+            released = [d for d in q
+                        if d not in bad_digests and d in prov]
+            for d in released:
+                q.pop(d, None)
+            for rec in unrecoverable:
+                q[rec["digest"]] = {"reason": rec["reason"],
+                                    "manifests": rec["manifests"],
+                                    "units": rec["units"]}
+            self.store.set_quarantine(q)
+
+        report = {
+            "v": REPORT_VERSION,
+            "manifest_steps": steps,
+            "checked_objects": len(prov),
+            "checked_tiers": checked_tiers,
+            "healthy": len(healthy),
+            "repaired": repaired,
+            "unrecoverable": unrecoverable,
+            "demoted_manifests": demoted,
+            "released_from_quarantine": released,
+            "quarantined": len(self.store.quarantine()),
+            "repair": bool(repair),
+            "elapsed_s": round(time.monotonic() - t0, 6),
+        }
+        if repaired or unrecoverable:
+            log.warning(
+                "scrub: %d object(s) checked, %d repaired, %d "
+                "unrecoverable (manifests demoted: %s)", len(prov),
+                len(repaired), len(unrecoverable), demoted or "none")
+        else:
+            log.info("scrub: %d object(s) checked, all healthy",
+                     len(prov))
+        return report
+
+
+def scrub_root(root, *, backend: "str | Any" = "local",
+               repair: bool = True,
+               remote_opts: Optional[Dict[str, Any]] = None
+               ) -> Dict[str, Any]:
+    """Offline convenience: open ``root`` read-only-ish, scrub, close.
+    ``backend`` accepts the same knob as ChunkStore (or an instance)."""
+    store = ChunkStore(root, backend=backend, remote_opts=remote_opts)
+    try:
+        return StoreScrubber(store).scrub(repair=repair)
+    finally:
+        store.close()

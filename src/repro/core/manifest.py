@@ -105,6 +105,24 @@ class Manifest:
                         counts[ref.delta_base] += 1
         return counts
 
+    def digest_provenance(self) -> Dict[str, List[Tuple[str, str, str]]]:
+        """Digest -> [(unit, kind, role)] for every object this manifest
+        depends on; role is "entry" (directly referenced) or "base" (a
+        delta base the entry replays through).  The scrubber's fsck
+        report uses this to say *whose* bytes an unrecoverable object
+        was — and which manifests a quarantined digest demotes."""
+        prov: Dict[str, List[Tuple[str, str, str]]] = {}
+        for unit, kinds in self.entries.items():
+            for kind, entry in kinds.items():
+                for ref in entry_refs(entry):
+                    if ref.digest:
+                        prov.setdefault(ref.digest, []).append(
+                            (unit, kind, "entry"))
+                    if ref.delta_base:
+                        prov.setdefault(ref.delta_base, []).append(
+                            (unit, kind, "base"))
+        return prov
+
     def staleness(self) -> Dict[str, int]:
         """Per unit: how many steps behind the manifest step its chunk is."""
         return {u: self.step - max(r.step

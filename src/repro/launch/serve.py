@@ -128,9 +128,12 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--from-ckpt")
     ap.add_argument("--store-backend", default="local",
-                    choices=["local", "memory", "tiered"],
-                    help="IO tier for --from-ckpt weight loading (tiered "
-                         "promotes read objects into the RAM tier)")
+                    choices=["local", "memory", "tiered", "remote",
+                             "remote3"],
+                    help="IO tier for --from-ckpt weight loading (tiered/"
+                         "remote3 promote read objects into the RAM tier; "
+                         "remote3 re-warms a lost disk copy from the "
+                         "remote tier)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     print(json.dumps(serve(arch=args.arch, batch=args.batch,

@@ -144,6 +144,7 @@ class Supervisor:
         participants: Sequence[int] = (1,),
         injections: Sequence[Injection] = (),
         verify_restore: bool = False,
+        scrub_on_restart: bool = False,
         max_restarts: int = 2,
         attempt_timeout: float = 600.0,
         poll: float = 0.05,
@@ -162,6 +163,7 @@ class Supervisor:
         self.participants = [int(p) for p in participants] or [1]
         self.injections = list(injections)
         self.verify_restore = verify_restore
+        self.scrub_on_restart = scrub_on_restart
         self.max_restarts = int(max_restarts)
         self.attempt_timeout = float(attempt_timeout)
         self.poll = float(poll)
@@ -218,6 +220,27 @@ class Supervisor:
         from repro.launch.elastic import probe_restore
         return probe_restore(self.ckpt_dir, self.arch,
                              store_backend=self.store_backend)
+
+    def _scrub(self) -> Optional[Dict[str, Any]]:
+        """Pre-relaunch integrity scrub (fsck): a crash is exactly when
+        bit-rot or a torn tier copy surfaces, so repair/quarantine BEFORE
+        the next attempt plans its restore.  The scrub runs in the
+        supervisor process against the tiers that survive the dead child
+        ("local" disk view for RAM-hot backends — a child's hot tier died
+        with it)."""
+        if not self.scrub_on_restart:
+            return None
+        if _latest_committed(self.ckpt_dir) is None:
+            return None
+        from repro.checkpoint.scrub import scrub_root
+        backend = (self.store_backend
+                   if self.store_backend in ("remote", "remote3")
+                   else "local")
+        rep = scrub_root(self.ckpt_dir, backend=backend)
+        return {"checked_objects": rep["checked_objects"],
+                "repaired": len(rep["repaired"]),
+                "unrecoverable": len(rep["unrecoverable"]),
+                "demoted_manifests": rep["demoted_manifests"]}
 
     # ---------------------------------------------------------------- run
     def run(self) -> Dict[str, Any]:
@@ -295,6 +318,9 @@ class Supervisor:
                         f"(exit {exit_code}) exceed max_restarts="
                         f"{self.max_restarts}; last attempt log: "
                         f"{child_log}")
+            scrub = self._scrub()
+            if scrub is not None:
+                interruption["scrub"] = scrub
             probe = self._probe()
             if probe is not None:
                 interruption["restore_probe"] = probe
@@ -339,6 +365,14 @@ class Supervisor:
             "mttr_seconds_mean": (sum(mttrs) / len(mttrs)
                                   if mttrs else None),
             "step_executions": step_executions,
+            # scrub-on-restart accounting (fsck between attempts)
+            "scrubs_run": sum(1 for i in interruptions if "scrub" in i),
+            "scrub_repaired_total": sum(
+                i["scrub"]["repaired"] for i in interruptions
+                if "scrub" in i),
+            "scrub_unrecoverable_total": sum(
+                i["scrub"]["unrecoverable"] for i in interruptions
+                if "scrub" in i),
             "goodput_steps": (self.steps / step_executions
                               if step_executions else None),
             "goodput_wall": (max(0.0, 1.0 - (lost_seconds + sum(mttrs))
@@ -419,6 +453,10 @@ def main() -> None:
                     help="kind:step[:point], e.g. kill:11, sigterm:30, "
                          "crash:12:spill (repeatable; one per attempt)")
     ap.add_argument("--verify-restore", action="store_true")
+    ap.add_argument("--scrub-on-restart", action="store_true",
+                    help="run the store-wide integrity scrub (fsck) "
+                         "between attempts: repair corrupt tier copies, "
+                         "quarantine the unrecoverable before relaunch")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
@@ -436,6 +474,7 @@ def main() -> None:
         store_backend=args.store_backend,
         participants=[int(p) for p in args.participants.split(",")],
         injections=injections, verify_restore=args.verify_restore,
+        scrub_on_restart=args.scrub_on_restart,
         seed=args.seed)
     report = sup.run()
     try:

@@ -116,6 +116,8 @@ def train(
     spill_threads: int = 2,
     hot_budget_mb: Optional[int] = None,
     spill_barrier: bool = False,
+    remote_opts: Optional[Dict] = None,
+    scrub_on_start: bool = False,
     shard_participants: int = 1,
     resume: bool = False,
     fail_at: Optional[Union[int, str]] = None,
@@ -143,7 +145,8 @@ def train(
                             spill_threads=spill_threads,
                             hot_budget_bytes=(hot_budget_mb * 2**20
                                               if hot_budget_mb else None),
-                            spill_barrier=spill_barrier)
+                            spill_barrier=spill_barrier,
+                            remote_opts=remote_opts)
     tracker = DeltaTracker(registry) if policy_name == "topk_delta" else None
     # Shard-native save path: N virtual participants (threads) each
     # gather/fingerprint only their owned slices and the manifest commits
@@ -175,6 +178,17 @@ def train(
                         "thread; preemption handling disabled")
 
     progress = _Progress(progress_file)
+
+    scrub_report = None
+    if scrub_on_start:
+        # fsck before touching the store: repair bit-rot from any good
+        # tier copy and quarantine the unrecoverable so a resume's
+        # restore plan skips demoted manifests up front.
+        scrub_report = mgr.scrub()
+        log.info("scrub-on-start: %d object(s) checked, %d repaired, "
+                 "%d unrecoverable", scrub_report["checked_objects"],
+                 len(scrub_report["repaired"]),
+                 len(scrub_report["unrecoverable"]))
 
     if resume:
         like = steps_lib.state_specs(model)
@@ -303,6 +317,8 @@ def train(
         "store_backend": store_backend,
         "spill_drain_seconds": spill_drain_seconds,
         "tier_stats": tier_stats,
+        # fsck report of the scrub-on-start pass (None when not run)
+        "scrub_report": scrub_report,
         # sharded-save accounting (1 = classic global-array save)
         "shard_participants": shard_participants,
     }
@@ -325,9 +341,25 @@ def main() -> None:
     ap.add_argument("--codec", default="auto",
                     choices=["auto", "zstd", "none", "int8"])
     ap.add_argument("--store-backend", default="local",
-                    choices=["local", "memory", "tiered"],
+                    choices=["local", "memory", "tiered", "remote",
+                             "remote3"],
                     help="object IO tier: local POSIX tree, volatile RAM, "
-                         "or RAM hot tier with async spill to disk")
+                         "RAM hot tier with async spill to disk, simulated "
+                         "remote object store, or the three-tier "
+                         "RAM -> disk -> remote composition")
+    ap.add_argument("--remote-latency", type=float, default=0.0,
+                    help="remote/remote3: simulated per-op latency (s)")
+    ap.add_argument("--remote-error-rate", type=float, default=0.0,
+                    help="remote/remote3: seeded probabilistic per-op "
+                         "fault rate of the simulated service")
+    ap.add_argument("--remote-seed", type=int, default=0,
+                    help="remote/remote3: fault-schedule seed (a given "
+                         "seed replays the same transient faults)")
+    ap.add_argument("--scrub-on-start", action="store_true",
+                    help="run the store-wide integrity scrub (fsck) "
+                         "before training/resume: repair corrupt tier "
+                         "copies from any good one, quarantine the "
+                         "unrecoverable")
     ap.add_argument("--spill-threads", type=int, default=2,
                     help="tiered backend: threads on the spill lane of "
                          "the shared transfer pool")
@@ -376,6 +408,10 @@ def main() -> None:
                 spill_threads=args.spill_threads,
                 hot_budget_mb=args.hot_budget_mb,
                 spill_barrier=args.spill_barrier,
+                remote_opts={"latency": args.remote_latency,
+                             "error_rate": args.remote_error_rate,
+                             "seed": args.remote_seed},
+                scrub_on_start=args.scrub_on_start,
                 shard_participants=args.shard_participants,
                 resume=args.resume, fail_at=args.fail_at,
                 fail_mode=args.fail_mode,

@@ -524,3 +524,103 @@ def test_sweep_tmp_spares_own_process_inflight_tmp_files(tmp_path):
     assert not stale.exists()
     assert live.exists(), "sweep unlinked a live in-flight write"
     assert freed == len(b"old")
+
+
+# --------------------------------------------- durability of rename itself
+def test_atomic_write_fsyncs_parent_directory(tmp_path, monkeypatch):
+    """Regression (durability gap): fsyncing the tmp file makes its BYTES
+    durable, but the directory entry published by os.replace lives in the
+    parent directory's data — without a directory fsync a "durable"
+    object can vanish from the namespace on power loss.  atomic_write
+    with fsync=True must fsync (at least) one directory fd."""
+    import os
+    import stat
+
+    from repro.checkpoint.backends.localfs import atomic_write
+
+    synced = []
+    real_fsync = os.fsync
+
+    def spy(fd):
+        synced.append(stat.S_ISDIR(os.fstat(fd).st_mode))
+        return real_fsync(fd)
+
+    monkeypatch.setattr(os, "fsync", spy)
+    atomic_write(tmp_path / "obj.chunk", b"payload", fsync=True)
+    assert any(synced), "no directory fd was fsynced after os.replace"
+    assert sum(1 for is_dir in synced if not is_dir) == 1  # the file once
+
+    # fsync=False must not fsync anything (the fast volatile path)
+    synced.clear()
+    atomic_write(tmp_path / "obj2.chunk", b"payload", fsync=False)
+    assert synced == []
+
+
+# ------------------------------------------------- seeded fault injection
+def test_faulty_seeded_error_rate_is_deterministic(tmp_path):
+    """error_rate_write/read draw per-op Bernoulli faults from a hash of
+    (seed, kind, op-index): the same seed replays the same fault
+    schedule, a different seed draws a different one, and rate=0 never
+    fires."""
+    def schedule(seed, rate, n=200):
+        be = FaultInjectingBackend(MemoryBackend(),
+                                   error_rate_write=rate, seed=seed)
+        hits = []
+        for i in range(n):
+            try:
+                be.write(f"k{i}", b"x")
+                hits.append(False)
+            except OSError:
+                hits.append(True)
+        return hits
+
+    a = schedule(7, 0.2)
+    assert a == schedule(7, 0.2), "same seed must replay identically"
+    assert a != schedule(8, 0.2), "different seed, different schedule"
+    assert any(a) and not all(a)
+    assert 0.05 < sum(a) / len(a) < 0.5  # roughly the requested rate
+    assert not any(schedule(7, 0.0))
+
+    # read-path schedule is independent of the write-path one
+    be = FaultInjectingBackend(MemoryBackend(), error_rate_read=1.0,
+                               seed=3)
+    be.write("k", b"x")  # writes unaffected
+    with pytest.raises(OSError):
+        be.read("k")
+    be.heal()
+    assert be.read("k") == b"x"
+
+
+def test_chunk_store_read_retries_transient_then_succeeds(tmp_path):
+    """A transient IO error on the read path is absorbed by a bounded
+    retry (counted in io_retries), NOT declared corruption — restore
+    must not burn an older-manifest fallback on a flaky disk."""
+    from repro.checkpoint import RetryPolicy
+
+    faulty = FaultInjectingBackend(LocalFSBackend(tmp_path / "objects"),
+                                   error_on_read={1})
+    store = ChunkStore(tmp_path, backend=faulty,
+                       read_retry=RetryPolicy(attempts=3,
+                                              base_delay=0.001,
+                                              max_delay=0.002))
+    ref = store.write(1, "u", "weights", _tree(5))
+    out, _ = store.read(ref)  # first read op faults, retry lands
+    np.testing.assert_array_equal(out["w"], _tree(5)["w"])
+    assert store.io_retries == 1
+
+
+def test_chunk_store_read_exhausted_retries_is_corruption(tmp_path):
+    """A persistent IO error (every attempt fails) surfaces as
+    ChunkCorruption so the restore fallback machinery takes over."""
+    from repro.checkpoint import ChunkCorruption, RetryPolicy
+
+    faulty = FaultInjectingBackend(LocalFSBackend(tmp_path / "objects"),
+                                   error_on_read="all")
+    store = ChunkStore(tmp_path, backend=faulty,
+                       read_retry=RetryPolicy(attempts=3,
+                                              base_delay=0.001,
+                                              max_delay=0.002))
+    ref = store.write(1, "u", "weights", _tree(6))
+    with pytest.raises(ChunkCorruption):
+        store.read(ref)
+    assert store.io_retries == 2  # attempts-1 retries, all burned

@@ -1,0 +1,293 @@
+"""The fault-tolerant remote tier: retry policy, circuit breaker,
+hedged GETs, the simulated object service's multipart/ranged protocol,
+and the three-tier remote3 composition (degraded commits, healing)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    ChunkStore,
+    CircuitBreaker,
+    RemoteBackend,
+    RemoteUnavailable,
+    RetryPolicy,
+    SimulatedObjectService,
+)
+from repro.checkpoint.backends.retry import LatencyTracker
+
+
+def _svc(tmp_path, **kw):
+    return SimulatedObjectService(tmp_path / "remote", **kw)
+
+
+def _fast_policy(**kw):
+    kw.setdefault("attempts", 3)
+    kw.setdefault("base_delay", 0.001)
+    kw.setdefault("max_delay", 0.002)
+    return RetryPolicy(**kw)
+
+
+# ------------------------------------------------------------ retry policy
+def test_retry_policy_bounded_and_deterministic():
+    pol = _fast_policy(attempts=4)
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("transient")
+        return "ok"
+
+    retries = []
+    out = pol.run(flaky, key="k",
+                  on_retry=lambda a, e: retries.append(a), sleep=lambda s: None)
+    assert out == "ok" and len(calls) == 3 and len(retries) == 2
+    # jitter is a pure function of (seed, key, attempt)
+    assert pol.delay("k", 1) == pol.delay("k", 1)
+    assert pol.delay("k", 1) != pol.delay("other", 1)
+    # exhausted attempts re-raise the final error
+    with pytest.raises(OSError):
+        pol.run(lambda: (_ for _ in ()).throw(OSError("down")),
+                key="k", sleep=lambda s: None)
+
+
+def test_retry_policy_never_retries_not_found_or_corruption():
+    pol = _fast_policy()
+    calls = []
+
+    def absent():
+        calls.append(1)
+        raise FileNotFoundError("no such key")
+
+    with pytest.raises(FileNotFoundError):
+        pol.run(absent, key="k", sleep=lambda s: None)
+    assert len(calls) == 1, "absence is an answer, not a transient"
+
+
+def test_circuit_breaker_opens_and_half_open_probe():
+    t = [0.0]
+    br = CircuitBreaker(failures=3, cooldown=1.0, clock=lambda: t[0])
+    assert br.state == "closed" and br.allow()
+    for _ in range(3):
+        br.record_failure()
+    assert br.state == "open" and br.opens == 1
+    assert not br.allow(), "open circuit fails fast"
+    t[0] = 1.5  # cooldown elapsed: probes may run again
+    assert br.allow() and br.state == "half-open"
+    br.record_failure()  # probe failed: back to open
+    assert br.state == "open" and br.opens == 2
+    t[0] = 3.0
+    assert br.allow()
+    br.record_success()  # probe succeeded: closed again
+    assert br.state == "closed" and br.allow()
+
+
+def test_latency_tracker_percentile_needs_min_samples():
+    lt = LatencyTracker(min_samples=4)
+    for v in (0.01, 0.02):
+        lt.record(v)
+    assert lt.percentile(95) is None
+    for v in (0.01, 0.015):
+        lt.record(v)
+    p = lt.percentile(95)
+    assert p is not None and 0.01 <= p <= 0.02
+
+
+# ------------------------------------------------- simulated object service
+def test_service_multipart_put_ranged_get(tmp_path):
+    svc = _svc(tmp_path)
+    be = RemoteBackend(svc, policy=_fast_policy(), part_size=8,
+                       range_bytes=8, hedge=False)
+    data = bytes(range(20))
+    be.write("aabbcc", data)
+    assert svc.ops["put_part"] == 3  # ceil(20/8) parts
+    assert be.read("aabbcc") == data
+    assert svc.ops["get"] == 3  # ranged reads
+    assert be.size("aabbcc") == 20
+    # zero-byte object publishes and reads back
+    be.write("dd0000", b"")
+    assert be.read("dd0000") == b""
+    with pytest.raises(FileNotFoundError):
+        be.read("ee0000")
+    assert be.delete("aabbcc") == 20
+    assert not be.has("aabbcc")
+
+
+def test_service_abandoned_upload_never_torn_and_swept(tmp_path, monkeypatch):
+    svc = _svc(tmp_path)
+    be = RemoteBackend(svc, policy=_fast_policy(attempts=1), part_size=4,
+                       hedge=False)
+    # die after the first part: no object may be visible
+    real = svc.put_part
+    calls = []
+
+    def dying(upload, index, data, **kw):
+        calls.append(index)
+        if index == 1:
+            raise OSError("writer died")
+        return real(upload, index, data, **kw)
+
+    monkeypatch.setattr(svc, "put_part", dying)
+    with pytest.raises(OSError):
+        be.write("aa1111", b"0123456789")
+    assert not be.has("aa1111"), "partial upload must never publish"
+    monkeypatch.setattr(svc, "put_part", real)
+    # another process's stage is reclaimable garbage
+    stage = svc.root / "uploads" / "aa1111.fffff-1-1"
+    stage.mkdir(parents=True)
+    (stage / "part-000000").write_bytes(b"zzzz")
+    assert svc.sweep_uploads() == 4
+    assert not stage.exists()
+
+
+def test_remote_retries_absorb_seeded_faults_clean_path_free(tmp_path):
+    svc = _svc(tmp_path, error_rate=0.3, seed=11)
+    be = RemoteBackend(svc, policy=_fast_policy(attempts=6),
+                       breaker=CircuitBreaker(failures=50), hedge=False)
+    data = b"x" * 64
+    for i in range(4):
+        be.write(f"aa{i:04d}", data)
+        assert be.read(f"aa{i:04d}") == data
+    flaky = be.tier_stats()["remote_retries"]
+    assert flaky > 0, "error_rate=0.3 must force retries"
+    svc.error_rate = 0.0
+    before = be.tier_stats()["remote_retries"]
+    be.write("bb0000", data)
+    assert be.read("bb0000") == data
+    assert be.tier_stats()["remote_retries"] == before, \
+        "clean path must not retry"
+
+
+def test_remote_breaker_opens_on_outage_then_fast_fails(tmp_path):
+    svc = _svc(tmp_path)
+    be = RemoteBackend(svc, policy=_fast_policy(attempts=2),
+                       breaker=CircuitBreaker(failures=2, cooldown=60.0),
+                       hedge=False)
+    be.write("aa0001", b"payload")
+    svc.set_outage(True)
+    with pytest.raises(OSError):
+        be.read("aa0001")
+    assert be.tier_stats()["remote_breaker_state"] == "open"
+    with pytest.raises(RemoteUnavailable):
+        be.read("aa0001")
+    stats = be.tier_stats()
+    assert stats["remote_fast_fails"] >= 1
+    assert stats["remote_breaker_opens"] == 1
+    # soft-failing probes degrade instead of raising
+    assert be.has("aa0001") is False
+    assert be.delete("aa0001") == 0
+    assert list(be.keys()) == []
+    assert stats["remote_soft_fails"] < be.tier_stats()["remote_soft_fails"]
+
+
+def test_remote_outage_marker_is_cross_instance(tmp_path):
+    """The OUTAGE marker lives in the bucket directory, so a supervisor
+    process can fail a child's remote without sharing state."""
+    svc1 = _svc(tmp_path)
+    svc2 = SimulatedObjectService(tmp_path / "remote")
+    svc1.set_outage(True)
+    be2 = RemoteBackend(svc2, policy=_fast_policy(attempts=1), hedge=False)
+    with pytest.raises(OSError):
+        be2.read("aa0001")
+    svc1.heal()
+    be2.write("aa0001", b"ok")
+    assert be2.read("aa0001") == b"ok"
+
+
+def test_remote_hedged_get_races_slow_primary(tmp_path):
+    svc = _svc(tmp_path, latency=0.001)
+    be = RemoteBackend(svc, policy=_fast_policy(),
+                       hedge=True, hedge_min_delay=0.02)
+    be.write("aa0001", b"payload")
+    for _ in range(6):  # warm the latency tracker past min_samples
+        assert be.read("aa0001") == b"payload"
+    assert be.tier_stats()["remote_hedges"] == 0, \
+        "fast reads must not hedge"
+    # one giant latency spike on the next get op: the primary stalls
+    # past hedge_after and the hedged second GET wins the race
+    n_next_get = svc._op_n + 1
+    svc.spike_ops = {n_next_get}
+    svc.spike_latency = 1.0
+    t0 = time.monotonic()
+    assert be.read("aa0001") == b"payload"
+    elapsed = time.monotonic() - t0
+    stats = be.tier_stats()
+    assert stats["remote_hedges"] == 1
+    assert stats["remote_hedge_wins"] == 1
+    assert elapsed < 0.9, "hedged GET should beat the 1s spike"
+    be.close()
+
+
+def test_remote_per_op_timeout_is_transient(tmp_path):
+    svc = _svc(tmp_path, latency=0.05)
+    be = RemoteBackend(svc, policy=_fast_policy(attempts=2, timeout=0.005),
+                       hedge=False)
+    with pytest.raises(OSError):
+        be.write("aa0001", b"payload")  # every op exceeds the budget
+    assert be.tier_stats()["remote_retries"] >= 1
+
+
+# ------------------------------------------------------ remote3 composition
+def test_remote3_three_tier_labels_and_durability(tmp_path):
+    store = ChunkStore(tmp_path, backend="remote3",
+                       remote_opts={"latency": 0.0, "seed": 1})
+    tree = {"w": np.arange(64, dtype=np.float32)}
+    ref = store.write(1, "u", "weights", tree)
+    tb = store.backend.tier_backends()
+    assert list(tb) == ["hot", "durable", "remote"]
+    store.drain_spill()
+    d = store.durability()
+    assert d["durable_on"] == "remote" and not d["degraded"]
+    assert d["tiers"] == {"hot": 0, "durable": 0}
+    # every tier holds the object
+    assert tb["hot"].has(ref.digest)
+    assert tb["durable"].has(ref.digest)
+    assert tb["remote"].has(ref.digest)
+    assert store.locate(ref.digest) == "hot"
+    store.close()
+
+
+def test_remote3_outage_degrades_then_heals(tmp_path):
+    store = ChunkStore(tmp_path, backend="remote3",
+                       remote_opts={"latency": 0.0, "seed": 1,
+                                    "attempts": 2, "base_delay": 0.001,
+                                    "failures": 2, "cooldown": 0.02})
+    svc = store.backend.tier_backends()["remote"].service
+    svc.set_outage(True)
+    tree = {"w": np.arange(32, dtype=np.float32)}
+    ref = store.write(1, "u", "weights", tree)
+    store.drain_spill()  # must NOT raise: remote tier is best-effort
+    d = store.durability()
+    assert d["durable_on"] == "durable" and d["degraded"]
+    assert d["pending_spill"] == 1
+    assert store.backend.tier_backends()["durable"].has(ref.digest)
+    svc.heal()
+    time.sleep(0.03)  # past breaker cooldown
+    store.drain_spill()
+    d = store.durability()
+    assert d["durable_on"] == "remote" and not d["degraded"]
+    assert store.backend.tier_backends()["remote"].has(ref.digest)
+    store.close()
+
+
+def test_remote3_restart_reads_from_remote_and_rewarns_disk(tmp_path):
+    """A lost disk blob re-warms from the remote tier on read
+    (promotion-on-read on the inner boundary)."""
+    store = ChunkStore(tmp_path, backend="remote3",
+                       remote_opts={"latency": 0.0, "seed": 1})
+    tree = {"w": np.arange(48, dtype=np.float32)}
+    ref = store.write(1, "u", "weights", tree)
+    store.drain_spill()
+    store.close()
+    # restart with the disk tree gone: only the bucket survives
+    disk = tmp_path / "objects"
+    for p in disk.glob("*/*.chunk"):
+        p.unlink()
+    store2 = ChunkStore(tmp_path, backend="remote3",
+                        remote_opts={"latency": 0.0, "seed": 1})
+    out, _ = store2.read(ref)
+    np.testing.assert_array_equal(out["w"], tree["w"])
+    assert store2.backend.tier_backends()["durable"].has(ref.digest), \
+        "read must re-warm the disk tier from remote"
+    store2.close()
