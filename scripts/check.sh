@@ -27,7 +27,17 @@ if [ "${1:-}" = "smoke" ]; then
   shift
   echo "# docs link check (README <-> docs/*.md, no dangling links)"
   python scripts/check_docs.py
-  python -m pytest -q -m "not slow" "$@"
+  python -m pytest -q -m "not slow and not process_io" "$@"
+  echo "# io-worker conformance matrix (thread vs process lanes, 2-worker"
+  echo "#   pools: identical manifests/digests, bit-exact restores, crash"
+  echo "#   matrix, SIGKILL stress; tests/test_io_workers.py)"
+  python -m pytest -q -m process_io tests/test_io_workers.py
+  echo "# /dev/shm hygiene (no leaked repro-io-* segments after the matrix)"
+  if ls /dev/shm/repro-io-* >/dev/null 2>&1; then
+    echo "ERROR: leaked IO-worker shared-memory segments:" >&2
+    ls /dev/shm/repro-io-* >&2
+    exit 1
+  fi
   echo "# restore smoke (save 2 parity events, pipelined restore, bit-exact)"
   python scripts/restore_smoke.py
   echo "# tiered smoke (save to memory tier -> spill -> restore bit-exact)"

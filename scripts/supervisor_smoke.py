@@ -30,7 +30,7 @@ for p in (str(SRC), str(ROOT)):
     if p not in sys.path:
         sys.path.insert(0, p)
 
-STEPS, INTERVAL = 10, 5
+STEPS, INTERVAL = 12, 5
 
 
 def main() -> int:
@@ -44,8 +44,12 @@ def main() -> int:
             arch="llama3.2-3b", steps=STEPS, interval=INTERVAL,
             batch=2, seq_len=16, policy="full", seed=7,
             participants=(2, 2, 1),
+            # The child's progress feed is write-buffered, so a signal
+            # scheduled at step N can land 2-3 steps later; keep enough
+            # steps after the sigterm that the preemption always beats
+            # normal completion.
             injections=[Injection("kill", at_step=6),
-                        Injection("sigterm", at_step=8)],
+                        Injection("sigterm", at_step=7)],
             verify_restore=True)
         report = sup.run()
 

@@ -28,7 +28,13 @@ The package is layered (see docs/architecture.md for the full dataflow):
 - ``async_io`` — ``TransferPool``, the unified bounded transfer
   executor (CheckFreq-style): saver chunk writes and tiered spill run
   as separate lanes of one shared pool; ``AsyncWriter`` is the saver's
-  lane facade.
+  lane facade.  With ``worker_backend="process"`` the pool also owns a
+  ``ProcessWorkerPool`` of subprocess IO workers (payloads over shared
+  memory) and an ``IoDispatch`` that routes the hot byte work —
+  hashing, codecs, chunk encode/decode, atomic file writes — out of
+  the GIL (see docs/perf.md).
+- ``workers`` — the pure, import-light worker-side functions (never
+  imports jax); the same code runs inline under the thread backend.
 - ``saver`` — ``CheckpointManager``: policy-driven selective save,
   manifest commit, GC, and the restore entry point.
 - ``restore`` — the planned, pipelined restore engine: deduplicated
@@ -42,9 +48,14 @@ The package is layered (see docs/architecture.md for the full dataflow):
   the resharded (save-on-MxN → restore-on-PxQ) restore path.
 """
 from repro.checkpoint.async_io import (  # noqa: F401
+    WORKER_BACKENDS,
     AsyncWriteError,
     AsyncWriter,
+    IoDispatch,
+    ProcessWorkerPool,
     TransferPool,
+    WorkerError,
+    current_lane,
 )
 from repro.checkpoint.backends import (  # noqa: F401
     CircuitBreaker,

@@ -28,7 +28,7 @@ from __future__ import annotations
 from pathlib import Path
 from typing import Any, Dict, Optional
 
-from repro.checkpoint.async_io import TransferPool
+from repro.checkpoint.async_io import IoDispatch, TransferPool
 from repro.checkpoint.backends.base import StorageBackend  # noqa: F401
 from repro.checkpoint.backends.localfs import (  # noqa: F401
     LocalFSBackend,
@@ -88,7 +88,8 @@ def make_backend(spec: "str | StorageBackend", root: Path | str, *,
                  pool: Optional[TransferPool] = None,
                  spill_threads: int = 2,
                  hot_budget_bytes: Optional[int] = None,
-                 remote_opts: Optional[Dict[str, Any]] = None
+                 remote_opts: Optional[Dict[str, Any]] = None,
+                 dispatch: Optional[IoDispatch] = None
                  ) -> StorageBackend:
     """Resolve a ``store_backend`` knob into a backend instance.
 
@@ -99,17 +100,23 @@ def make_backend(spec: "str | StorageBackend", root: Path | str, *,
     fast-disk over slow-disk).  ``remote_opts`` configures the simulated
     service's fault knobs (latency/error_rate/seed/...), the retry
     policy (attempts/timeout/...), and the RemoteBackend's hedging.
+    ``dispatch`` (a process-backed ``IoDispatch``) moves the filesystem
+    tiers' atomic writes into subprocess IO workers — including tiered
+    spill, whose durable-side writes run on the spill lane.
     """
     if isinstance(spec, StorageBackend):
         return spec
     root = Path(root)
     if spec == "local":
-        return LocalFSBackend(root / "objects", fsync=fsync)
+        return LocalFSBackend(root / "objects", fsync=fsync,
+                              dispatch=dispatch)
     if spec == "memory":
         return MemoryBackend()
     if spec == "tiered":
         return TieredBackend(
-            MemoryBackend(), LocalFSBackend(root / "objects", fsync=fsync),
+            MemoryBackend(),
+            LocalFSBackend(root / "objects", fsync=fsync,
+                           dispatch=dispatch),
             pool=pool, spill_threads=spill_threads,
             hot_budget_bytes=hot_budget_bytes)
     if spec == "remote":
@@ -122,7 +129,8 @@ def make_backend(spec: "str | StorageBackend", root: Path | str, *,
             # queue because spill tasks submit follow-on spill tasks.
             pool = TransferPool(max(2, spill_threads * 2), max_queue=0)
         inner = TieredBackend(
-            LocalFSBackend(root / "objects", fsync=fsync), remote,
+            LocalFSBackend(root / "objects", fsync=fsync,
+                           dispatch=dispatch), remote,
             pool=pool, lane=REMOTE_SPILL_LANE,
             hot_label="durable", durable_label=None,
             promote_on_read=True,  # a lost disk blob re-warms from remote

@@ -14,9 +14,12 @@ from __future__ import annotations
 import os
 import threading
 from pathlib import Path
-from typing import Dict, Iterator, Optional
+from typing import TYPE_CHECKING, Dict, Iterator, Optional
 
 from repro.checkpoint.backends.base import StorageBackend
+
+if TYPE_CHECKING:  # annotation only — keep this module import-light
+    from repro.checkpoint.async_io import IoDispatch
 
 
 def _fsync_dir(path: Path) -> None:
@@ -54,9 +57,15 @@ def atomic_write(path: Path, data: bytes, *, fsync: bool = True) -> None:
 class LocalFSBackend(StorageBackend):
     name = "local"
 
-    def __init__(self, root: Path | str, *, fsync: bool = False):
+    def __init__(self, root: Path | str, *, fsync: bool = False,
+                 dispatch: Optional["IoDispatch"] = None):
         self.root = Path(root)
         self.fsync = fsync
+        # Process-backed IO: when a process dispatch is attached, writes
+        # run ``workers.file_write_atomic`` in a subprocess worker (bytes
+        # via shared memory) instead of blocking a GIL-holding thread on
+        # write+fsync.  None / inline dispatch keeps the classic path.
+        self.dispatch = dispatch
         self._lock = threading.Lock()
         self._stats = {"reads": 0, "writes": 0, "read_bytes": 0,
                        "written_bytes": 0}
@@ -73,7 +82,15 @@ class LocalFSBackend(StorageBackend):
         return blob
 
     def write(self, key: str, data: bytes) -> int:
-        atomic_write(self._path(key), data, fsync=self.fsync)
+        if self.dispatch is not None and self.dispatch.is_process:
+            # Tag tmp files with THIS (coordinator) process's identity so
+            # sweep_tmp's own-pid liveness rule keeps protecting in-flight
+            # writes even though a worker pid creates the file.
+            tag = f"{os.getpid():x}-{threading.get_ident():x}"
+            self.dispatch.call("file_write_atomic", str(self._path(key)),
+                               data, self.fsync, tag)
+        else:
+            atomic_write(self._path(key), data, fsync=self.fsync)
         with self._lock:
             self._stats["writes"] += 1
             self._stats["written_bytes"] += len(data)

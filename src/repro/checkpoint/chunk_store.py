@@ -73,6 +73,7 @@ import msgpack
 
 from repro.checkpoint import compression, faults, serial
 from repro.checkpoint import fingerprint as fputil
+from repro.checkpoint.async_io import INLINE_DISPATCH, IoDispatch
 from repro.checkpoint.backends import StorageBackend, make_backend
 from repro.checkpoint.backends.retry import RetryPolicy
 # Back-compat alias: the manifest store and several tests import the
@@ -208,11 +209,68 @@ class ReadSession:
             lambda: self.store.read_digest(digest, verify=self.verify,
                                            session=self))
 
+    # ---- process-backend read path ----
+    # The offload variants keep the whole read/decompress/verify stage in
+    # a subprocess worker: the parent fetches the raw envelope blob (tier
+    # provenance, retries, and fault injection all live backend-side and
+    # must stay in-process), ships it plus any delta base's canonical
+    # bytes through the dispatch, and gets back flat items to unflatten.
+    # Delta bases come from the *manifest* (ChunkRef.delta_base) rather
+    # than from parsing the envelope parent-side — bases are full objects
+    # by store invariant, so the chain is exactly one level deep.  The
+    # memo tables are shared with the inline path ("canon"/"tree"), so
+    # release() and mixed usage behave identically.
+
+    def object_blob(self, digest: str) -> bytes:
+        """Raw envelope blob with the same read accounting as
+        ``envelope()`` (distinct memo table; the two paths never both run
+        for one digest in one session)."""
+        def read():
+            tier = self.store.locate(digest)
+            blob = self.store._backend_read(digest)
+            with self._lock:
+                self.stats["object_reads"] += 1
+                self.stats["bytes_read"] += len(blob)
+                if tier is not None:
+                    self.tiers[digest] = tier
+                    self.tier_reads[tier] = self.tier_reads.get(tier, 0) + 1
+            return blob
+
+        return self._memoized("blob", digest, read)
+
+    def canonical_offload(self, digest: str,
+                          base_digest: Optional[str] = None) -> bytes:
+        dispatch = self.store.dispatch
+
+        def build():
+            base = (self.canonical_offload(base_digest)
+                    if base_digest else None)
+            blob = self.object_blob(digest)
+            return dispatch.call("canonical_object", blob, digest, base,
+                                 self.verify, lane="restore")
+
+        return self._memoized("canon", digest, build)
+
+    def read_offload(self, digest: str,
+                     base_digest: Optional[str] = None
+                     ) -> Tuple[PyTree, Dict]:
+        dispatch = self.store.dispatch
+
+        def build():
+            base = (self.canonical_offload(base_digest)
+                    if base_digest else None)
+            blob = self.object_blob(digest)
+            meta, items = dispatch.call("decode_object", blob, digest,
+                                        base, self.verify, lane="restore")
+            return serial.items_to_tree(items), meta
+
+        return self._memoized("tree", digest, build)
+
     def release(self, digest: str) -> None:
         """Drop every cached representation of ``digest`` (its last
         dependent has consumed it)."""
         with self._lock:
-            for table in ("env", "canon", "tree"):
+            for table in ("env", "blob", "canon", "tree"):
                 self._cells.pop((table, digest), None)
 
 
@@ -262,14 +320,22 @@ class ChunkStore:
                  spill_threads: int = 2,
                  hot_budget_bytes: Optional[int] = None,
                  read_retry: Optional[RetryPolicy] = None,
-                 remote_opts: Optional[Dict[str, Any]] = None):
+                 remote_opts: Optional[Dict[str, Any]] = None,
+                 dispatch: Optional[IoDispatch] = None):
         self.root = Path(root)
         self.codec = compression.resolve_codec(codec)
         self.fsync = fsync
+        # Worker dispatch for the hot byte transforms (encode, delta,
+        # hashing of envelopes happens backend-side).  Inline by default;
+        # a process-backed TransferPool's dispatch ships them to
+        # subprocess workers.  Pre-composed backends (the manager's
+        # tiered compositions) carry their own dispatch already.
+        self.dispatch = dispatch if dispatch is not None else INLINE_DISPATCH
         self.backend = make_backend(backend, self.root, fsync=fsync,
                                     spill_threads=spill_threads,
                                     hot_budget_bytes=hot_budget_bytes,
-                                    remote_opts=remote_opts)
+                                    remote_opts=remote_opts,
+                                    dispatch=self.dispatch)
         self.read_retry = read_retry if read_retry is not None \
             else READ_RETRY
         self.delta = delta
@@ -727,8 +793,12 @@ class ChunkStore:
     def _write_new(self, step: int, unit: str, kind: str, tree: PyTree,
                    canon: bytes, digest: str, codec: str,
                    delta_base: Optional[str]) -> ChunkRef:
+        # Compression runs through the dispatch: inline under the thread
+        # backend (same workers.py code), in a subprocess worker under the
+        # process backend — identical bytes either way.
         full_payload = canon if codec == "none" else \
-            serial.encode_chunk(tree, meta={}, codec=codec)
+            self.dispatch.call("encode_chunk_items",
+                               serial.tree_to_items(tree), {}, codec)
 
         # Try a delta against the previous chunk's *full* base.  Lossy
         # codecs are excluded: a delta restores the exact canonical bytes,
@@ -751,9 +821,9 @@ class ChunkStore:
                 # codec this environment lacks): degrade to a full write
                 base_canon = None
             if base_canon is not None:
-                dblob = compression.delta_encode(
-                    canon, base_canon,
-                    compress="zstd" if codec == "zstd" else "none")
+                dblob = self.dispatch.call(
+                    "delta_encode", canon, base_canon,
+                    "zstd" if codec == "zstd" else "none")
                 if len(dblob) < self.delta_ratio * len(full_payload):
                     nbytes = self._write_object(digest, {
                         "v": OBJECT_VERSION, "format": "delta",
@@ -799,8 +869,16 @@ class ChunkStore:
         try:
             table = fputil.unpack_table(packet.table)
             if packet.full:
-                tree = fputil.rebuild_full(packet.leaves)
-                payload = serial.encode_chunk(tree, meta={}, codec=self.codec)
+                # Encode straight from the packet's raw leaf bytes — no
+                # tree rebuild — via the dispatch (subprocess worker under
+                # the process backend).  Leaves arrive in flatten order,
+                # so the payload is byte-identical to
+                # ``encode_chunk(rebuild_full(leaves))``.
+                items = [(l.path, tuple(l.shape), l.dtype,
+                          bytes(l.data[:l.nbytes]))
+                         for l in packet.leaves]
+                payload = self.dispatch.call("encode_chunk_items", items,
+                                             {}, self.codec)
                 env = {"v": OBJECT_VERSION, "format": "full",
                        "codec": self.codec, "base": None, "payload": payload,
                        "fp": packet.table}
@@ -820,8 +898,9 @@ class ChunkStore:
                         "idx": [] if l.idx is None else list(map(int, l.idx)),
                         "data": l.data}
                        for l in packet.leaves if l.idx is None or len(l.idx)]
-            blob = compression.block_delta_encode(
-                records, compress="zstd" if self.codec == "zstd" else "none")
+            blob = self.dispatch.call(
+                "block_delta_encode", records,
+                "zstd" if self.codec == "zstd" else "none")
             env = {"v": OBJECT_VERSION, "format": "block_delta",
                    "base": packet.base_digest, "payload": blob,
                    "fp": packet.table}

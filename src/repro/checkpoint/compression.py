@@ -1,4 +1,13 @@
-"""Checkpoint codecs.
+"""Checkpoint codecs — thin re-export shim over ``checkpoint/workers.py``.
+
+The implementations moved to :mod:`repro.checkpoint.workers` as part of
+the process-backed IO refactor: subprocess workers load that module by
+file path (without importing the repro package, whose import chain pulls
+in jax) and must run the *same* codec code the thread backend runs, or
+the two backends could produce different bytes.  This module keeps the
+historical import surface — ``from repro.checkpoint.compression import
+encode, delta_encode, ...`` — so existing callers and tests are
+untouched.
 
 Per-tensor codecs (serial.py applies these to each tensor record):
 
@@ -15,269 +24,64 @@ Per-tensor codecs (serial.py applies these to each tensor record):
 - "auto" (or None): resolves to "zstd" when available, else "none" — the
   default everywhere so the repo runs in containers without zstandard.
 
-Chunk-level delta codec (chunk_store.py applies this to whole canonical
+Chunk-level delta codecs (chunk_store.py applies these to whole canonical
 chunk blobs):
 
-- ``delta_encode(cur, base)`` XORs ``cur`` against ``base`` and stores only
-  the non-zero runs (sparse bytewise diff).  Near-identical payloads — the
-  common case when a selective policy re-saves a slowly-drifting layer —
-  collapse to a few segments.  XOR (rather than storing ``cur`` bytes
-  directly) zeroes the shared sign/exponent bits of close floats, which
-  compresses further when zstd is available.
-- ``delta_decode(blob, base)`` reconstructs ``cur`` byte-exactly.
+- ``delta_encode(cur, base)`` / ``delta_decode(blob, base)``: sparse
+  bytewise XOR diff (XD01).
+- ``block_delta_encode(records)`` / ``block_delta_decode(blob)``: v2
+  block-sparse delta of fingerprint-flagged dirty blocks (BD02).
 """
 from __future__ import annotations
 
-import threading
-from typing import Any, Dict, List, Optional, Tuple
+from repro.checkpoint.workers import (  # noqa: F401 - re-export surface
+    BLOCK_DELTA_MAGIC,
+    DELTA_MAGIC,
+    DELTA_MERGE_GAP,
+    HAVE_ZSTD,
+    QUANT_BLOCK,
+    ZSTD_LEVEL,
+    CodecUnavailable,
+    _cctx,
+    _dctx,
+    _lossless,
+    _require_zstd,
+    _to_bytes,
+    _tls,
+    block_delta_decode,
+    block_delta_encode,
+    decode,
+    default_codec,
+    delta_decode,
+    delta_encode,
+    dequantize_int8,
+    encode,
+    is_block_delta,
+    is_delta,
+    np_dtype,
+    quantize_int8,
+    resolve_codec,
+)
 
-import msgpack
-import numpy as np
-
-try:  # optional dependency: the repo must import (and run) without zstd
-    import zstandard as _zstd
-    HAVE_ZSTD = True
-except ImportError:  # pragma: no cover - depends on environment
-    _zstd = None
-    HAVE_ZSTD = False
-
-ZSTD_LEVEL = 3
-QUANT_BLOCK = 256
-
-
-class CodecUnavailable(RuntimeError):
-    """A codec was explicitly requested but its dependency is missing."""
-
-
-def default_codec() -> str:
-    """Best available lossless codec for this environment."""
-    return "zstd" if HAVE_ZSTD else "none"
-
-
-def resolve_codec(codec: Optional[str]) -> str:
-    """Map the "auto"/None sentinel to the environment default."""
-    if codec is None or codec == "auto":
-        return default_codec()
-    return codec
-
-
-def _require_zstd() -> None:
-    if not HAVE_ZSTD:
-        raise CodecUnavailable(
-            "codec 'zstd' requires the optional 'zstandard' package "
-            "(pip install zstandard); use codec='auto' or 'none' instead")
-
-
-# zstd (de)compression contexts are NOT thread-safe; the async writer pool
-# compresses concurrently, so contexts are per-thread.
-_tls = threading.local()
-
-
-def _cctx():
-    _require_zstd()
-    c = getattr(_tls, "cctx", None)
-    if c is None:
-        c = _tls.cctx = _zstd.ZstdCompressor(level=ZSTD_LEVEL)
-    return c
-
-
-def _dctx():
-    _require_zstd()
-    d = getattr(_tls, "dctx", None)
-    if d is None:
-        d = _tls.dctx = _zstd.ZstdDecompressor()
-    return d
-
-
-def _to_bytes(arr: np.ndarray) -> bytes:
-    return np.ascontiguousarray(arr).tobytes()
-
-
-def np_dtype(dtype: str) -> np.dtype:
-    """Serialized dtype string -> numpy dtype (ml_dtypes extras included).
-    The single mapping both the codec decoder and the fingerprint rebuild
-    path use — extend here when the serializer learns a new dtype."""
-    if dtype == "bfloat16":
-        import ml_dtypes  # jax dependency; provides bfloat16 for numpy
-        return np.dtype(ml_dtypes.bfloat16)
-    return np.dtype(dtype)
-
-
-def quantize_int8(arr: np.ndarray, block: int = QUANT_BLOCK
-                  ) -> Tuple[np.ndarray, np.ndarray]:
-    """Blockwise symmetric quantization of the flattened array.
-    Returns (int8 values, f32 scales per block)."""
-    flat = np.asarray(arr, dtype=np.float32).reshape(-1)
-    pad = (-len(flat)) % block
-    if pad:
-        flat = np.concatenate([flat, np.zeros(pad, np.float32)])
-    blocks = flat.reshape(-1, block)
-    scales = np.max(np.abs(blocks), axis=1, keepdims=True) / 127.0
-    scales = np.where(scales == 0, 1.0, scales)
-    q = np.clip(np.rint(blocks / scales), -127, 127).astype(np.int8)
-    return q.reshape(-1), scales.astype(np.float32).reshape(-1)
-
-
-def dequantize_int8(q: np.ndarray, scales: np.ndarray, size: int,
-                    block: int = QUANT_BLOCK) -> np.ndarray:
-    blocks = q.astype(np.float32).reshape(-1, block)
-    out = blocks * scales.reshape(-1, 1)
-    return out.reshape(-1)[:size]
-
-
-def _lossless(raw: bytes) -> Tuple[bytes, str]:
-    """Compress with the best available lossless codec."""
-    if HAVE_ZSTD:
-        return _cctx().compress(raw), "zstd"
-    return raw, "none"
-
-
-def encode(arr: np.ndarray, codec: str) -> Tuple[bytes, str, Optional[Dict]]:
-    """Returns (payload, codec_used, extra_meta)."""
-    arr = np.asarray(arr)
-    codec = resolve_codec(codec)
-    if codec == "none":
-        return _to_bytes(arr), "none", None
-    if codec == "zstd":
-        return _cctx().compress(_to_bytes(arr)), "zstd", None
-    if codec == "int8":
-        # Only sensible for float weight tensors of meaningful size.
-        if arr.dtype.kind != "f" and str(arr.dtype) != "bfloat16":
-            blob, used = _lossless(_to_bytes(arr))
-            return blob, used, None
-        if arr.size < QUANT_BLOCK:
-            blob, used = _lossless(_to_bytes(arr))
-            return blob, used, None
-        q, scales = quantize_int8(arr)
-        blob, comp = _lossless(q.tobytes() + scales.tobytes())
-        return (blob, "int8",
-                {"n_q": int(q.size), "n_scale": int(scales.size),
-                 "block": QUANT_BLOCK, "comp": comp})
-    raise ValueError(f"unknown codec {codec!r}")
-
-
-def decode(payload: bytes, codec: str, *, shape, dtype,
-           extra: Optional[Dict] = None) -> np.ndarray:
-    out_dtype = np_dtype(dtype)
-    if codec == "none":
-        return np.frombuffer(payload, dtype=out_dtype).reshape(shape).copy()
-    if codec == "zstd":
-        raw = _dctx().decompress(payload)
-        return np.frombuffer(raw, dtype=out_dtype).reshape(shape).copy()
-    if codec == "int8":
-        # chunks written before the optional-zstd split always compressed
-        comp = (extra or {}).get("comp", "zstd")
-        raw = _dctx().decompress(payload) if comp == "zstd" else payload
-        n_q, n_scale = extra["n_q"], extra["n_scale"]
-        q = np.frombuffer(raw[:n_q], dtype=np.int8)
-        scales = np.frombuffer(raw[n_q:n_q + 4 * n_scale], dtype=np.float32)
-        size = int(np.prod(shape)) if shape else 1
-        out = dequantize_int8(q, scales, size, extra.get("block", QUANT_BLOCK))
-        return out.astype(out_dtype).reshape(shape)
-    raise ValueError(f"unknown codec {codec!r}")
-
-
-# --------------------------------------------------------------- delta codec
-DELTA_MAGIC = b"XD01"
-# Non-zero XOR runs closer than this are merged into one segment: the
-# per-segment overhead (offset + length framing) outweighs a few zero bytes.
-DELTA_MERGE_GAP = 32
-
-
-def delta_encode(cur: bytes, base: bytes, *, gap: int = DELTA_MERGE_GAP,
-                 compress: Optional[str] = None) -> bytes:
-    """Sparse bytewise XOR diff of ``cur`` against ``base``.
-
-    ``base`` is zero-padded/truncated to ``len(cur)`` so payloads of
-    different lengths still diff (the tail past ``base`` XORs with zeros,
-    i.e. is stored verbatim).  The result decodes with ``delta_decode``
-    against the same ``base``.
-    """
-    n = len(cur)
-    a = np.frombuffer(cur, np.uint8)
-    if len(base) >= n:
-        b = np.frombuffer(base, np.uint8, count=n)
-    else:
-        b = np.zeros(n, np.uint8)
-        b[:len(base)] = np.frombuffer(base, np.uint8)
-    x = a ^ b
-    nz = np.flatnonzero(x)
-    segs = []
-    if nz.size:
-        brk = np.flatnonzero(np.diff(nz) > gap)
-        starts = nz[np.concatenate([[0], brk + 1])]
-        ends = nz[np.concatenate([brk, [nz.size - 1]])] + 1
-        segs = [[int(s), x[s:e].tobytes()] for s, e in zip(starts, ends)]
-    body = msgpack.packb({"n": n, "segs": segs}, use_bin_type=True)
-    comp = resolve_codec(compress)
-    if comp == "zstd":
-        return DELTA_MAGIC + b"\x01" + _cctx().compress(body)
-    return DELTA_MAGIC + b"\x00" + body
-
-
-def delta_decode(blob: bytes, base: bytes) -> bytes:
-    """Reconstruct the payload ``delta_encode`` diffed against ``base``."""
-    if blob[:4] != DELTA_MAGIC:
-        raise ValueError("not a delta blob (bad magic)")
-    body = blob[5:]
-    if blob[4] == 1:
-        body = _dctx().decompress(body)
-    d = msgpack.unpackb(body, raw=False)
-    n = d["n"]
-    out = np.zeros(n, np.uint8)
-    m = min(n, len(base))
-    out[:m] = np.frombuffer(base, np.uint8, count=m)
-    for off, data in d["segs"]:
-        seg = np.frombuffer(data, np.uint8)
-        out[off:off + len(seg)] ^= seg
-    return out.tobytes()
-
-
-def is_delta(blob: bytes) -> bool:
-    return blob[:4] == DELTA_MAGIC
-
-
-# -------------------------------------------------- block-sparse delta (v2)
-# Written by the fingerprint save pipeline: instead of XOR-diffing two full
-# canonical payloads on the host (which requires transferring and hashing
-# both), the payload holds only the blocks the device-side fingerprint
-# compare flagged dirty.  Readable alongside the v1 XOR format — the object
-# envelope's "format" field selects the decoder.
-BLOCK_DELTA_MAGIC = b"BD02"
-
-
-def block_delta_encode(records: List[Dict], *,
-                       compress: Optional[str] = None) -> bytes:
-    """Frame per-leaf dirty-block records as a v2 block-sparse delta blob.
-
-    Each record: {"name", "shape", "dtype", "nbytes", "block",
-    "idx": [block indices], "data": concatenated block-sized chunks}.
-    Blocks are full ``block``-sized slices (the tail block zero-padded,
-    exactly as fingerprinted), so decode is pure slice assignment.
-    """
-    rows = [[r["name"], list(r["shape"]), r["dtype"], int(r["nbytes"]),
-             int(r["block"]), [int(i) for i in r["idx"]], r["data"]]
-            for r in records]
-    body = msgpack.packb({"v": 1, "tensors": rows}, use_bin_type=True)
-    comp = resolve_codec(compress)
-    if comp == "zstd":
-        return BLOCK_DELTA_MAGIC + b"\x01" + _cctx().compress(body)
-    return BLOCK_DELTA_MAGIC + b"\x00" + body
-
-
-def block_delta_decode(blob: bytes) -> List[Dict]:
-    if blob[:4] != BLOCK_DELTA_MAGIC:
-        raise ValueError("not a block-delta blob (bad magic)")
-    body = blob[5:]
-    if blob[4] == 1:
-        body = _dctx().decompress(body)
-    d = msgpack.unpackb(body, raw=False)
-    if not isinstance(d, dict) or d.get("v") != 1:
-        raise ValueError("bad block-delta body")
-    return [{"name": name, "shape": shape, "dtype": dtype, "nbytes": nbytes,
-             "block": block, "idx": idx, "data": data}
-            for name, shape, dtype, nbytes, block, idx, data in d["tensors"]]
-
-
-def is_block_delta(blob: bytes) -> bool:
-    return blob[:4] == BLOCK_DELTA_MAGIC
+__all__ = [
+    "BLOCK_DELTA_MAGIC",
+    "DELTA_MAGIC",
+    "DELTA_MERGE_GAP",
+    "HAVE_ZSTD",
+    "QUANT_BLOCK",
+    "ZSTD_LEVEL",
+    "CodecUnavailable",
+    "block_delta_decode",
+    "block_delta_encode",
+    "decode",
+    "default_codec",
+    "delta_decode",
+    "delta_encode",
+    "dequantize_int8",
+    "encode",
+    "is_block_delta",
+    "is_delta",
+    "np_dtype",
+    "quantize_int8",
+    "resolve_codec",
+]

@@ -544,10 +544,19 @@ class RestoreEngine:
                      plan_step: int, fallbacks: Dict[str, int],
                      tiers: Dict[str, str]
                      ) -> Tuple[UnitRead, PyTree]:
+        # Process-backed dispatch moves the decompress+verify stage of
+        # each read into a subprocess worker; the delta base (full by
+        # store invariant) comes from the manifest ref, so the parent
+        # never parses envelopes just to discover it.
+        offload = self.store.dispatch.is_process
         last_exc: Optional[Exception] = None
         for cand in target.chain:
             try:
-                tree, _ = session.read(cand.ref.digest)
+                if offload:
+                    tree, _ = session.read_offload(cand.ref.digest,
+                                                   cand.ref.delta_base)
+                else:
+                    tree, _ = session.read(cand.ref.digest)
                 tier = session.tiers.get(cand.ref.digest)
                 if tier is not None:
                     tiers[f"{target.unit}/{target.kind}"] = tier
@@ -593,6 +602,8 @@ class RestoreEngine:
         """
         t0 = time.time()
         io_retries0 = self.store.io_retries
+        dispatch = self.store.dispatch
+        workers0 = dispatch.stats()  # None under the thread backend
         plan = plan_restore(self.manifests, self.store,
                             self.registry.unit_names(), step=step,
                             parts=parts, units=units, owned=owned)
@@ -682,5 +693,18 @@ class RestoreEngine:
             # tier every unit/kind (fallbacks included) was served from
             "tier_reads": dict(session.tier_reads),
             "unit_tiers": unit_tiers,
+            # which worker backend decoded the bytes, and (process only)
+            # this restore's share of the worker traffic
+            "io_backend": dispatch.backend,
         }
+        if workers0 is not None:
+            w1 = dispatch.stats() or {"lanes": {}, "worker_restarts": 0}
+            lane0 = workers0["lanes"].get("restore",
+                                          {"tasks": 0, "bytes_shm": 0})
+            lane1 = w1["lanes"].get("restore", {"tasks": 0, "bytes_shm": 0})
+            self.last_stats["workers"] = {
+                "tasks": lane1["tasks"] - lane0["tasks"],
+                "bytes_shm": lane1["bytes_shm"] - lane0["bytes_shm"],
+                "worker_restarts": w1["worker_restarts"],
+            }
         return state

@@ -62,7 +62,12 @@ import numpy as np
 
 from repro.checkpoint import faults
 from repro.checkpoint import fingerprint as fputil
-from repro.checkpoint.async_io import AsyncWriter, PendingResult, TransferPool
+from repro.checkpoint.async_io import (
+    WORKER_BACKENDS,
+    AsyncWriter,
+    PendingResult,
+    TransferPool,
+)
 from repro.checkpoint.backends import StorageBackend, make_backend
 from repro.checkpoint.chunk_store import ChunkRef, ChunkStore
 from repro.checkpoint.restore import (  # noqa: F401 - RestoreError re-export
@@ -110,6 +115,8 @@ class CheckpointManager:
         hot_budget_bytes: Optional[int] = None,
         spill_barrier: bool = False,
         remote_opts: Optional[Dict[str, Any]] = None,
+        io_backend: str = "thread",
+        io_workers: Optional[int] = None,
     ):
         self.root = Path(root)
         self.registry = registry
@@ -128,8 +135,15 @@ class CheckpointManager:
         # remote3 runs TWO spill lanes (RAM→disk and disk→remote) on the
         # shared pool, so it gets a second helping of spill threads.
         spill_lanes = 2 if store_backend == "remote3" else 1
+        if io_backend not in WORKER_BACKENDS:
+            raise ValueError(
+                f"io_backend must be one of {WORKER_BACKENDS}, "
+                f"got {io_backend!r}")
         self.transfer_pool: Optional[TransferPool] = None
-        if async_save or tiered:
+        # ``io_backend="process"`` always needs a pool (it owns the
+        # subprocess worker fleet and the shared-memory arena), even for
+        # synchronous saves — the hot byte work still offloads.
+        if async_save or tiered or io_backend == "process":
             # The queue is bounded (write-lane backpressure on the
             # training thread) EXCEPT when the pool also carries the
             # spill lane: write tasks then submit spill tasks, and a
@@ -138,14 +152,19 @@ class CheckpointManager:
             self.transfer_pool = TransferPool(
                 writer_threads + (spill_threads * spill_lanes
                                   if tiered else 0),
-                max_queue=0 if tiered else 64)
+                max_queue=0 if tiered else 64,
+                worker_backend=io_backend,
+                io_workers=io_workers)
+        dispatch = (self.transfer_pool.dispatch
+                    if self.transfer_pool is not None else None)
         backend = make_backend(store_backend, self.root,
                                pool=self.transfer_pool,
                                spill_threads=spill_threads,
                                hot_budget_bytes=hot_budget_bytes,
-                               remote_opts=remote_opts)
+                               remote_opts=remote_opts,
+                               dispatch=dispatch)
         self.store = ChunkStore(self.root, codec=codec, delta=delta,
-                                backend=backend)
+                                backend=backend, dispatch=dispatch)
         self.manifests = ManifestStore(self.root)
         self.keep = keep
         self.async_save = async_save
@@ -237,6 +256,8 @@ class CheckpointManager:
         and True waits the spill lane down first.
         """
         t0 = time.time()
+        pool = self.transfer_pool
+        workers0 = (pool.dispatch.stats() if pool is not None else None)
         step = int(state["step"]) if step is None else int(step)
         ctx = PolicyContext(event_index=self._event_index, step=step,
                             drift_scores=drift_scores)
@@ -367,7 +388,26 @@ class CheckpointManager:
             "backend": storage["backend"],
             "durable_on": storage["durable_on"],
             "spill_pending": storage["pending_spill"],
+            # which worker backend ran the byte work (hash/codec/write)
+            "io_backend": (pool.dispatch.backend if pool is not None
+                           else "thread"),
         }
+        if workers0 is not None:
+            # Process backend: this event's share of the subprocess
+            # worker traffic, per lane (write vs spill vs ...).
+            w1 = pool.dispatch.stats()
+            lanes: Dict[str, Dict[str, int]] = {}
+            for lane, s1 in w1["lanes"].items():
+                s0 = workers0["lanes"].get(lane,
+                                           {"tasks": 0, "bytes_shm": 0})
+                d = {"tasks": s1["tasks"] - s0["tasks"],
+                     "bytes_shm": s1["bytes_shm"] - s0["bytes_shm"]}
+                if d["tasks"]:
+                    lanes[lane] = d
+            self.last_save_stats["workers"] = {
+                "lanes": lanes,
+                "worker_restarts": w1["worker_restarts"],
+            }
         return manifest
 
     def _save_unit_fp(self, step: int, name: str, kind: str, tree: Any,

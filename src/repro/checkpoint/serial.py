@@ -4,20 +4,30 @@ A chunk payload is msgpack: header + per-tensor records (name, shape, dtype,
 codec, crc32, raw bytes).  Arrays are serialized device-count independent
 (global arrays), so a checkpoint written on one mesh restores onto any other
 — the basis of elastic restart.
+
+The byte-level implementation lives in :mod:`repro.checkpoint.workers`
+(``encode_chunk_items``/``decode_chunk_items`` over flat ``(name, shape,
+dtype, raw_bytes)`` items) so subprocess IO workers can run the exact
+same code without importing jax; this module owns the pytree <-> items
+boundary.  ``ChunkCorruption`` *is* ``workers.CorruptObject`` — one
+exception type no matter which process decoded the bytes.
 """
 from __future__ import annotations
 
-import zlib
 from typing import Any, Dict, List, Tuple
 
-import msgpack
 import numpy as np
 
-from repro.checkpoint import compression
+from repro.checkpoint import workers
 
 PyTree = Any
 
-FORMAT_VERSION = 1
+FORMAT_VERSION = workers.CHUNK_FORMAT_VERSION
+
+# Alias, not a subclass: corruption raised inline (thread backend), in a
+# worker (mapped back by IoDispatch), or by legacy serial callers must be
+# one catchable type.
+ChunkCorruption = workers.CorruptObject
 
 
 def flatten_with_paths(tree: PyTree, prefix: str = "") -> List[Tuple[str, Any]]:
@@ -60,39 +70,31 @@ def unflatten_from_paths(items: Dict[str, Any]) -> PyTree:
     return root
 
 
-def encode_chunk(tree: PyTree, *, meta: Dict[str, Any],
-                 codec: str = "auto") -> bytes:
-    tensors = []
+def tree_to_items(tree: PyTree) -> workers.Items:
+    """Flatten a pytree to the wire-item form workers speak:
+    ``[(name, shape, dtype, raw_le_bytes), ...]`` in flatten order."""
+    out: workers.Items = []
     for path, arr in flatten_with_paths(tree):
         arr = np.asarray(arr)
-        raw, used_codec, extra = compression.encode(arr, codec)
-        tensors.append({
-            "name": path,
-            "shape": list(arr.shape),
-            "dtype": str(arr.dtype),
-            "codec": used_codec,
-            "crc": zlib.crc32(raw) & 0xFFFFFFFF,
-            "extra": extra,
-            "data": raw,
-        })
-    payload = {"version": FORMAT_VERSION, "meta": meta, "tensors": tensors}
-    return msgpack.packb(payload, use_bin_type=True)
+        out.append((path, tuple(arr.shape), str(arr.dtype),
+                    np.ascontiguousarray(arr).tobytes()))
+    return out
 
 
-class ChunkCorruption(RuntimeError):
-    pass
+def items_to_tree(items: workers.Items) -> PyTree:
+    """Rebuild a pytree of numpy arrays from wire items."""
+    arrs: Dict[str, np.ndarray] = {}
+    for name, shape, dtype, raw in items:
+        arrs[name] = np.frombuffer(
+            raw, dtype=workers.np_dtype(dtype)).reshape(tuple(shape)).copy()
+    return unflatten_from_paths(arrs)
+
+
+def encode_chunk(tree: PyTree, *, meta: Dict[str, Any],
+                 codec: str = "auto") -> bytes:
+    return workers.encode_chunk_items(tree_to_items(tree), meta, codec)
 
 
 def decode_chunk(blob: bytes, *, verify: bool = True) -> Tuple[PyTree, Dict]:
-    payload = msgpack.unpackb(blob, raw=False)
-    if payload.get("version") != FORMAT_VERSION:
-        raise ChunkCorruption(f"bad chunk version {payload.get('version')}")
-    items: Dict[str, np.ndarray] = {}
-    for t in payload["tensors"]:
-        if verify and (zlib.crc32(t["data"]) & 0xFFFFFFFF) != t["crc"]:
-            raise ChunkCorruption(f"crc mismatch for tensor {t['name']}")
-        arr = compression.decode(
-            t["data"], t["codec"], shape=tuple(t["shape"]),
-            dtype=t["dtype"], extra=t.get("extra"))
-        items[t["name"]] = arr
-    return unflatten_from_paths(items), payload["meta"]
+    meta, items = workers.decode_chunk_items(blob, verify=verify)
+    return items_to_tree(items), meta

@@ -47,6 +47,7 @@ def _pad_cache_to(cache, model, batch, target):
 def serve(*, arch: str, reduced: bool = True, batch: int = 4,
           prompt_len: int = 64, new_tokens: int = 32,
           from_ckpt: Optional[str] = None, store_backend: str = "local",
+          io_backend: str = "thread", io_workers: Optional[int] = None,
           seed: int = 0, greedy: bool = True) -> dict:
     cfg = get_config(arch, reduced=reduced)
     model = build_model(cfg)
@@ -60,7 +61,9 @@ def serve(*, arch: str, reduced: bool = True, batch: int = 4,
         mgr = CheckpointManager(Path(from_ckpt), registry,
                                 make_policy("full", model.layer_units()),
                                 async_save=False,
-                                store_backend=store_backend)
+                                store_backend=store_backend,
+                                io_backend=io_backend,
+                                io_workers=io_workers)
         like = steps_lib.state_specs(model)
         # Weights-only partial restore: optimizer objects are never read.
         state = mgr.restore(like, parts=("params",))
@@ -134,6 +137,13 @@ def main() -> None:
                          "remote3 promote read objects into the RAM tier; "
                          "remote3 re-warms a lost disk copy from the "
                          "remote tier)")
+    ap.add_argument("--io-backend", default="thread",
+                    choices=["thread", "process"],
+                    help="IO worker backend for --from-ckpt loading: "
+                         "'process' decodes/verifies objects in "
+                         "subprocess workers (GIL-free restore)")
+    ap.add_argument("--io-workers", type=int,
+                    help="process backend: subprocess IO worker count")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     print(json.dumps(serve(arch=args.arch, batch=args.batch,
@@ -141,6 +151,8 @@ def main() -> None:
                            new_tokens=args.new_tokens,
                            from_ckpt=args.from_ckpt,
                            store_backend=args.store_backend,
+                           io_backend=args.io_backend,
+                           io_workers=args.io_workers,
                            seed=args.seed),
                      indent=2))
 

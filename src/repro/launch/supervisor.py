@@ -141,6 +141,8 @@ class Supervisor:
         seq_len: int = 16,
         policy: str = "full",
         store_backend: str = "local",
+        io_backend: str = "thread",
+        io_workers: Optional[int] = None,
         participants: Sequence[int] = (1,),
         injections: Sequence[Injection] = (),
         verify_restore: bool = False,
@@ -160,6 +162,8 @@ class Supervisor:
         self.seq_len = seq_len
         self.policy = policy
         self.store_backend = store_backend
+        self.io_backend = io_backend
+        self.io_workers = io_workers
         self.participants = [int(p) for p in participants] or [1]
         self.injections = list(injections)
         self.verify_restore = verify_restore
@@ -194,12 +198,15 @@ class Supervisor:
             "--ckpt-interval", str(self.interval),
             "--ckpt-dir", str(self.ckpt_dir),
             "--store-backend", self.store_backend,
+            "--io-backend", self.io_backend,
             "--shard-participants", str(self._participants_for(attempt)),
             "--seed", str(self.seed),
             "--handle-sigterm",
             "--progress-file", str(progress),
             "--log-csv", str(losses),
         ]
+        if self.io_workers is not None:
+            argv += ["--io-workers", str(self.io_workers)]
         if _latest_committed(self.ckpt_dir) is not None:
             argv.append("--resume")
         if injection is not None and injection.kind == "crash":
@@ -447,6 +454,12 @@ def main() -> None:
     ap.add_argument("--policy", default="full")
     ap.add_argument("--ckpt-interval", type=int, default=8)
     ap.add_argument("--store-backend", default="local")
+    ap.add_argument("--io-backend", default="thread",
+                    choices=["thread", "process"],
+                    help="trainer IO lane worker backend (forwarded to "
+                         "repro.launch.train --io-backend)")
+    ap.add_argument("--io-workers", type=int,
+                    help="process backend: subprocess IO worker count")
     ap.add_argument("--participants", default="1",
                     help="comma-separated per-attempt plan, e.g. 2,1")
     ap.add_argument("--inject", action="append", default=[],
@@ -472,6 +485,7 @@ def main() -> None:
         steps=args.steps, batch=args.batch, seq_len=args.seq_len,
         policy=args.policy, interval=args.ckpt_interval,
         store_backend=args.store_backend,
+        io_backend=args.io_backend, io_workers=args.io_workers,
         participants=[int(p) for p in args.participants.split(",")],
         injections=injections, verify_restore=args.verify_restore,
         scrub_on_restart=args.scrub_on_restart,

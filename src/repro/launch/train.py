@@ -113,6 +113,8 @@ def train(
     ckpt_fingerprint: bool = True,
     codec: str = "auto",
     store_backend: str = "local",
+    io_backend: str = "thread",
+    io_workers: Optional[int] = None,
     spill_threads: int = 2,
     hot_budget_mb: Optional[int] = None,
     spill_barrier: bool = False,
@@ -142,6 +144,8 @@ def train(
                             codec=codec, async_save=ckpt_async,
                             fingerprint=ckpt_fingerprint,
                             store_backend=store_backend,
+                            io_backend=io_backend,
+                            io_workers=io_workers,
                             spill_threads=spill_threads,
                             hot_budget_bytes=(hot_budget_mb * 2**20
                                               if hot_budget_mb else None),
@@ -315,6 +319,7 @@ def train(
         "steps": total_steps - start,
         # tier accounting (see docs/storage.md)
         "store_backend": store_backend,
+        "io_backend": io_backend,
         "spill_drain_seconds": spill_drain_seconds,
         "tier_stats": tier_stats,
         # fsck report of the scrub-on-start pass (None when not run)
@@ -360,6 +365,15 @@ def main() -> None:
                          "before training/resume: repair corrupt tier "
                          "copies from any good one, quarantine the "
                          "unrecoverable")
+    ap.add_argument("--io-backend", default="thread",
+                    choices=["thread", "process"],
+                    help="IO lane worker backend: 'process' runs the hot "
+                         "byte work (hashing, codecs, atomic writes) in "
+                         "subprocess workers over shared memory, escaping "
+                         "the GIL; 'thread' keeps it in-process")
+    ap.add_argument("--io-workers", type=int,
+                    help="process backend: number of subprocess IO "
+                         "workers (default max(2, pool threads))")
     ap.add_argument("--spill-threads", type=int, default=2,
                     help="tiered backend: threads on the spill lane of "
                          "the shared transfer pool")
@@ -405,6 +419,7 @@ def main() -> None:
                 ckpt_dir=args.ckpt_dir, ckpt_async=not args.sync_save,
                 ckpt_fingerprint=not args.no_fingerprint,
                 codec=args.codec, store_backend=args.store_backend,
+                io_backend=args.io_backend, io_workers=args.io_workers,
                 spill_threads=args.spill_threads,
                 hot_budget_mb=args.hot_budget_mb,
                 spill_barrier=args.spill_barrier,

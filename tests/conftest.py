@@ -18,6 +18,25 @@ def pytest_configure(config):
         "markers",
         "slow: long end-to-end trainer/subprocess tests (excluded from the "
         "smoke tier: scripts/check.sh smoke)")
+    config.addinivalue_line(
+        "markers",
+        "process_io: subprocess IO-worker conformance/stress tests "
+        "(spawn worker processes and shared-memory segments; see "
+        "tests/test_io_workers.py)")
+
+
+@pytest.fixture(scope="session", autouse=True)
+def shm_clean_guard():
+    """/dev/shm hygiene: every ``repro-io-*`` shared-memory segment this
+    test process created (process-backed IO lanes) must be unlinked by
+    the time the session ends — a leak here means some TransferPool or
+    ProcessWorkerPool was never closed."""
+    import glob
+    prefix = f"/dev/shm/repro-io-{os.getpid():x}-"
+    yield
+    leftovers = sorted(glob.glob(prefix + "*"))
+    assert not leftovers, (
+        f"leaked IO-worker shared-memory segments: {leftovers}")
 
 
 @pytest.fixture(scope="session")

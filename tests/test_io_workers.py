@@ -1,0 +1,443 @@
+"""Process-backed IO lanes: conformance, conformity under faults, stress.
+
+The tentpole invariant: ``io_backend="process"`` (subprocess workers +
+shared-memory payloads) is byte-for-byte indistinguishable from the
+thread backend — identical manifests, identical object digests on disk,
+bit-exact restored tensors — including across a process restart and
+under injected crashes/worker deaths.  Plus the worker-hygiene
+invariants (workers never import jax; /dev/shm segments never leak) and
+the lane-accounting regression (draining one lane while another is
+flooded).
+"""
+import glob
+import os
+import signal
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import faults, workers
+from repro.checkpoint.async_io import (
+    AsyncWriteError,
+    ProcessWorkerPool,
+    TransferPool,
+)
+from repro.checkpoint.faults import InjectedCrash
+from repro.checkpoint.saver import CheckpointManager
+from repro.checkpoint.serial import ChunkCorruption
+from repro.configs import get_config
+from repro.core import LayerRegistry, make_policy
+from repro.kernels.block_fp import ref as fp_ref
+from repro.launch import steps as steps_lib
+from repro.models import build_model
+
+ARCH = "llama3.2-3b"
+
+
+def _own_shm():
+    """Shared-memory segments created by THIS process's arenas."""
+    return sorted(glob.glob(f"/dev/shm/repro-io-{os.getpid():x}-*"))
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    faults.disarm()
+    yield
+    faults.disarm()
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config(ARCH, reduced=True)
+    model = build_model(cfg)
+    state1 = steps_lib.init_state(model, jax.random.key(0))
+
+    def poke(x):
+        x = np.array(x)
+        x.flat[:1] += 1
+        return x
+
+    # Every leaf drifts, so event 2 really exercises gather/encode/write
+    # on every (unit, kind) — no dedup early-outs.
+    state2 = {"step": np.array(state1["step"]),
+              "params": jax.tree.map(poke, state1["params"]),
+              "opt": jax.tree.map(poke, state1["opt"])}
+    return model, LayerRegistry(model), state1, state2
+
+
+def _assert_states_equal(a, b, parts=("params", "opt")):
+    for part in parts:
+        for x, y in zip(jax.tree.leaves(a[part]), jax.tree.leaves(b[part])):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _manifest_sig(mgr, step):
+    """(digest, stored, delta_base) of every (unit, kind) at ``step``."""
+    m = mgr.manifests.load(step)
+    assert m is not None
+    return {(unit, kind): (e.digest, e.stored, e.delta_base)
+            for unit, kinds in m.entries.items()
+            for kind, e in kinds.items()}
+
+
+# ------------------------------------------------------ conformance matrix
+@pytest.mark.process_io
+@pytest.mark.parametrize("store", ["local", "tiered"])
+def test_conformance_matrix_bit_exact(setup, tmp_path, store):
+    """worker_backend x store_backend: two identical save sequences, one
+    per worker backend, must produce identical manifests (digest, stored
+    form, delta base per entry), identical object sets on disk, and —
+    after a manager restart — bit-exact restored tensors."""
+    model, registry, state1, state2 = setup
+    like = steps_lib.state_specs(model)
+    runs = {}
+    for backend in ("thread", "process"):
+        root = tmp_path / backend
+        pol = make_policy("full", model.layer_units())
+        mgr = CheckpointManager(root, registry, pol, fp_block_bytes=4096,
+                                store_backend=store, io_backend=backend,
+                                io_workers=2)
+        mgr.save(state1, step=10)
+        mgr.save(state2, step=20)
+        assert mgr.last_save_stats["io_backend"] == backend
+        if backend == "process":
+            w = mgr.last_save_stats["workers"]
+            assert w["worker_restarts"] == 0
+            assert sum(l["tasks"] for l in w["lanes"].values()) > 0
+        sigs = {s: _manifest_sig(mgr, s) for s in (10, 20)}
+        digests = sorted(mgr.store.iter_digests())
+        mgr.close()
+
+        # Restart: a fresh manager on the same root (fresh worker fleet
+        # under the process backend) restores the committed truth.
+        mgr2 = CheckpointManager(root, registry, pol, async_save=False,
+                                 store_backend=store, io_backend=backend,
+                                 io_workers=2)
+        got = mgr2.restore(like, step=20)
+        rstats = dict(mgr2.last_restore_stats)
+        assert rstats["io_backend"] == backend
+        assert not rstats["fallback_units"]
+        _assert_states_equal(state2, got)
+        leaves = [np.asarray(x).tobytes() for part in ("params", "opt")
+                  for x in jax.tree.leaves(got[part])]
+        mgr2.close()
+        runs[backend] = (sigs, digests, leaves, rstats)
+
+    tsig, tdig, tleaves, _ = runs["thread"]
+    psig, pdig, pleaves, prs = runs["process"]
+    assert tsig == psig, "manifests differ between worker backends"
+    assert tdig == pdig, "object digest sets differ between worker backends"
+    assert tleaves == pleaves, "restored bytes differ between worker backends"
+    # The process restore actually offloaded work to subprocess workers.
+    assert prs["workers"]["tasks"] > 0
+    assert prs["workers"]["worker_restarts"] == 0
+    assert not _own_shm()
+
+
+@pytest.mark.process_io
+def test_gc_parity_thread_vs_process(setup, tmp_path):
+    """Retention GC sweeps the same objects under either worker backend:
+    after the oldest manifest drops out, the surviving digest sets are
+    identical and the latest event still restores bit-exact."""
+    model, registry, state1, state2 = setup
+    like = steps_lib.state_specs(model)
+    survivors = {}
+    for backend in ("thread", "process"):
+        pol = make_policy("full", model.layer_units())
+        mgr = CheckpointManager(tmp_path / backend, registry, pol,
+                                fp_block_bytes=4096, keep=1,
+                                io_backend=backend, io_workers=2)
+        mgr.save(state1, step=10)
+        mgr.save(state2, step=20)  # keep=1: step 10 is GC'd here
+        assert mgr.manifests.all_steps() == [20]
+        survivors[backend] = sorted(mgr.store.iter_digests())
+        got = mgr.restore(like, step=20)
+        _assert_states_equal(state2, got)
+        mgr.close()
+    assert survivors["thread"] == survivors["process"]
+
+
+# ------------------------------------------------- crash-matrix sample
+@pytest.mark.process_io
+@pytest.mark.parametrize("point", ["gather", "object_write",
+                                   "manifest_commit"])
+def test_crash_matrix_sample_process_backend(setup, tmp_path, point):
+    """A sample of the resiliency crash matrix re-run under the process
+    backend: die mid-save of event 2, previous manifest stays
+    authoritative and restores bit-exact with zero fallbacks."""
+    model, registry, state1, state2 = setup
+    pol = make_policy("full", model.layer_units())
+    mgr = CheckpointManager(tmp_path, registry, pol, fp_block_bytes=4096,
+                            io_backend="process", io_workers=2)
+    mgr.save(state1, step=10)
+    with faults.scoped(point):
+        with pytest.raises((InjectedCrash, AsyncWriteError)):
+            mgr.save(state2, step=20)
+    assert not faults.pending()
+    try:
+        mgr.close()
+    except (AsyncWriteError, InjectedCrash):
+        pass
+
+    mgr2 = CheckpointManager(tmp_path, registry, pol, async_save=False,
+                             io_backend="process", io_workers=2)
+    assert mgr2.manifests.latest_step() == 10
+    got = mgr2.restore(steps_lib.state_specs(model))
+    assert int(np.asarray(got["step"])) == 10
+    assert not mgr2.last_restore_stats["fallback_units"]
+    _assert_states_equal(state1, got)
+    mgr2.close()
+    assert not _own_shm()
+
+
+# --------------------------------------------------------- worker hygiene
+@pytest.mark.process_io
+def test_worker_processes_never_import_jax():
+    pool = ProcessWorkerPool(1)
+    try:
+        info = pool.call("ping")
+        assert info["pid"] != os.getpid()
+        assert info["jax"] is False
+        mods = pool.call("modules")
+        assert not any(m == "jax" or m.startswith(("jax.", "repro."))
+                       for m in mods), "worker imported jax or repro"
+    finally:
+        pool.close()
+
+
+def test_fingerprint_pairs_matches_kernel_ref():
+    """workers.fingerprint_pairs intentionally duplicates the block_fp
+    reference (delegating either way would taint the worker with jax or
+    create an import cycle) — pin them bit-identical."""
+    rs = np.random.RandomState(0)
+    for n in (0, 1, 5, 4095, 4096, 4097, 65536, 200001):
+        raw = rs.bytes(n)
+        np.testing.assert_array_equal(
+            workers.fingerprint_pairs(raw, 4096),
+            fp_ref.fingerprint_bytes(raw, 4096))
+
+
+@pytest.mark.process_io
+def test_worker_errors_map_to_parent_exceptions(tmp_path):
+    """IoDispatch maps worker error kinds back onto the exact exception
+    types the inline (thread) path raises — callers can't tell the
+    backends apart by except clause."""
+    tp = TransferPool(2, worker_backend="process", io_workers=1,
+                      shm_min_bytes=1024)
+    try:
+        d = tp.dispatch
+        with pytest.raises(ChunkCorruption):
+            d.call("decode_chunk_items", b"definitely not msgpack", True)
+        with pytest.raises(FileNotFoundError):
+            d.call("file_read", str(tmp_path / "missing" / "nope.chunk"))
+        with pytest.raises(AsyncWriteError, match="worker task failed"):
+            d.call("boom", "kaput")
+        # The pool survives mapped errors — no restarts, still serving.
+        assert tp.workers.stats()["worker_restarts"] == 0
+        assert d.call("echo", 7) == 7
+    finally:
+        tp.close()
+
+
+@pytest.mark.process_io
+def test_worker_file_io_roundtrip_via_shm(tmp_path):
+    pool = ProcessWorkerPool(1, shm_min_bytes=1024)
+    try:
+        data = os.urandom(200_000)
+        path = str(tmp_path / "ab" / "obj.chunk")
+        assert pool.call("file_write_atomic", path, data, False,
+                         "deadbeef-1") == len(data)
+        assert pool.call("file_read", path) == data
+        # No tmp debris: the worker's atomic_write renamed into place.
+        assert os.listdir(tmp_path / "ab") == ["obj.chunk"]
+        st = pool.stats()
+        assert st["lanes"]["io"]["bytes_shm"] >= len(data)
+    finally:
+        pool.close()
+    assert not _own_shm()
+
+
+@pytest.mark.process_io
+def test_pool_start_sweeps_dead_owner_shm_debris(tmp_path):
+    """A SIGKILLed process can never unlink its own arena/scratch files
+    — the next pool start must reclaim debris whose embedded creator
+    pid is dead, and must leave a live pid's files alone."""
+    import subprocess, sys
+    proc = subprocess.Popen([sys.executable, "-c", "pass"])
+    proc.wait()  # dead, reaped pid — guaranteed not alive
+    dead = f"/dev/shm/repro-io-{proc.pid:x}-feed00-s1"
+    live = f"/dev/shm/repro-io-{os.getpid():x}-feed00-s1"
+    with open(dead, "wb") as f:
+        f.write(b"x")
+    with open(live, "wb") as f:
+        f.write(b"x")
+    try:
+        pool = ProcessWorkerPool(1)
+        pool.close()
+        assert not os.path.exists(dead)
+        assert os.path.exists(live)  # own pid: never swept by others
+    finally:
+        for p in (dead, live):
+            try:
+                os.unlink(p)
+            except OSError:
+                pass
+
+
+# ---------------------------------------- lane accounting (regression)
+def test_drain_lane_isolated_from_flooded_lane():
+    """Regression for the outstanding()/drain() lane-accounting race:
+    draining one lane must neither wait on nor steal errors from a lane
+    that is flooded with slow/failing work."""
+    tp = TransferPool(4)
+    gate = threading.Event()
+    try:
+        blockers = [tp.submit("slow", gate.wait, 30) for _ in range(3)]
+        p = tp.submit("fast", lambda: 42)
+        t0 = time.time()
+        tp.drain("fast")  # must not wait for the flooded lane
+        assert time.time() - t0 < 5.0
+        assert p.result() == 42
+        assert tp.outstanding("fast") == 0
+        assert tp.outstanding("slow") == 3
+
+        tp.submit("slow", lambda: 1 / 0)
+        gate.set()
+        tp.drain("fast")  # still clean: slow's error must not leak here
+        with pytest.raises(AsyncWriteError, match="lane 'slow'"):
+            tp.drain("slow")
+        assert tp.outstanding("slow") == 0
+        for b in blockers:
+            assert b.result() is not None or b.done()
+    finally:
+        gate.set()
+        tp.close()
+
+
+# ----------------------------------------------------------- stress tier
+@pytest.mark.process_io
+def test_stress_interleaved_submit_drain():
+    """Hundreds of interleaved submit/drain calls from multiple threads
+    across shared lanes must complete inside a bounded wall-clock (no
+    deadlock) with exact task accounting and no shm leaks."""
+    tp = TransferPool(4, worker_backend="process", io_workers=2,
+                      shm_min_bytes=1024)
+    errors = []
+    per_thread, n_threads = 60, 6
+
+    def hammer(idx):
+        rs = np.random.RandomState(idx)
+        lane = f"lane{idx % 3}"
+        for i in range(per_thread):
+            payload = rs.bytes(int(rs.randint(16, 5000)))
+            tp.submit_task(lane, "blake2_hex", payload)
+            if i % 7 == idx % 7:
+                try:
+                    tp.drain(lane)
+                except AsyncWriteError as e:  # pragma: no cover
+                    errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(i,))
+               for i in range(n_threads)]
+    t0 = time.time()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert all(not t.is_alive() for t in threads), "stress run deadlocked"
+    tp.drain_all()
+    assert not errors
+    st = tp.stats()
+    assert sum(l["tasks"] for l in st["lanes"].values()) \
+        == per_thread * n_threads
+    assert st["worker_restarts"] == 0
+    tp.close()
+    assert time.time() - t0 < 120
+    assert not _own_shm()
+
+
+@pytest.mark.process_io
+def test_stress_close_races_submitters():
+    """close() racing live submitters: accepted work drains, late
+    submitters get a loud AsyncWriteError, nothing hangs, no shm leaks."""
+    for _ in range(3):
+        tp = TransferPool(3, worker_backend="process", io_workers=2,
+                          shm_min_bytes=1024)
+
+        def submitter():
+            while True:
+                try:
+                    tp.submit_task("w", "echo", b"x" * 2048)
+                except AsyncWriteError:
+                    return  # pool closed underneath us — expected
+
+        threads = [threading.Thread(target=submitter) for _ in range(4)]
+        for t in threads:
+            t.start()
+        time.sleep(0.15)
+        tp.close()
+        for t in threads:
+            t.join(timeout=60)
+        assert all(not t.is_alive() for t in threads), "submitter hung"
+        assert not _own_shm()
+
+
+@pytest.mark.process_io
+def test_worker_sigkill_mid_task_fails_loudly_and_respawns():
+    """SIGKILL a worker mid-task: the in-flight call fails with
+    AsyncWriteError (never hangs), the pool respawns a replacement, and
+    later calls succeed."""
+    pool = ProcessWorkerPool(1, shm_min_bytes=1024)
+    try:
+        pid0 = pool.worker_pids()[0]
+        res = {}
+
+        def victim():
+            try:
+                pool.call("sleep", 30.0)
+            except BaseException as e:  # noqa: BLE001
+                res["exc"] = e
+
+        th = threading.Thread(target=victim)
+        th.start()
+        time.sleep(0.3)  # let the request reach the worker
+        os.kill(pid0, signal.SIGKILL)
+        th.join(timeout=30)
+        assert not th.is_alive(), "call hung on a SIGKILLed worker"
+        assert isinstance(res.get("exc"), AsyncWriteError)
+        assert str(pid0) in str(res["exc"])
+        assert pool.stats()["worker_restarts"] == 1
+        info = pool.call("ping")  # the replacement is live
+        assert info["pid"] != pid0
+    finally:
+        pool.close()
+    assert not _own_shm()
+
+
+@pytest.mark.process_io
+def test_worker_death_mid_sequence_prior_event_survives(setup, tmp_path):
+    """Kill the whole worker fleet between events: the next save fails
+    loudly (AsyncWriteError on the write lane's drain), the fleet
+    respawns, the RETRY of the same step commits, and the previously
+    completed event restores bit-exact throughout."""
+    model, registry, state1, state2 = setup
+    pol = make_policy("full", model.layer_units())
+    mgr = CheckpointManager(tmp_path, registry, pol, fp_block_bytes=4096,
+                            io_backend="process", io_workers=2)
+    mgr.save(state1, step=10)
+    for pid in mgr.transfer_pool.workers.worker_pids():
+        os.kill(pid, signal.SIGKILL)
+    with pytest.raises(AsyncWriteError):
+        mgr.save(state2, step=20)
+    assert mgr.transfer_pool.workers.stats()["worker_restarts"] >= 1
+
+    m = mgr.save(state2, step=20)  # retry on the respawned fleet
+    assert m.step == 20
+    like = steps_lib.state_specs(model)
+    _assert_states_equal(state1, mgr.restore(like, step=10))
+    _assert_states_equal(state2, mgr.restore(like, step=20))
+    mgr.close()
+    assert not _own_shm()
