@@ -52,8 +52,17 @@ if [ "${1:-}" = "smoke" ]; then
   echo "# supervisor smoke (SIGKILL + SIGTERM drills -> elastic restart ->"
   echo "#                   goodput report; writes BENCH_resiliency.json)"
   python scripts/supervisor_smoke.py
+  echo "# overlap smoke (--ckpt-spread-steps 2 zero-stall pipeline vs sync"
+  echo "#                saves: bit-exact restore, no staging-slot leaks)"
+  python scripts/overlap_smoke.py
   echo "# bench_ckpt_time --smoke (save+restore pipelines end to end)"
   python benchmarks/bench_ckpt_time.py --smoke
+  echo "# /dev/shm hygiene (no leaked worker or staging segments after smokes)"
+  if ls /dev/shm/repro-io-* >/dev/null 2>&1; then
+    echo "ERROR: leaked shared-memory segments (worker arena or staging slots):" >&2
+    ls /dev/shm/repro-io-* >&2
+    exit 1
+  fi
   exit 0
 fi
 exec python -m pytest -x -q "$@"

@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Overlapped-save smoke for the CI smoke tier (``scripts/check.sh smoke``).
+
+Runs the real trainer twice at the same checkpoint cadence — once with
+synchronous saves, once with ``--ckpt-spread-steps 2`` (the zero-stall
+overlapped snapshot/writeback pipeline, docs/perf.md) — then restores
+from each run's manifest chain and asserts:
+
+1. both restores are bit-exact against each other AND report zero
+   fallback units (the overlapped pipeline changes WHEN bytes move,
+   never WHICH bytes land),
+2. the overlapped run actually pipelined (spread slices advanced),
+3. no ``repro-io-*`` shared-memory segment (worker arena or staging
+   slot) outlives the runs.
+"""
+from __future__ import annotations
+
+import glob
+import shutil
+import sys
+import tempfile
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SRC = ROOT / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+STEPS, INTERVAL = 7, 3
+
+
+def main() -> int:
+    import jax
+    import numpy as np
+    from repro.checkpoint.saver import CheckpointManager
+    from repro.configs import get_config
+    from repro.core import LayerRegistry, make_policy
+    from repro.launch import steps as steps_lib
+    from repro.launch.train import train
+    from repro.models import build_model
+
+    tmp = Path(tempfile.mkdtemp(prefix="overlap_smoke_"))
+    try:
+        results = {}
+        for tag, spread in (("sync", 0), ("overlapped", 2)):
+            results[tag] = train(
+                arch="llama3.2-3b", total_steps=STEPS, batch=2, seq_len=16,
+                policy_name="full", ckpt_interval=INTERVAL,
+                ckpt_dir=str(tmp / tag), ckpt_spread_steps=spread, seed=7)
+        ov = results["overlapped"]
+        assert ov["save_mode"] == "overlapped", ov["save_mode"]
+        assert ov["overlap_slices"] > 0, ov
+
+        cfg = get_config("llama3.2-3b", reduced=True)
+        model = build_model(cfg)
+        restored = {}
+        for tag in ("sync", "overlapped"):
+            mgr = CheckpointManager(tmp / tag, LayerRegistry(model),
+                                    make_policy("full", model.layer_units()),
+                                    async_save=False)
+            restored[tag] = mgr.restore(steps_lib.state_specs(model))
+            stats = mgr.last_restore_stats
+            mgr.close()
+            assert not stats["fallback_units"], (tag, stats)
+
+        assert int(restored["sync"]["step"]) == int(
+            restored["overlapped"]["step"])
+        for key in ("params", "opt"):
+            for a, b in zip(jax.tree.leaves(restored["sync"][key]),
+                            jax.tree.leaves(restored["overlapped"][key])):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        leaked = glob.glob("/dev/shm/repro-io-*")
+        assert not leaked, f"leaked staging/worker segments: {leaked}"
+
+        print(f"overlap_smoke: OK (restored step "
+              f"{int(restored['sync']['step'])} bit-exact sync vs "
+              f"overlapped, slices={ov['overlap_slices']}, "
+              f"stall_s={ov['stall_seconds']:.3f} vs "
+              f"sync {results['sync']['stall_seconds']:.3f})")
+        return 0
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -44,10 +44,6 @@ def main() -> int:
             arch="llama3.2-3b", steps=STEPS, interval=INTERVAL,
             batch=2, seq_len=16, policy="full", seed=7,
             participants=(2, 2, 1),
-            # The child's progress feed is write-buffered, so a signal
-            # scheduled at step N can land 2-3 steps later; keep enough
-            # steps after the sigterm that the preemption always beats
-            # normal completion.
             injections=[Injection("kill", at_step=6),
                         Injection("sigterm", at_step=7)],
             verify_restore=True)

@@ -216,6 +216,144 @@ class _ShmArena:
                 pass
 
 
+class StagingSlot:
+    """One pinned-host staging buffer (a ``/dev/shm`` segment): the
+    landing zone a checkpoint unit's gathered payload is packed into
+    before the writer consumes it.  ``pack`` appends bytes and returns a
+    zero-copy memoryview; views stay valid until the slot is released
+    back to its arena (the writer converts to ``bytes`` on ITS thread —
+    off the training thread's stall path)."""
+
+    def __init__(self, name: str, shm):
+        self.name = name
+        self._shm = shm
+        self._used = 0
+
+    @property
+    def capacity(self) -> int:
+        return self._shm.size
+
+    def reset(self) -> None:
+        self._used = 0
+
+    def pack(self, data) -> memoryview:
+        """Append ``data`` (bytes/memoryview/buffer) and return the view
+        of where it landed."""
+        n = data.nbytes if hasattr(data, "nbytes") else len(data)
+        end = self._used + n
+        assert end <= self._shm.size, (end, self._shm.size)
+        self._shm.buf[self._used:end] = memoryview(data).cast("B")
+        view = self._shm.buf[self._used:end]
+        self._used = end
+        return view
+
+
+class StagingArena:
+    """Double-buffered staging area for the overlapped save pipeline
+    (docs/perf.md).
+
+    ``slots`` initial ``/dev/shm`` segments named
+    ``repro-io-<pid:x>-stage-<n>`` — the same owner-pid convention as the
+    worker arena, so :func:`sweep_dead_owner_shm` and the test-suite /
+    ``check.sh`` leak guards cover them for free.  ``acquire(nbytes)``
+    hands out a free slot, minting a new one when all are checked out
+    and ``max_slots`` allows — so a slow writeback never stalls staging,
+    and the staged footprint tops out at one event's payload (exactly
+    what the synchronous saver queues in RAM).  With ``max_slots`` set,
+    acquire blocks instead once the bound is reached — the hard
+    backpressure form.  Slots are recycled across events and grow
+    monotonically to the largest unit seen (recreated, not copied)."""
+
+    def __init__(self, slots: int = 2, min_bytes: int = SHM_MIN_BYTES,
+                 max_slots: Optional[int] = None):
+        self._lock = threading.Lock()
+        self._available = threading.Condition(self._lock)
+        self._free: List[StagingSlot] = []
+        self._all: List[StagingSlot] = []
+        self._closed = False
+        self._next = 0
+        self.min_bytes = int(min_bytes)
+        self.max_slots = max_slots
+        self._prefix = f"repro-io-{os.getpid():x}-stage"
+        for _ in range(max(1, int(slots))):
+            self._free.append(self._mint())
+
+    def _mint(self) -> StagingSlot:
+        """Create one segment (caller holds the lock or is __init__)."""
+        shm = shared_memory.SharedMemory(
+            name=f"{self._prefix}-{self._next:x}", create=True,
+            size=self.min_bytes)
+        self._next += 1
+        slot = StagingSlot(shm.name, shm)
+        self._all.append(slot)
+        return slot
+
+    def acquire(self, nbytes: int, timeout: float = 120.0) -> StagingSlot:
+        with self._available:
+            while not self._free:
+                if self._closed:
+                    raise AsyncWriteError("staging arena is closed")
+                if (self.max_slots is None
+                        or len(self._all) < self.max_slots):
+                    self._free.append(self._mint())
+                    break
+                if not self._available.wait(timeout):
+                    raise AsyncWriteError(
+                        f"no staging slot freed in {timeout}s "
+                        "(writeback stalled?)")
+            if self._closed:
+                raise AsyncWriteError("staging arena is closed")
+            slot = self._free.pop()
+        if slot.capacity < nbytes:
+            slot = self._grow(slot, nbytes)
+        slot.reset()
+        return slot
+
+    def _grow(self, slot: StagingSlot, nbytes: int) -> StagingSlot:
+        size = 1 << max(1, int(nbytes) - 1).bit_length()
+        size = max(size, self.min_bytes)
+        name = slot.name
+        slot._shm.close()
+        try:
+            slot._shm.unlink()
+        except FileNotFoundError:  # pragma: no cover - already swept
+            pass
+        shm = shared_memory.SharedMemory(name=name, create=True, size=size)
+        new = StagingSlot(shm.name, shm)
+        with self._lock:
+            self._all[self._all.index(slot)] = new
+        return new
+
+    def release(self, slot: StagingSlot) -> None:
+        """Return a slot once the unit's write resolved (its memoryviews
+        must no longer be referenced)."""
+        with self._available:
+            if self._closed or slot not in self._all:
+                return
+            self._free.append(slot)
+            self._available.notify()
+
+    def segment_names(self) -> List[str]:
+        with self._lock:
+            return sorted(s.name for s in self._all)
+
+    def close(self) -> None:
+        with self._available:
+            if self._closed:
+                return
+            self._closed = True
+            slots = list(self._all)
+            self._all.clear()
+            self._free.clear()
+            self._available.notify_all()
+        for s in slots:
+            try:
+                s._shm.close()
+                s._shm.unlink()
+            except FileNotFoundError:  # pragma: no cover - already gone
+                pass
+
+
 # -c bootstrap for worker processes: load workers.py by *file path* under
 # a private module name so the child never imports the repro package
 # (whose __init__ chain pulls in jax).

@@ -896,7 +896,10 @@ class ChunkStore:
                         "dtype": l.dtype, "nbytes": l.nbytes,
                         "block": l.block_bytes,
                         "idx": [] if l.idx is None else list(map(int, l.idx)),
-                        "data": l.data}
+                        # staged payloads arrive as memoryviews into a
+                        # staging slot; materialize on THIS (writer) thread
+                        "data": (l.data if isinstance(l.data, bytes)
+                                 else bytes(l.data))}
                        for l in packet.leaves if l.idx is None or len(l.idx)]
             blob = self.dispatch.call(
                 "block_delta_encode", records,

@@ -28,6 +28,13 @@ Catalog (``CRASH_POINTS``) — where each named point fires:
                       is written
 ``manifest_latest``   ``ManifestStore.commit``: after the manifest file,
                       before the LATEST pointer moves (torn commit)
+``snapshot_overlap``  ``OverlappedSaver.begin``: after the event's device
+                      gathers + async D2H copies are dispatched and
+                      staged, before any spread slice runs (the event is
+                      entirely in flight, nothing committed)
+``spread_slice``      ``OverlappedSaver`` tick: before a spread slice
+                      materializes/writes its share of staged units
+                      (mid-spread, some units written, no commit yet)
 ==================== ======================================================
 
 plus the generic transfer-layer points ``pool:<lane>`` fired by
@@ -76,6 +83,8 @@ CRASH_POINTS = (
     "barrier",
     "manifest_commit",
     "manifest_latest",
+    "snapshot_overlap",
+    "spread_slice",
 )
 
 

@@ -91,19 +91,49 @@ def table_of_tree(tree: PyTree,
     return out
 
 
+def meta_table(tree: PyTree,
+               block_bytes: int = DEFAULT_BLOCK_BYTES) -> List[LeafFP]:
+    """Metadata-only table of a (possibly device-resident) tree: paths,
+    shapes, dtypes, byte lengths — with ZEROED checksum vectors and no
+    data movement at all.  Exactly enough for ``meta_matches``-based
+    planning: the overlapped saver picks delta bases and predicts gather
+    capacities from structure alone, before any fingerprint has crossed
+    to host.  Never pack or hash one."""
+    from repro.checkpoint.serial import flatten_with_paths
+
+    out = []
+    for path, arr in flatten_with_paths(tree):
+        dtype = str(arr.dtype)
+        itemsize = _np_dtype(dtype).itemsize
+        size = 1
+        for d in arr.shape:
+            size *= int(d)
+        nbytes = size * itemsize
+        nb = max(1, -(-nbytes // block_bytes))
+        out.append(LeafFP(path=path, shape=tuple(arr.shape), dtype=dtype,
+                          nbytes=nbytes, block_bytes=block_bytes,
+                          fp=np.zeros((nb, 2), np.uint32), sumsq=None))
+    return out
+
+
 # ------------------------------------------------------------------ packets
 @dataclasses.dataclass
 class LeafPayload:
     """One leaf's contribution to a write: either the full raw bytes
     (``idx is None``) or the gathered dirty blocks (padded to whole
-    blocks, ``idx`` listing their positions)."""
+    blocks, ``idx`` listing their positions).
+
+    ``data`` may be a zero-copy ``memoryview`` into a pinned staging
+    slot (the overlapped saver's ``async_io.StagingArena``); the chunk
+    store materializes ``bytes`` on the writer thread, and the slot is
+    only recycled after the unit's write resolves."""
     path: str
     shape: tuple
     dtype: str
     nbytes: int
     block_bytes: int
     idx: Optional[np.ndarray]
-    data: bytes
+    data: "bytes | memoryview"
 
 
 @dataclasses.dataclass

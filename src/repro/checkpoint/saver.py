@@ -203,6 +203,13 @@ class CheckpointManager:
             return int(m.meta["event_index"]) + 1
         return len(self.manifests.all_steps())
 
+    def reserve_event_index(self) -> int:
+        """The index the next event will commit under.  The overlapped
+        saver captures it at ``begin`` (policy selection keys off the
+        event counter, but the commit lands steps later) and passes it
+        back through ``_commit_event(event_index=...)``."""
+        return self._event_index
+
     def _rebuild_refcounts(self) -> None:
         """Derive object refcounts AND per-unit delta-run lengths from the
         committed manifests.
@@ -276,16 +283,7 @@ class CheckpointManager:
             {u: dict(k) for u, k in prev.entries.items()} if prev else {})
 
         def prev_entry(name: str, kind: str) -> Optional[ChunkRef]:
-            if prev is None:
-                return None
-            e = prev.entries.get(name, {}).get(kind)
-            if e is None or is_sharded(e):
-                # A previous SHARDED entry can't anchor a global-array
-                # dedup/delta (different payload layout): this global
-                # save starts the unit on a fresh full base.  The shard
-                # set itself still carries forward for unselected units.
-                return None
-            return e
+            return self._prev_entry(prev, name, kind)
 
         # Snapshot selected units to host (sync) and enqueue writes (async).
         # The fingerprint path replaces the full device_get with a device
@@ -333,10 +331,58 @@ class CheckpointManager:
         # All chunks must land (on the fast tier at least) before the
         # manifest commits; the optional spill barrier upgrades that to
         # "on the durable tier".
+        t_wb = time.time()
         if self.writer is not None:
             self.writer.drain()
             for (name, kind), p in pending.items():
                 entries.setdefault(name, {})[kind] = p.result()
+        t_writeback = time.time() - t_wb
+        manifest, storage = self._commit_event(
+            step=step, entries=entries, selected=selected, meta=meta,
+            new_fps=new_fps, durability_barrier=durability_barrier)
+        total = time.time() - t0
+        # The synchronous save blocks the caller end to end: the stall is
+        # the whole event (the overlapped saver is where they diverge).
+        self.last_save_stats = self._event_stats(
+            step=step, selected=selected, d2h_bytes=d2h_bytes,
+            blocks_moved=blocks_moved, blocks_total=blocks_total,
+            storage=storage, workers0=workers0,
+            timings={"snapshot_seconds": t_snapshot,
+                     "stage_seconds": 0.0,
+                     "writeback_seconds": t_writeback,
+                     "stall_seconds": total,
+                     "total_seconds": total})
+        return manifest
+
+    def _prev_entry(self, prev: Optional[Manifest], name: str,
+                    kind: str) -> Optional[ChunkRef]:
+        if prev is None:
+            return None
+        e = prev.entries.get(name, {}).get(kind)
+        if e is None or is_sharded(e):
+            # A previous SHARDED entry can't anchor a global-array
+            # dedup/delta (different payload layout): this global
+            # save starts the unit on a fresh full base.  The shard
+            # set itself still carries forward for unselected units.
+            return None
+        return e
+
+    def _commit_event(self, *, step: int, entries, selected, meta,
+                      new_fps, event_index: Optional[int] = None,
+                      durability_barrier: Optional[bool] = None
+                      ) -> Tuple[Manifest, Dict[str, Any]]:
+        """Barrier + manifest commit + refcount/GC bookkeeping.
+
+        The single commit seam shared by the synchronous ``save`` and the
+        overlapped saver (:mod:`repro.checkpoint.overlap`): both paths
+        commit through this exact sequence, which is what makes them
+        bit-exact peers — only *when* the work ran differs.
+
+        ``event_index`` lets an overlapped event commit under the index
+        reserved when it *began* (policy alternation keys off the event
+        counter at selection time, steps before the commit lands); the
+        counter itself only ever moves forward.
+        """
         barrier = (self.spill_barrier if durability_barrier is None
                    else durability_barrier)
         if barrier:
@@ -345,11 +391,12 @@ class CheckpointManager:
         # manifest knows which tier the event's objects were durable on
         # at commit time (e.g. durable_on="hot" while spill is in flight).
         storage = self.store.durability()
+        idx = self._event_index if event_index is None else int(event_index)
         manifest = Manifest(step=step, entries=entries,
-                            meta=dict(meta or {}, event_index=self._event_index,
+                            meta=dict(meta or {}, event_index=idx,
                                       policy=self.policy.name,
                                       storage=storage),
-                            saved_units=selected)
+                            saved_units=list(selected))
         # Re-saving a step overwrites its manifest file: release the
         # replaced manifest's references or its objects leak until restart.
         replaced = self.manifests.load(step)
@@ -357,23 +404,37 @@ class CheckpointManager:
         self.store.incref(manifest.referenced_digests().elements())
         if replaced is not None:
             self.store.decref(replaced.referenced_digests().elements())
-        self._event_index += 1
+        self._event_index = max(self._event_index, idx + 1)
         # The commit is durable: only now may the fingerprint references
         # advance (a failed write above raised before reaching here).
         self._fp_refs.update(new_fps)
         self.gc()
+        return manifest, storage
+
+    def _event_stats(self, *, step: int, selected, d2h_bytes: int,
+                     blocks_moved: int, blocks_total: int, storage,
+                     workers0, timings: Dict[str, float]) -> Dict[str, Any]:
+        """Assemble one event's ``last_save_stats`` dict.
+
+        ``timings`` carries the four-way split (docs/perf.md):
+        ``snapshot_seconds`` (device fingerprint/gather dispatch + the
+        decision pass), ``stage_seconds`` (host materialization of staged
+        buffers), ``writeback_seconds`` (encode+write drain), and
+        ``stall_seconds`` — the time the *caller's step loop* actually
+        blocked, the number the zero-stall pipeline exists to shrink.
+        """
+        pool = self.transfer_pool
         io = dict(self.store.stats)
         if blocks_total:
             dirty_frac = blocks_moved / blocks_total
         else:
             dirty_frac = 1.0 if not self.fingerprint else 0.0
-        self.last_save_stats = {
+        stats = {
             "step": step,
             "selected_units": len(selected),
             "total_units": len(self.registry.units),
             "snapshot_bytes": d2h_bytes,
-            "snapshot_seconds": t_snapshot,
-            "total_seconds": time.time() - t0,
+            **timings,
             # transfer/hash accounting for this event (the fingerprint win)
             "d2h_bytes": d2h_bytes,
             "hashed_bytes": io["hashed_bytes"],
@@ -404,11 +465,11 @@ class CheckpointManager:
                      "bytes_shm": s1["bytes_shm"] - s0["bytes_shm"]}
                 if d["tasks"]:
                     lanes[lane] = d
-            self.last_save_stats["workers"] = {
+            stats["workers"] = {
                 "lanes": lanes,
                 "worker_restarts": w1["worker_restarts"],
             }
-        return manifest
+        return stats
 
     def _save_unit_fp(self, step: int, name: str, kind: str, tree: Any,
                       pref: Optional[ChunkRef]):
@@ -456,34 +517,15 @@ class CheckpointManager:
         # object, exactly like the v1 XOR chain, and the same rebase_every
         # bound forces periodic fulls.
         flat = flatten_with_paths(tree)
-        # Lossy store codecs are excluded (exactly like the v1 XOR chain):
-        # a block delta patches exact bytes onto its base, which a lossy
-        # base cannot provide.
-        use_delta = (self.store.delta and pref is not None
-                     and bool(pref.digest)
-                     and self.store.codec in ("none", "zstd")
-                     and self.store.delta_run(name, kind)
-                     < self.store.rebase_every)
-        base_digest = None
+        base_digest, base_tbl = self._delta_base(name, kind, pref, host)
+        use_delta = base_tbl is not None
         dirty = None
         if use_delta:
-            base_digest = (pref.digest if pref.stored == "full"
-                           else pref.delta_base)
-            base_tbl = (self.store.load_fp_table(base_digest)
-                        if base_digest else None)
-            if (base_tbl is None or len(base_tbl) != len(host)
-                    or not all(h.meta_matches(b)
-                               for h, b in zip(host, base_tbl))):
-                use_delta = False  # no comparable base: write full
-            elif (self.store.object_info(base_digest).get("codec")
-                    not in (None, "none", "zstd")):
-                use_delta = False  # lossy base cannot anchor exact patches
-            else:
-                dirty = [bfp.dirty_block_indices(h, b)
-                         for h, b in zip(host, base_tbl)]
-                if (sum(len(d) for d in dirty)
-                        > self.fp_max_dirty_frac * nb_total):
-                    use_delta = False
+            dirty = [bfp.dirty_block_indices(h, b)
+                     for h, b in zip(host, base_tbl)]
+            if (sum(len(d) for d in dirty)
+                    > self.fp_max_dirty_frac * nb_total):
+                use_delta = False
         # Enqueue all device-side gathers first, then one batched
         # device_get for the whole unit — L leaves cost one D2H round
         # trip, not L.
@@ -526,6 +568,37 @@ class CheckpointManager:
                     stats, cur)
         return (self.store.write_fp(step, name, kind, packet, prev_ref=pref),
                 stats, cur)
+
+    def _delta_base(self, name: str, kind: str, pref: Optional[ChunkRef],
+                    metas) -> Tuple[Optional[str], Optional[list]]:
+        """Structurally usable delta base for (unit, kind), or
+        ``(None, None)``: the previous entry must be digest-addressed,
+        the store codec lossless (a block delta patches exact bytes onto
+        its base, which a lossy base cannot provide — exactly like the
+        v1 XOR chain), the per-unit rebase bound unspent, and the base's
+        stored fingerprint table meta-comparable with ``metas``.
+
+        ``metas`` only needs paths/shapes/dtypes/nbytes/block_bytes
+        (``LeafFP.meta_matches`` never reads the checksum content), so
+        the overlapped saver can plan a base from tree structure alone —
+        before any fingerprint has crossed to host."""
+        if not (self.store.delta and pref is not None and pref.digest
+                and self.store.codec in ("none", "zstd")
+                and self.store.delta_run(name, kind)
+                < self.store.rebase_every):
+            return None, None
+        base_digest = (pref.digest if pref.stored == "full"
+                       else pref.delta_base)
+        base_tbl = (self.store.load_fp_table(base_digest)
+                    if base_digest else None)
+        if (base_tbl is None or len(base_tbl) != len(metas)
+                or not all(m.meta_matches(b)
+                           for m, b in zip(metas, base_tbl))):
+            return None, None  # no comparable base: write full
+        if (self.store.object_info(base_digest).get("codec")
+                not in (None, "none", "zstd")):
+            return None, None  # lossy base cannot anchor exact patches
+        return base_digest, base_tbl
 
     # --------------------------------------------------------------- restore
     def restore(self, state_like: Dict[str, PyTree], *,

@@ -87,3 +87,12 @@ class DeltaTracker:
     def mark_saved(self, params: PyTree, units: Iterable[str]) -> None:
         """After a save event, the saved units' references advance."""
         self.reset(params, units)
+
+    def set_reference(self, name: str, leaves: List[LeafFP]) -> None:
+        """Advance one unit's reference to fingerprints captured at
+        SNAPSHOT time.  The overlapped saver needs this instead of
+        ``mark_saved``: by the time its event commits, the live params
+        have drifted past what the checkpoint actually holds, and
+        re-fingerprinting them would hide that drift from the next
+        event's scores."""
+        self._refs[name] = list(leaves)

@@ -1,0 +1,11 @@
+from repro.kernels.block_gather.ops import (  # noqa: F401
+    QUANT_BLOCK,
+    GatherResult,
+    gather_dirty,
+    gather_tree_dirty,
+    round_capacity,
+)
+from repro.kernels.block_gather.ref import (  # noqa: F401
+    gather_dirty_oracle,
+    quantize_oracle,
+)

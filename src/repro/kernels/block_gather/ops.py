@@ -1,0 +1,194 @@
+"""jit'd wrappers for the fused gather: per-leaf and per-unit dispatch,
+capacity rounding, and the optional on-device int8 composition.
+
+``interpret=None`` auto-selects exactly like ``block_fp.ops``: the Pallas
+kernel on TPU, an op-identical plain-jnp path elsewhere (same bitcasts,
+same wrap-around uint32 sums, ``jnp.nonzero(size=capacity)`` for the
+ascending compaction) so results are bit-identical.  Pass
+``interpret=True`` to force the Pallas kernel through the interpreter
+(how the property tests exercise the kernel body off-TPU).
+
+Capacity is a STATIC shape: the caller predicts it (advisory — e.g. from
+DeltaTracker drift signals), :func:`round_capacity` rounds it up to a
+power of two so recompilation is bounded at O(log n_blocks) variants per
+leaf structure, and the returned ``count`` is authoritative — ``count >
+capacity`` means the prediction was short and the caller re-gathers with
+a larger buffer.  On TPU a capacity whose dense buffer would not fit the
+VMEM carry budget falls back to the jnp path (same bits, streamed HBM).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_fp.ops import (
+    _ROWS,
+    _as_blocks,
+    _block_elems,
+    _device_groups,
+    _fingerprint_jnp,
+    _impl,
+)
+from repro.kernels.block_fp.ref import DEFAULT_BLOCK_BYTES
+from repro.kernels.block_gather.kernel import gather_compact_blocks
+
+# The dense (capacity, epb) out buffer is VMEM-resident carry state in the
+# Pallas path; past this budget the jnp fallback streams through HBM.
+_VMEM_OUT_BUDGET = 8 * 2 ** 20
+
+QUANT_BLOCK = 256  # quantize codec's elements per scale
+
+
+@dataclasses.dataclass
+class GatherResult:
+    """Device results of one leaf's fused gather (fetch only what you
+    need: ``fp``/``idx``/``count`` are tiny, ``blocks`` is the payload)."""
+    fp: Any          # (n_blocks, 2) uint32
+    sumsq: Any       # (n_blocks,) float32 — advisory
+    idx: Any         # (capacity,) int32, dirty indices ascending, -1 fill
+    blocks: Any      # (capacity, elems_per_block) leaf dtype, zero fill
+    count: Any       # () int32 — TOTAL dirty blocks (may exceed capacity)
+    q: Any = None    # (nq, QUANT_BLOCK) int8 when quantized
+    scales: Any = None  # (nq, 1) float32 when quantized
+
+    @property
+    def capacity(self) -> int:
+        return int(self.idx.shape[0])
+
+
+def round_capacity(n: int, n_blocks: int) -> int:
+    """Round a predicted dirty-block count up to a power of two, clamped
+    to [1, n_blocks] — the static-shape discipline that bounds jit
+    recompilation."""
+    n = max(1, min(int(n), int(n_blocks)))
+    cap = 1
+    while cap < n:
+        cap *= 2
+    return min(cap, int(n_blocks))
+
+
+def _quantize_jnp(x: jax.Array, block: int):
+    """The quantize kernel's math as plain jnp (bit-identical: amax/127
+    scale, round-half-even, clip)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    b = flat.reshape(-1, block)
+    amax = jnp.max(jnp.abs(b), axis=1, keepdims=True)
+    scale = jnp.where(amax == 0, 1.0, amax / 127.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(b / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _gather_one(x, ref, *, block_bytes, n_blocks, capacity, impl, quant):
+    if x.dtype == jnp.bool_:
+        x = x.astype(jnp.uint8)
+    epb = _block_elems(x.dtype, block_bytes)
+    ref = jnp.asarray(ref, jnp.uint32)
+    if impl == "jnp":
+        blocks = _as_blocks(x, epb, pad_rows=False)
+        fp, ss = _fingerprint_jnp(blocks)
+        dirty = jnp.any(fp != ref, axis=1)
+        count = jnp.sum(dirty, dtype=jnp.int32)
+        (idx,) = jnp.nonzero(dirty, size=capacity, fill_value=-1)
+        idx = idx.astype(jnp.int32)
+        valid = idx >= 0
+        taken = jnp.take(blocks, jnp.where(valid, idx, 0), axis=0)
+        out = jnp.where(valid[:, None], taken, jnp.zeros((), blocks.dtype))
+    else:
+        blocks = _as_blocks(x, epb, pad_rows=True)
+        pad = blocks.shape[0] - n_blocks
+        if pad:
+            # zero-padded tile rows fingerprint to (0, 0); pad the ref
+            # table to match so padding can never read as dirty
+            ref = jnp.concatenate([ref, jnp.zeros((pad, 2), jnp.uint32)])
+        fp, ss2, idx2, out, cnt = gather_compact_blocks(
+            blocks, ref, capacity=capacity, rows_per_tile=_ROWS,
+            interpret=impl == "pallas-interpret")
+        fp, ss = fp[:n_blocks], ss2[:n_blocks, 0]
+        idx, count = idx2[0], cnt[0, 0]
+    if not quant:
+        return fp, ss, idx, out, count, None, None
+    q, scales = _quantize_jnp(out, QUANT_BLOCK)
+    return fp, ss, idx, out, count, q, scales
+
+
+@functools.partial(jax.jit, static_argnames=("block_bytes", "n_blocks",
+                                             "capacities", "impl", "quant"))
+def _gather_many(xs, refs, *, block_bytes, n_blocks, capacities, impl,
+                 quant):
+    """All of a unit's leaves in ONE dispatch (same rationale as
+    ``block_fp._fingerprint_many``: per-leaf dispatch overhead would dwarf
+    the work on small hosts — and the overlap saver must dispatch a whole
+    unit's device work before donated buffers are reused)."""
+    return tuple(
+        _gather_one(x, r, block_bytes=block_bytes, n_blocks=nb,
+                    capacity=c, impl=impl, quant=quant)
+        for x, r, nb, c in zip(xs, refs, n_blocks, capacities))
+
+
+def _leaf_capacity(cap, nb, dtype, block_bytes, impl):
+    cap = round_capacity(cap, nb)
+    if impl == "pallas" and cap * block_bytes > _VMEM_OUT_BUDGET:
+        return cap, "jnp"
+    return cap, impl
+
+
+def gather_dirty(x: jax.Array, ref_fp, *, capacity: int,
+                 block_bytes: int = DEFAULT_BLOCK_BYTES,
+                 interpret: Optional[bool] = None,
+                 quantize_int8: bool = False) -> GatherResult:
+    """Fused fingerprint + compare-vs-``ref_fp`` + dirty-block compaction
+    of one array.  ``capacity`` is rounded up via :func:`round_capacity`."""
+    x = jnp.asarray(x)
+    epb = _block_elems(
+        jnp.uint8 if x.dtype == jnp.bool_ else x.dtype, block_bytes)
+    nb = max(1, -(-x.size // epb))
+    impl = _impl(interpret)
+    cap, impl = _leaf_capacity(capacity, nb, x.dtype, block_bytes, impl)
+    (res,) = _gather_many(
+        (x,), (jnp.asarray(ref_fp, jnp.uint32),), block_bytes=block_bytes,
+        n_blocks=(nb,), capacities=(cap,), impl=impl, quant=quantize_int8)
+    return GatherResult(*res)
+
+
+def gather_tree_dirty(arrs: Sequence[jax.Array], ref_fps: Sequence[Any],
+                      capacities: Sequence[int], *,
+                      block_bytes: int = DEFAULT_BLOCK_BYTES,
+                      interpret: Optional[bool] = None,
+                      quantize_int8: bool = False) -> List[GatherResult]:
+    """Per-unit fused gather: one jit dispatch per co-located device
+    group (one per unit in the common case), leaves in caller order —
+    the canonical sorted-path order when called from the saver."""
+    arrs = [jnp.asarray(a) for a in arrs]
+    assert len(arrs) == len(ref_fps) == len(capacities)
+    n_blocks = []
+    for a in arrs:
+        epb = _block_elems(
+            jnp.uint8 if a.dtype == jnp.bool_ else a.dtype, block_bytes)
+        n_blocks.append(max(1, -(-a.size // epb)))
+    impl = _impl(interpret)
+    caps, impls = [], []
+    for a, nb, c in zip(arrs, n_blocks, capacities):
+        cap, im = _leaf_capacity(c, nb, a.dtype, block_bytes, impl)
+        caps.append(cap)
+        impls.append(im)
+    # one leaf over the VMEM budget demotes its whole dispatch group: the
+    # impl is static per jit call and the bits are identical either way
+    unit_impl = "jnp" if "jnp" in impls else impl
+    out: List[Optional[GatherResult]] = [None] * len(arrs)
+    for idxs in _device_groups(arrs):
+        res = _gather_many(
+            tuple(arrs[i] for i in idxs),
+            tuple(jnp.asarray(ref_fps[i], jnp.uint32) for i in idxs),
+            block_bytes=block_bytes,
+            n_blocks=tuple(n_blocks[i] for i in idxs),
+            capacities=tuple(caps[i] for i in idxs),
+            impl=unit_impl, quant=quantize_int8)
+        for i, r in zip(idxs, res):
+            out[i] = GatherResult(*r)
+    return out  # type: ignore[return-value]

@@ -1,0 +1,75 @@
+"""Numpy oracle for the fused gather kernel.
+
+Defines the exact host-side semantics the device kernel (and its jnp
+fallback) must reproduce bit-for-bit:
+
+- fingerprints are :func:`repro.kernels.block_fp.ref.fingerprint_bytes`
+  of the zero-padded raw little-endian bytes;
+- a block is dirty iff its fingerprint pair differs from the reference
+  table (all blocks dirty when the tables are not comparable);
+- ``idx`` holds the first ``capacity`` dirty indices ascending, -1 fill;
+- ``out`` holds those blocks' elements densely, zero fill beyond;
+- ``count`` is the TOTAL dirty count, which may exceed ``capacity``
+  (the overflow signal the advisory capacity predictor relies on).
+
+The optional int8 composition replicates the quantize kernel's math
+(amax/127 scale, round-half-even, clip to [-127, 127]) over the dense
+``out`` buffer flattened to quantization blocks.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.kernels.block_fp.ref import DEFAULT_BLOCK_BYTES, fingerprint_bytes
+
+
+def gather_dirty_oracle(arr: np.ndarray, ref_fp: Optional[np.ndarray], *,
+                        capacity: int,
+                        block_bytes: int = DEFAULT_BLOCK_BYTES
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """-> (fp (nb, 2) u32, idx (capacity,) i32, out (capacity, epb)
+    arr.dtype, count int)."""
+    arr = np.ascontiguousarray(arr)
+    if arr.dtype == np.bool_:
+        arr = arr.astype(np.uint8)
+    itemsize = arr.dtype.itemsize
+    assert block_bytes % itemsize == 0, (block_bytes, itemsize)
+    epb = block_bytes // itemsize
+    raw = arr.tobytes()
+    fp = fingerprint_bytes(raw, block_bytes)
+    nb = fp.shape[0]
+    if ref_fp is None or np.asarray(ref_fp).shape != fp.shape:
+        dirty = np.arange(nb)
+    else:
+        dirty = np.flatnonzero(
+            np.any(fp != np.asarray(ref_fp, np.uint32), axis=1))
+    count = int(dirty.size)
+
+    buf = np.zeros(nb * epb, arr.dtype)
+    buf[:arr.size] = arr.reshape(-1)
+    blocks = buf.reshape(nb, epb)
+    k = min(count, capacity)
+    idx = np.full(capacity, -1, np.int32)
+    idx[:k] = dirty[:k]
+    out = np.zeros((capacity, epb), arr.dtype)
+    out[:k] = blocks[dirty[:k]]
+    return fp, idx, out, count
+
+
+def quantize_oracle(out: np.ndarray, block: int = 256
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """int8-quantize the dense gathered buffer exactly as the device
+    composition does: (q (nq, block) int8, scales (nq, 1) f32)."""
+    flat = np.asarray(out, np.float32).reshape(-1)
+    pad = (-flat.size) % block
+    if pad:
+        flat = np.concatenate([flat, np.zeros(pad, np.float32)])
+    b = flat.reshape(-1, block)
+    amax = np.max(np.abs(b), axis=1, keepdims=True)
+    scale = np.where(amax == 0, np.float32(1.0),
+                     amax / np.float32(127.0)).astype(np.float32)
+    # np.round is round-half-to-even, matching jnp.round on device
+    q = np.clip(np.round(b / scale), -127, 127).astype(np.int8)
+    return q, scale

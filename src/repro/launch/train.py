@@ -42,6 +42,7 @@ from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import TrainConfig
 from repro.core import DeltaTracker, LayerRegistry, make_policy
 from repro.checkpoint import faults
+from repro.checkpoint.overlap import OverlappedSaver
 from repro.checkpoint.saver import CheckpointManager
 from repro.checkpoint.sharded import ShardedCheckpointer
 from repro.data.synthetic import SyntheticTokens
@@ -73,6 +74,10 @@ class _Progress:
     def emit(self, kind: str, step: int) -> None:
         if self._f is not None:
             self._f.write(f"{kind},{step},{time.time():.6f}\n")
+            # line buffering is not guaranteed to flush on every platform
+            # / stream type; the supervisor schedules injections off this
+            # feed, so force each line out as it happens.
+            self._f.flush()
 
     def close(self) -> None:
         if self._f is not None:
@@ -111,10 +116,12 @@ def train(
     ckpt_dir: str = "/tmp/repro_train",
     ckpt_async: bool = True,
     ckpt_fingerprint: bool = True,
+    ckpt_spread_steps: int = 0,
     codec: str = "auto",
     store_backend: str = "local",
     io_backend: str = "thread",
     io_workers: Optional[int] = None,
+    writer_threads: int = 2,
     spill_threads: int = 2,
     hot_budget_mb: Optional[int] = None,
     spill_barrier: bool = False,
@@ -146,6 +153,7 @@ def train(
                             store_backend=store_backend,
                             io_backend=io_backend,
                             io_workers=io_workers,
+                            writer_threads=writer_threads,
                             spill_threads=spill_threads,
                             hot_budget_bytes=(hot_budget_mb * 2**20
                                               if hot_budget_mb else None),
@@ -158,6 +166,15 @@ def train(
     # the CheckpointManager.save signature either way.
     saver = (ShardedCheckpointer(mgr, shard_participants)
              if shard_participants > 1 else mgr)
+    # Zero-stall pipeline (docs/perf.md): checkpoint events begin at the
+    # step boundary but run their host-side gather/encode/write across
+    # the next ``ckpt_spread_steps`` steps, overlapped with compute.
+    ov = None
+    if ckpt_spread_steps > 0:
+        if shard_participants > 1:
+            raise ValueError("--ckpt-spread-steps is incompatible with "
+                             "--shard-participants > 1")
+        ov = OverlappedSaver(mgr, spread_steps=ckpt_spread_steps)
 
     data = SyntheticTokens(vocab_size=cfg.vocab_size, batch=batch,
                            seq_len=seq_len, seed=seed)
@@ -214,6 +231,10 @@ def train(
     d2h_bytes = 0
     hashed_bytes = 0
     dirty_fracs = []
+    save_timing = {"snapshot_seconds": 0.0, "stage_seconds": 0.0,
+                   "writeback_seconds": 0.0, "stall_seconds": 0.0}
+    overlap_slices = 0
+    overflow_redispatches = 0
     preempted_at: Optional[int] = None
     progress.emit("start", start)
 
@@ -221,15 +242,51 @@ def train(
         return {"data_state": data.state_dict(), "arch": arch,
                 "reduced": reduced, "tcfg": tcfg.model_dump()}
 
+    def absorb_event(manifest):
+        """Account one committed checkpoint event (either mode) from the
+        manager's stats, and advance the tracker references."""
+        nonlocal save_seconds, d2h_bytes, hashed_bytes
+        nonlocal overlap_slices, overflow_redispatches
+        s = mgr.last_save_stats
+        for k in save_timing:
+            save_timing[k] += s.get(k, 0.0)
+        d2h_bytes += s.get("d2h_bytes", 0)
+        hashed_bytes += s.get("hashed_bytes", 0)
+        dirty_fracs.append(s.get("dirty_block_frac", 1.0))
+        progress.emit("ckpt", manifest.step)
+        if ov is not None:
+            # The loop only ever blocked for the stall portion: that is
+            # what save_seconds means in both modes (docs/perf.md).
+            save_seconds += s.get("stall_seconds", 0.0)
+            overlap_slices += s.get("spread_slices", 0)
+            overflow_redispatches += s.get("overflow_redispatches", 0)
+            if tracker:
+                # References advance to the SNAPSHOT-time fingerprints:
+                # by commit the live params have drifted past what this
+                # event captured, and that drift belongs to the next
+                # event's scores.
+                for u in manifest.saved_units:
+                    if u in ov.last_snapshot_fps:
+                        tracker.set_reference(u, ov.last_snapshot_fps[u])
+
     for step in range(start, total_steps):
         raw = data.peek(step)
         data.state.step = step + 1
         state, metrics = train_step(state, to_batch(raw))
+        if ov is not None and ov.active:
+            # One spread slice per step, between dispatching the step and
+            # syncing its loss: the host stages/writes while the device
+            # computes.
+            done = ov.tick()
+            if done is not None:
+                absorb_event(done)
         loss = float(metrics["loss"])
         losses.append((step, loss))
         progress.emit("step", step + 1)
         if fail_step is not None and step + 1 == fail_step:
             if fail_point is None:
+                if ov is not None:
+                    ov.close()
                 mgr.close()
                 raise SimulatedFailure(
                     f"injected failure at step {fail_step}")
@@ -246,6 +303,13 @@ def train(
             # barrier so the manifest commits immediately; the grace
             # period below is spent draining the spill backlog instead
             # of gathering.
+            if ov is not None and ov.active:
+                # Events are FIFO: the mid-spread event commits (its
+                # manifest is older than the hot save's) before the
+                # direct save below may move the chain.
+                done = ov.finish()
+                if done is not None:
+                    absorb_event(done)
             manifest = saver.save(state, step=step + 1, meta=event_meta(),
                                   units=mgr.policy.all_units(),
                                   durability_barrier=False)
@@ -256,19 +320,29 @@ def train(
                      manifest.meta["storage"]["durable_on"])
             break
         if (step + 1) % ckpt_interval == 0:
-            t_save = time.time()
             scores = tracker.scores(state["params"]) if tracker else None
-            manifest = saver.save(
-                state, step=step + 1, meta=event_meta(),
-                drift_scores=scores)
-            if tracker:
-                tracker.mark_saved(state["params"], manifest.saved_units)
-            save_seconds += time.time() - t_save
-            progress.emit("ckpt", step + 1)
-            s = mgr.last_save_stats
-            d2h_bytes += s.get("d2h_bytes", 0)
-            hashed_bytes += s.get("hashed_bytes", 0)
-            dirty_fracs.append(s.get("dirty_block_frac", 1.0))
+            if ov is not None:
+                # Snapshot + decisions now (this is the last moment the
+                # pre-donation state is intact); staging, writes, and the
+                # commit ride the next ticks.
+                ov.begin(state, step + 1, meta=event_meta(),
+                         drift_scores=scores)
+            else:
+                t_save = time.time()
+                manifest = saver.save(
+                    state, step=step + 1, meta=event_meta(),
+                    drift_scores=scores)
+                if tracker:
+                    tracker.mark_saved(state["params"],
+                                       manifest.saved_units)
+                save_seconds += time.time() - t_save
+                absorb_event(manifest)
+    if ov is not None:
+        # Run end: the last event may still be mid-spread — finish it so
+        # its manifest commits before accounting/close.
+        done = ov.finish()
+        if done is not None:
+            absorb_event(done)
     total = time.time() - t0
 
     if fail_point is not None and fail_point in faults.pending():
@@ -276,6 +350,8 @@ def train(
         # stage, or the step had no checkpoint event): fail loudly — a
         # crash drill that silently didn't drill is worse than a failure.
         faults.disarm(fail_point)
+        if ov is not None:
+            ov.close()
         mgr.close()
         raise SimulatedFailure(
             f"crash point {fail_point!r} armed at step {fail_step} was "
@@ -296,6 +372,8 @@ def train(
     mgr.drain_spill()
     spill_drain_seconds = time.time() - t_drain
     tier_stats = mgr.store.tier_stats()
+    if ov is not None:
+        ov.close()
     mgr.close()
     usage = mgr.disk_usage()
     progress.emit("preempt_durable" if preempted_at is not None else "done",
@@ -310,6 +388,14 @@ def train(
         "train_seconds": total,
         "save_seconds": save_seconds,
         "ckpt_time_fraction": save_seconds / total if total else 0.0,
+        # four-way event-time split summed over events (docs/perf.md):
+        # stall is what save_seconds/ckpt_time_fraction measure in both
+        # modes; snapshot/stage/writeback locate where the time went.
+        **save_timing,
+        "save_mode": "overlapped" if ov is not None else "sync",
+        "ckpt_spread_steps": ckpt_spread_steps,
+        "overlap_slices": overlap_slices,
+        "overflow_redispatches": overflow_redispatches,
         "ckpt_bytes": usage["total"],
         # fingerprint-pipeline accounting, summed over save events
         "d2h_bytes": d2h_bytes,
@@ -374,6 +460,9 @@ def main() -> None:
     ap.add_argument("--io-workers", type=int,
                     help="process backend: number of subprocess IO "
                          "workers (default max(2, pool threads))")
+    ap.add_argument("--writer-threads", type=int, default=2,
+                    help="async writeback lanes; raise to widen the "
+                         "writeback pipe against a high-latency store")
     ap.add_argument("--spill-threads", type=int, default=2,
                     help="tiered backend: threads on the spill lane of "
                          "the shared transfer pool")
@@ -388,6 +477,12 @@ def main() -> None:
                          "persist only their owned slices; the manifest "
                          "commits through the two-phase barrier")
     ap.add_argument("--sync-save", action="store_true")
+    ap.add_argument("--ckpt-spread-steps", type=int, default=0,
+                    help="zero-stall pipeline: slice each checkpoint "
+                         "event's host-side gather/encode/write across N "
+                         "training steps, overlapped with compute "
+                         "(0 = classic synchronous save; requires the "
+                         "fingerprint pipeline)")
     ap.add_argument("--no-fingerprint", action="store_true",
                     help="legacy full-gather save path (no device-side "
                          "block fingerprinting)")
@@ -418,8 +513,10 @@ def main() -> None:
                 policy_name=args.policy, ckpt_interval=args.ckpt_interval,
                 ckpt_dir=args.ckpt_dir, ckpt_async=not args.sync_save,
                 ckpt_fingerprint=not args.no_fingerprint,
+                ckpt_spread_steps=args.ckpt_spread_steps,
                 codec=args.codec, store_backend=args.store_backend,
                 io_backend=args.io_backend, io_workers=args.io_workers,
+                writer_threads=args.writer_threads,
                 spill_threads=args.spill_threads,
                 hot_budget_mb=args.hot_budget_mb,
                 spill_barrier=args.spill_barrier,

@@ -28,9 +28,11 @@ def pytest_configure(config):
 @pytest.fixture(scope="session", autouse=True)
 def shm_clean_guard():
     """/dev/shm hygiene: every ``repro-io-*`` shared-memory segment this
-    test process created (process-backed IO lanes) must be unlinked by
-    the time the session ends — a leak here means some TransferPool or
-    ProcessWorkerPool was never closed."""
+    test process created — worker arena/scratch files (process-backed IO
+    lanes) and ``-stage-`` staging slots (overlapped saves) share the
+    owner-pid prefix — must be unlinked by the time the session ends; a
+    leak means some TransferPool, ProcessWorkerPool, or StagingArena
+    was never closed."""
     import glob
     prefix = f"/dev/shm/repro-io-{os.getpid():x}-"
     yield

@@ -1,0 +1,175 @@
+"""Fused gather kernel (fingerprint-compare + dirty-block compaction):
+kernel-vs-oracle property sweeps, jnp-fallback bit-identity, the
+capacity-overflow contract, and the int8 composition."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import cases
+
+from repro.kernels.block_fp.ref import fingerprint_bytes
+from repro.kernels.block_gather import (
+    gather_dirty,
+    gather_dirty_oracle,
+    gather_tree_dirty,
+    quantize_oracle,
+    round_capacity,
+)
+
+BB = 1024  # small blocks so modest arrays span many of them
+
+
+def _drift(a: np.ndarray, flat_positions):
+    """Bump a handful of elements; returns the drifted copy."""
+    b = a.copy()
+    fl = b.reshape(-1)
+    for p in flat_positions:
+        q = fl[p % fl.size]
+        fl[p % fl.size] = (q + 1).astype(b.dtype) if b.dtype != np.bool_ \
+            else ~q
+    return b
+
+
+def _check(cur, base, *, capacity, bb=BB, interpret=None, quant=False):
+    """Device result (pallas-interpret or jnp fallback) must be
+    bit-identical to the numpy oracle on all authoritative outputs."""
+    ref_fp = fingerprint_bytes(np.ascontiguousarray(base).tobytes(), bb)
+    res = gather_dirty(jnp.asarray(cur), ref_fp, capacity=capacity,
+                       block_bytes=bb, interpret=interpret,
+                       quantize_int8=quant)
+    fp, idx, out, count = gather_dirty_oracle(
+        cur, ref_fp, capacity=res.capacity, block_bytes=bb)
+    assert np.array_equal(np.asarray(res.fp), fp)
+    assert np.array_equal(np.asarray(res.idx), idx)
+    assert int(res.count) == count
+    assert np.array_equal(
+        np.asarray(res.blocks).view(np.uint8), out.view(np.uint8))
+    if quant:
+        q, scales = quantize_oracle(out)
+        assert np.array_equal(np.asarray(res.q), q)
+        assert np.array_equal(np.asarray(res.scales), scales)
+    return res, count
+
+
+# ------------------------------------------------------------ kernel vs ref
+@pytest.mark.parametrize("dtype,shape", [
+    (np.float32, (5000,)),
+    (np.float16, (300, 7)),            # non-block-multiple, 2-byte dtype
+    (np.float32, (4, 33, 9)),          # ragged 3D
+    (np.int32, (64, 64)),
+    (np.int8, (123,)),                 # 1-byte dtype
+    (np.int16, (700,)),                # 2-byte integer
+])
+def test_kernel_matches_oracle(dtype, shape):
+    rs = np.random.RandomState(sum(shape))
+    base = (rs.standard_normal(shape) * 100).astype(dtype)
+    cur = _drift(base, [0, 7, base.size // 2, base.size - 1])
+    for interpret in (True, None):   # pallas-interpret and the jnp path
+        _check(cur, base, capacity=8, interpret=interpret)
+
+
+def test_bfloat16_and_bool():
+    base = jnp.asarray(np.random.RandomState(0).standard_normal(3000),
+                       jnp.bfloat16)
+    cur = base.at[17].add(1).at[2500].add(1)
+    ref_fp = fingerprint_bytes(np.asarray(base).tobytes(), BB)
+    res = gather_dirty(cur, ref_fp, capacity=4, block_bytes=BB,
+                       interpret=True)
+    fp, idx, out, count = gather_dirty_oracle(
+        np.asarray(cur), ref_fp, capacity=res.capacity, block_bytes=BB)
+    assert np.array_equal(np.asarray(res.fp), fp)
+    assert np.array_equal(np.asarray(res.idx), idx)
+    assert int(res.count) == count == 2
+    bools = np.zeros(4000, np.bool_)
+    cur_b = _drift(bools, [5, 2100])
+    _check(cur_b, bools, capacity=2)
+
+
+def test_clean_input_gathers_nothing():
+    a = np.arange(9000, dtype=np.float32)
+    res, count = _check(a, a, capacity=4, interpret=True)
+    assert count == 0
+    assert np.all(np.asarray(res.idx) == -1)
+    assert not np.asarray(res.blocks).any()
+
+
+def test_capacity_overflow_is_detectable_and_prefix_valid():
+    """The misprediction contract: count is authoritative past capacity,
+    the first `capacity` dirty blocks are still exact and ascending."""
+    rs = np.random.RandomState(3)
+    base = rs.standard_normal(64 * (BB // 4)).astype(np.float32)
+    cur = _drift(base, [i * (BB // 4) for i in range(0, 64, 2)])  # 32 dirty
+    for interpret in (True, None):
+        res, count = _check(cur, base, capacity=8, interpret=interpret)
+        assert count == 32 > res.capacity == 8
+        idx = np.asarray(res.idx)
+        assert np.array_equal(idx, np.arange(0, 16, 2))  # ascending prefix
+
+
+def test_no_reference_means_all_dirty():
+    a = np.random.RandomState(1).standard_normal(4096).astype(np.float32)
+    nb = -(-a.nbytes // BB)
+    fp, idx, out, count = gather_dirty_oracle(a, None, capacity=nb,
+                                              block_bytes=BB)
+    assert count == nb and np.array_equal(idx, np.arange(nb))
+    # mismatched table shape (meta change) is the same as no reference
+    fp2, idx2, _, count2 = gather_dirty_oracle(
+        a, np.zeros((nb + 3, 2), np.uint32), capacity=nb, block_bytes=BB)
+    assert count2 == nb and np.array_equal(idx2, idx)
+
+
+def test_property_sweep():
+    def gen(rs):
+        dtype = rs.choice(["float32", "float16", "int32"])
+        n = int(rs.randint(1, 12000))
+        nd = int(rs.randint(0, 10))
+        cap = int(rs.randint(1, 16))
+        bb = int(rs.choice([256, 1024]))
+        seed = int(rs.randint(0, 2 ** 31))
+        return dtype, n, nd, cap, bb, seed
+
+    for dtype, n, nd, cap, bb, seed in cases(12, gen):
+        rs = np.random.RandomState(seed)
+        base = (rs.standard_normal(n) * 50).astype(dtype)
+        cur = _drift(base, list(rs.randint(0, n, size=nd)))
+        for interpret in (True, None):
+            _check(cur, base, capacity=cap, bb=bb, interpret=interpret)
+
+
+def test_quantize_composition_matches_oracle():
+    rs = np.random.RandomState(7)
+    base = rs.standard_normal(8 * (BB // 4)).astype(np.float32)
+    cur = _drift(base, [3, BB // 4 * 5 + 1])
+    for interpret in (True, None):
+        _check(cur, base, capacity=2, interpret=interpret, quant=True)
+
+
+def test_tree_gather_one_dispatch_per_unit():
+    rs = np.random.RandomState(11)
+    bases = [rs.standard_normal(3000).astype(np.float32),
+             rs.standard_normal((70, 40)).astype(np.float32)]
+    curs = [_drift(bases[0], [5]), _drift(bases[1], [100, 2000])]
+    refs = [fingerprint_bytes(b.tobytes(), BB) for b in bases]
+    results = gather_tree_dirty([jnp.asarray(c) for c in curs], refs,
+                                [4, 4], block_bytes=BB, interpret=True)
+    for cur, ref, res in zip(curs, refs, results):
+        fp, idx, out, count = gather_dirty_oracle(
+            cur, ref, capacity=res.capacity, block_bytes=BB)
+        assert np.array_equal(np.asarray(res.fp), fp)
+        assert np.array_equal(np.asarray(res.idx), idx)
+        assert int(res.count) == count
+        assert np.array_equal(
+            np.asarray(res.blocks).view(np.uint8), out.view(np.uint8))
+
+
+def test_round_capacity():
+    assert round_capacity(0, 64) == 1
+    assert round_capacity(1, 64) == 1
+    assert round_capacity(3, 64) == 4
+    assert round_capacity(33, 64) == 64
+    assert round_capacity(500, 64) == 64
+    assert round_capacity(5, 6) == 6       # pow2 clamp to n_blocks
+    # the set of reachable capacities per leaf is O(log n_blocks)
+    caps = {round_capacity(n, 4096) for n in range(1, 4097)}
+    assert len(caps) <= 13

@@ -1,0 +1,416 @@
+"""Zero-stall overlapped checkpointing: parity, mispredictions, crashes.
+
+The tentpole invariant (docs/perf.md): an overlapped save is a
+bit-for-bit peer of a synchronous save — identical manifests (digest,
+stored form, delta base per entry), identical object sets on disk,
+bit-exact restores — no matter how the dirty-block predictor guesses,
+and no matter where in the overlap window an injected crash lands
+(previous manifest stays LATEST, zero-fallback restore).  Plus the
+staging-arena hygiene invariants: backpressure bounds checked-out slots,
+grow-in-place keeps segment names stable, close unlinks everything.
+"""
+import glob
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import faults
+from repro.checkpoint.async_io import AsyncWriteError, StagingArena
+from repro.checkpoint.faults import InjectedCrash
+from repro.checkpoint.overlap import DirtyPredictor, OverlappedSaver
+from repro.checkpoint.saver import CheckpointManager
+from repro.configs import get_config
+from repro.core import LayerRegistry, make_policy
+from repro.launch import steps as steps_lib
+from repro.models import build_model
+
+ARCH = "llama3.2-3b"
+BB = 4096
+
+
+def _own_shm():
+    return sorted(glob.glob(f"/dev/shm/repro-io-{os.getpid():x}-*"))
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    faults.disarm()
+    yield
+    faults.disarm()
+
+
+def _poke_all(state):
+    def poke(x):
+        x = np.array(x)
+        x.flat[:1] += 1
+        return x
+
+    return {"step": np.array(state["step"]),
+            "params": jax.tree.map(poke, state["params"]),
+            "opt": jax.tree.map(poke, state["opt"])}
+
+
+def _poke_one(state):
+    """Drift exactly one element of one leaf: most units dedup clean,
+    one unit goes delta with a single dirty block."""
+    leaves = jax.tree.leaves(state["params"])
+    target = max(leaves, key=lambda x: np.asarray(x).size)
+    tid = id(target)
+
+    def poke(x):
+        if id(x) != tid:
+            return np.array(x)
+        x = np.array(x)
+        x.flat[-1:] += 2
+        return x
+
+    return {"step": np.array(state["step"]),
+            "params": jax.tree.map(poke, state["params"]),
+            "opt": jax.tree.map(np.array, state["opt"])}
+
+
+def _poke_blocks(state, want=4):
+    """Dirty a handful of scattered 4 KiB blocks of the biggest leaf:
+    sparse enough to stay on the delta path, dirty enough that a
+    1-block capacity guess must overflow."""
+    leaves = jax.tree.leaves(state["params"])
+    target = max(leaves, key=lambda x: np.asarray(x).size)
+    tid = id(target)
+    epb = BB // np.asarray(target).dtype.itemsize
+    nb = max(1, -(-np.asarray(target).nbytes // BB))
+    k = max(2, min(want, nb // 4))
+
+    def poke(x):
+        if id(x) != tid:
+            return np.array(x)
+        x = np.array(x)
+        for i in range(k):
+            x.flat[i * epb] += 3
+        return x
+
+    return {"step": np.array(state["step"]),
+            "params": jax.tree.map(poke, state["params"]),
+            "opt": jax.tree.map(np.array, state["opt"])}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config(ARCH, reduced=True)
+    model = build_model(cfg)
+    s1 = steps_lib.init_state(model, jax.random.key(0))
+    s2 = _poke_all(s1)        # dense drift: every leaf dirty
+    s3 = _poke_one(s2)        # sparse drift: one dirty block total
+    s4 = _poke_blocks(s3)     # scattered drift: a few dirty blocks
+    return model, LayerRegistry(model), [s1, s1, s2, s3, s4]
+
+
+#: (step, state-index) sequence every parity test replays: full base,
+#: clean re-save (dedup), dense drift, sparse drift, scattered drift.
+EVENTS = [(10, 0), (20, 1), (30, 2), (40, 3), (50, 4)]
+
+
+def _assert_states_equal(a, b):
+    for part in ("params", "opt"):
+        for x, y in zip(jax.tree.leaves(a[part]), jax.tree.leaves(b[part])):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _manifest_sig(mgr, step):
+    m = mgr.manifests.load(step)
+    assert m is not None
+    return {(unit, kind): (e.digest, e.stored, e.delta_base)
+            for unit, kinds in m.entries.items()
+            for kind, e in kinds.items()}
+
+
+def _mgr(root, model, registry, **kw):
+    kw.setdefault("fp_block_bytes", BB)
+    return CheckpointManager(root, registry,
+                             make_policy("full", model.layer_units()), **kw)
+
+
+def _run_sync(root, model, registry, states, **kw):
+    mgr = _mgr(root, model, registry, **kw)
+    for step, si in EVENTS:
+        mgr.save(states[si], step=step)
+    sigs = {s: _manifest_sig(mgr, s) for s, _ in EVENTS}
+    digests = sorted(mgr.store.iter_digests())
+    mgr.close()
+    return sigs, digests
+
+
+def _run_overlapped(root, model, registry, states, *, predictor=None,
+                    spread=2, **kw):
+    mgr = _mgr(root, model, registry, **kw)
+    ov = OverlappedSaver(mgr, spread_steps=spread)
+    if predictor is not None:
+        ov.predictor = predictor
+    stats = []
+    for step, si in EVENTS:
+        ov.begin(states[si], step)
+        ticks = 0
+        while ov.tick() is None:
+            ticks += 1
+            assert ticks < 100
+        stats.append(dict(mgr.last_save_stats))
+    sigs = {s: _manifest_sig(mgr, s) for s, _ in EVENTS}
+    digests = sorted(mgr.store.iter_digests())
+    ov.close()
+    mgr.close()
+    return sigs, digests, stats
+
+
+# ------------------------------------------------------------------- parity
+@pytest.mark.parametrize("store", ["local", "tiered"])
+def test_overlapped_matches_sync_bit_exact(setup, tmp_path, store):
+    """Same event sequence through both savers: identical manifests,
+    identical object sets, bit-exact restore of the overlapped chain."""
+    model, registry, states = setup
+    sy_sigs, sy_digests = _run_sync(tmp_path / "sync", model, registry,
+                                    states, store_backend=store)
+    ov_sigs, ov_digests, stats = _run_overlapped(
+        tmp_path / "ov", model, registry, states, store_backend=store)
+    assert sy_sigs == ov_sigs
+    assert sy_digests == ov_digests
+    for s in stats:
+        assert s["save_mode"] == "overlapped"
+        assert s["spread_steps"] == 2
+    # clean re-save dedup'd without staging a byte
+    assert stats[1]["d2h_bytes"] == 0
+    assert stats[1]["staged_bytes"] == 0
+    # sparse drift moved ~one block, not the model
+    assert 0 < stats[3]["d2h_bytes"] <= 4 * BB
+    assert 0 < stats[3]["dirty_block_frac"] < 0.05
+
+    mgr = _mgr(tmp_path / "ov", model, registry, async_save=False,
+               store_backend=store)
+    got = mgr.restore(steps_lib.state_specs(model), step=40)
+    assert not mgr.last_restore_stats["fallback_units"]
+    _assert_states_equal(states[3], got)
+    mgr.close()
+    assert not _own_shm()
+
+
+class _FixedPredictor(DirtyPredictor):
+    """Misprediction on demand: always guess ``n`` blocks."""
+
+    def __init__(self, n):
+        super().__init__()
+        self._n = n
+
+    def predict(self, name, kind, path, n_blocks, drift):
+        return min(max(1, self._n), n_blocks)
+
+
+@pytest.mark.parametrize("guess,expect_overflow", [
+    (1, True),        # under-predict everything: every delta overflows
+    (1 << 20, False),  # over-predict everything: full-capacity gathers
+])
+def test_misprediction_never_changes_committed_bytes(setup, tmp_path,
+                                                     guess, expect_overflow):
+    """The property behind 'prediction is advisory': force the predictor
+    maximally wrong in BOTH directions — the committed manifests and
+    object digests still match the sync saver exactly; only the
+    overflow-redispatch counter moves."""
+    model, registry, states = setup
+    sy_sigs, sy_digests = _run_sync(tmp_path / "sync", model, registry,
+                                    states)
+    ov_sigs, ov_digests, stats = _run_overlapped(
+        tmp_path / "ov", model, registry, states,
+        predictor=_FixedPredictor(guess))
+    assert sy_sigs == ov_sigs
+    assert sy_digests == ov_digests
+    redispatches = sum(s["overflow_redispatches"] for s in stats)
+    if expect_overflow:
+        # the dense-drift event's deltas cannot fit in 1 block
+        assert redispatches > 0
+    else:
+        assert redispatches == 0
+
+
+def test_spread_slices_and_forced_finish(setup, tmp_path):
+    """spread_steps=N really slices the staging across N ticks, and a
+    new begin() mid-spread force-finishes the in-flight event first
+    (strict FIFO: one manifest per event, order preserved)."""
+    model, registry, states = setup
+    mgr = _mgr(tmp_path, model, registry)
+    ov = OverlappedSaver(mgr, spread_steps=3)
+    ov.begin(states[0], 10)
+    assert ov.active
+    assert ov.tick() is None          # slice 1 of 3
+    # new event arrives mid-spread: event 1 must commit first
+    ov.begin(states[2], 20)
+    assert mgr.manifests.latest_step() == 10
+    assert ov.active
+    m = ov.finish()
+    assert m is not None and m.step == 20
+    assert mgr.manifests.all_steps() == [10, 20]
+    got = mgr.restore(steps_lib.state_specs(model), step=20)
+    _assert_states_equal(states[2], got)
+    ov.close()
+    mgr.close()
+    assert not _own_shm()
+
+
+# ------------------------------------------------------------ crash matrix
+@pytest.mark.parametrize("store", ["local", "tiered"])
+@pytest.mark.parametrize("point,hit", [
+    ("snapshot_overlap", 1),   # die with the whole event in flight
+    ("spread_slice", 1),       # die before any slice ran
+    ("spread_slice", 2),       # die mid-spread: some units already written
+])
+def test_crash_mid_overlap_previous_manifest_wins(setup, tmp_path, store,
+                                                  point, hit):
+    """Crash anywhere inside the overlap window: nothing of the doomed
+    event is visible — the previous manifest stays LATEST and restores
+    bit-exact with zero fallbacks, and the chain keeps working after
+    the restart (GC sweeps the orphaned objects)."""
+    model, registry, states = setup
+    mgr = _mgr(tmp_path, model, registry, store_backend=store)
+    ov = OverlappedSaver(mgr, spread_steps=2)
+    ov.begin(states[0], 10)
+    while ov.tick() is None:
+        pass
+    with faults.scoped(point, hit=hit):
+        with pytest.raises((InjectedCrash, AsyncWriteError)):
+            ov.begin(states[2], 20)
+            while ov.tick() is None:
+                pass
+    assert not faults.pending()
+    ov.close()
+    try:
+        mgr.close()
+    except (AsyncWriteError, InjectedCrash):
+        pass
+
+    mgr2 = _mgr(tmp_path, model, registry, async_save=False,
+                store_backend=store)
+    assert mgr2.manifests.latest_step() == 10
+    got = mgr2.restore(steps_lib.state_specs(model))
+    assert not mgr2.last_restore_stats["fallback_units"]
+    _assert_states_equal(states[0], got)
+    # the chain continues: the retried event commits and restores
+    ov2 = OverlappedSaver(mgr2, spread_steps=2)
+    ov2.begin(states[2], 20)
+    m = ov2.finish()
+    assert m is not None and mgr2.manifests.latest_step() == 20
+    got = mgr2.restore(steps_lib.state_specs(model), step=20)
+    _assert_states_equal(states[2], got)
+    ov2.close()
+    mgr2.close()
+    assert not _own_shm()
+
+
+def test_crash_points_cataloged():
+    assert "snapshot_overlap" in faults.CRASH_POINTS
+    assert "spread_slice" in faults.CRASH_POINTS
+
+
+# ------------------------------------------------------------ staging arena
+def test_staging_arena_backpressure_and_growth():
+    # max_slots caps the arena: acquire blocks (hard backpressure)
+    # instead of minting a new segment.
+    arena = StagingArena(slots=2, min_bytes=4096, max_slots=2)
+    names0 = arena.segment_names()
+    assert len(names0) == 2
+    a = arena.acquire(100)
+    b = arena.acquire(100)
+    with pytest.raises(AsyncWriteError):
+        arena.acquire(100, timeout=0.05)   # both slots checked out
+
+    released = []
+
+    def _later():
+        time.sleep(0.05)
+        released.append(True)
+        arena.release(a)
+
+    t = threading.Thread(target=_later)
+    t.start()
+    c = arena.acquire(100, timeout=5.0)    # blocks until the release
+    t.join()
+    assert released == [True]
+    arena.release(b)
+    arena.release(c)
+
+    # grow-in-place: same segment name, bigger capacity, exact bytes
+    payload = os.urandom(10000)
+    big = arena.acquire(len(payload))
+    assert big.capacity >= len(payload)
+    view = big.pack(payload)
+    assert bytes(view) == payload
+    assert arena.segment_names() == names0
+    for s in arena.segment_names():
+        assert os.path.exists(f"/dev/shm/{s}")
+    del view
+    arena.release(big)
+    arena.close()
+    for s in names0:
+        assert not os.path.exists(f"/dev/shm/{s}")
+    with pytest.raises(AsyncWriteError):
+        arena.acquire(1)
+
+
+def test_staging_arena_mints_slots_unbounded():
+    # Default (no max_slots): a slow writeback never stalls staging —
+    # acquire mints a fresh segment instead of blocking, and released
+    # segments are recycled rather than re-minted.
+    arena = StagingArena(slots=1, min_bytes=4096)
+    a = arena.acquire(10)
+    b = arena.acquire(10, timeout=0.5)
+    names = arena.segment_names()
+    assert len(names) == 2
+    arena.release(a)
+    arena.release(b)
+    c = arena.acquire(10)
+    assert len(arena.segment_names()) == 2
+    arena.release(c)
+    arena.close()
+    for s in names:
+        assert not os.path.exists(f"/dev/shm/{s}")
+
+
+def test_staging_slot_pack_appends():
+    arena = StagingArena(slots=1, min_bytes=4096)
+    slot = arena.acquire(64)
+    v1 = slot.pack(b"abc")
+    v2 = slot.pack(np.arange(4, dtype=np.uint8))
+    assert bytes(v1) == b"abc"
+    assert bytes(v2) == bytes([0, 1, 2, 3])
+    del v1, v2
+    arena.release(slot)
+    # reacquire resets the write cursor
+    slot = arena.acquire(64)
+    v = slot.pack(b"xyz")
+    assert bytes(v) == b"xyz"
+    del v
+    arena.release(slot)
+    arena.close()
+
+
+# --------------------------------------------------------------- predictor
+def test_predictor_advisory_lifecycle():
+    p = DirtyPredictor(margin=1.5)
+    # first sight: predict everything (cannot overflow)
+    assert p.predict("u", "weights", "w", 64, None) == 64
+    p.observe("u", "weights", "w", 4)
+    # afterwards: last count x margin, clamped to [1, n_blocks]
+    assert p.predict("u", "weights", "w", 64, None) == 6
+    assert p.predict("u", "weights", "w", 64, 1.0) == 12   # drift widens
+    assert p.predict("u", "weights", "w", 64, 123.0) == 12  # drift clamped
+    p.observe("u", "weights", "w", 0)
+    assert p.predict("u", "weights", "w", 64, None) == 1   # floor of 1
+    p.observe("u", "weights", "w", 1000)
+    assert p.predict("u", "weights", "w", 64, None) == 64  # ceiling
+
+
+def test_overlap_requires_fingerprint(setup, tmp_path):
+    model, registry, _ = setup
+    mgr = _mgr(tmp_path, model, registry, fingerprint=False)
+    with pytest.raises(ValueError, match="fingerprint"):
+        OverlappedSaver(mgr)
+    mgr.close()
