@@ -1,0 +1,163 @@
+"""Serving-fleet promotion cost: hot-swap vs cold load, and K-variant
+loading with vs without the digest-keyed block cache (docs/serving.md).
+
+Two gated rows:
+
+``serve_hot_swap_bytes`` — save step 10, drift one element per weight
+leaf, save step 20 (block-sparse BD02 deltas), then promote a running
+:class:`~repro.checkpoint.swap.WeightService` from 10 to 20 and compare
+against a cold params-only restore of 20.  The swap MUST read strictly
+fewer bytes than the cold restore (it transfers drift, not model size) —
+hard-asserted.
+
+``serve_variant_cache_reads`` — materialize K=3 tailor variants
+(``core.tailor.variant_manifest``) from one store twice: behind a shared
+:class:`~repro.checkpoint.block_cache.BlockCache`, and without one.  The
+cached pass MUST issue strictly fewer backend object reads (each shared
+dedup digest is read once for the whole fleet) — hard-asserted.
+
+Results land in ``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+import numpy as np
+
+from _util import Timer, csv_row, write_bench_json
+
+ARCH = "llama3.2-3b"
+
+
+def _build():
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import LayerRegistry
+    from repro.launch import steps as steps_lib
+    from repro.models import build_model
+
+    cfg = get_config(ARCH, reduced=True)
+    model = build_model(cfg)
+    state1 = steps_lib.init_state(model, jax.random.key(0))
+
+    def poke(x):
+        x = np.array(x)
+        x.flat[:1] += 1
+        return x
+
+    # One element per leaf: the drift stays block-sparse under 4 KiB
+    # fingerprint blocks, the regime hot-swap promotion is built for.
+    state2 = {"step": np.array(state1["step"]),
+              "params": jax.tree.map(poke, state1["params"]),
+              "opt": jax.tree.map(poke, state1["opt"])}
+    return model, LayerRegistry(model), state1, state2
+
+
+def _mgr(root, reg, model, **kw):
+    from repro.checkpoint.saver import CheckpointManager
+    from repro.core import make_policy
+
+    kw.setdefault("async_save", False)
+    kw.setdefault("fp_block_bytes", 4096)
+    return CheckpointManager(root, reg,
+                             make_policy("full", model.layer_units()), **kw)
+
+
+def _hot_swap_vs_cold(model, reg, state1, state2) -> dict:
+    from repro.checkpoint.swap import WeightService
+    from repro.launch import steps as steps_lib
+
+    d = tempfile.mkdtemp(prefix="bench_serve_swap_")
+    try:
+        mgr = _mgr(d, reg, model)
+        mgr.save(state1, step=10)
+        mgr.save(state2, step=20)
+        like = steps_lib.state_specs(model)
+        svc = WeightService(mgr, like, step=10)
+        with Timer() as t:
+            swap = svc.poll()
+        assert swap is not None and swap["step_to"] == 20
+        mgr.restore(like, parts=("params",), step=20)
+        cold = dict(mgr.last_restore_stats)
+        mgr.close()
+        assert swap["bytes_read"] < cold["bytes_read"], (
+            "hot-swap promotion must read strictly fewer bytes than a "
+            f"cold restore: {swap['bytes_read']} vs {cold['bytes_read']}")
+        return {"swap": swap, "cold": cold, "swap_seconds_wall": t.seconds}
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def _variant_reads(model, reg, state1, state2, *, cached: bool) -> dict:
+    from repro.checkpoint.swap import VariantSet
+    from repro.launch import steps as steps_lib
+
+    units = [u.name for u in model.layer_units()]
+    selects = [(), [(units[0], 10)], [(units[-1], 10)]]
+    d = tempfile.mkdtemp(prefix="bench_serve_variants_")
+    try:
+        mgr = _mgr(d, reg, model,
+                   block_cache_bytes=(256 << 20) if cached else None)
+        mgr.save(state1, step=10)
+        mgr.save(state2, step=20)
+        base_reads = mgr.store.backend_reads
+        like = steps_lib.state_specs(model)
+        vs = VariantSet(mgr, like)
+        with Timer() as t:
+            for i, sel in enumerate(selects):
+                vs.materialize(f"v{i}", base_step=20, select=sel)
+        out = {
+            "k": len(selects),
+            "backend_reads": mgr.store.backend_reads - base_reads,
+            "bytes_read": sum(s.restore_stats["bytes_read"]
+                              for s in vs.services.values()),
+            "seconds_wall": t.seconds,
+            "cache": (mgr.block_cache.snapshot()
+                      if mgr.block_cache is not None else None),
+        }
+        mgr.close()
+        return out
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def run() -> dict:
+    model, reg, state1, state2 = _build()
+    out = {}
+
+    hs = _hot_swap_vs_cold(model, reg, state1, state2)
+    out["hot_swap"] = hs
+    swap, cold = hs["swap"], hs["cold"]
+    csv_row("serve_hot_swap_bytes", hs["swap_seconds_wall"] * 1e6,
+            f"swap_read_bytes={swap['bytes_read']};"
+            f"cold_read_bytes={cold['bytes_read']};"
+            f"swap_fraction={swap['bytes_read']/cold['bytes_read']:.4f};"
+            f"h2d_bytes={swap['h2d_bytes']};"
+            f"units_scattered={swap['units_scattered']};"
+            f"units_full={swap['units_full']};"
+            f"units_skipped={swap['units_skipped']}")
+
+    cached = _variant_reads(model, reg, state1, state2, cached=True)
+    uncached = _variant_reads(model, reg, state1, state2, cached=False)
+    out["variants"] = {"cached": cached, "uncached": uncached}
+    assert cached["backend_reads"] < uncached["backend_reads"], (
+        "K cached variant loads must issue strictly fewer backend object "
+        f"reads than uncached: {cached['backend_reads']} vs "
+        f"{uncached['backend_reads']}")
+    csv_row("serve_variant_cache_reads", cached["seconds_wall"] * 1e6,
+            f"k={cached['k']};"
+            f"cached_backend_reads={cached['backend_reads']};"
+            f"uncached_backend_reads={uncached['backend_reads']};"
+            f"read_fraction="
+            f"{cached['backend_reads']/uncached['backend_reads']:.4f};"
+            f"cache_hits={cached['cache']['hits']};"
+            f"cache_misses={cached['cache']['misses']}")
+
+    write_bench_json("serve", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -9,6 +9,8 @@ Tables covered:
   bench_merge        -> Table 7 (Frankenstein assembly cost)
   bench_resume       -> Tables 1/2/4/5 (resume fidelity per policy)
   bench_roofline     -> EXPERIMENTS.md roofline table (from dry-run cells)
+  bench_serve        -> serving fleet: hot-swap vs cold load, K-variant
+                        block-cache read sharing (docs/serving.md)
 """
 from __future__ import annotations
 
@@ -22,7 +24,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent))
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 MODULES = ["bench_ckpt_size", "bench_ckpt_time", "bench_merge",
-           "bench_resume", "bench_roofline"]
+           "bench_resume", "bench_roofline", "bench_serve"]
 
 
 def main() -> None:

@@ -55,11 +55,17 @@ if [ "${1:-}" = "smoke" ]; then
   echo "# overlap smoke (--ckpt-spread-steps 2 zero-stall pipeline vs sync"
   echo "#                saves: bit-exact restore, no staging-slot leaks)"
   python scripts/overlap_smoke.py
+  echo "# serve smoke (2-server fleet pinned to step A -> resume training"
+  echo "#              commits newer steps -> both hot-swap by digest diff,"
+  echo "#              outputs bit-identical to cold restore; process IO +"
+  echo "#              shm block cache; no leaked cache segments)"
+  python scripts/serve_smoke.py
   echo "# bench_ckpt_time --smoke (save+restore pipelines end to end)"
   python benchmarks/bench_ckpt_time.py --smoke
-  echo "# /dev/shm hygiene (no leaked worker or staging segments after smokes)"
+  echo "# /dev/shm hygiene (no leaked worker/staging/cache segments after smokes)"
   if ls /dev/shm/repro-io-* >/dev/null 2>&1; then
-    echo "ERROR: leaked shared-memory segments (worker arena or staging slots):" >&2
+    echo "ERROR: leaked shared-memory segments (worker arena, staging slots," >&2
+    echo "       or block-cache segments):" >&2
     ls /dev/shm/repro-io-* >&2
     exit 1
   fi

@@ -1,0 +1,206 @@
+"""Digest-keyed host-RAM object cache for multi-variant serving.
+
+:class:`BlockCache` is the process-lifetime sibling of
+:class:`~repro.checkpoint.chunk_store.ReadSession`: where a session
+memoizes object reads for ONE restore pass and then dies with it, the
+cache sits underneath ``ChunkStore._backend_read`` for as long as the
+process serves, so K tailored variants (or K successive hot-swaps)
+materialized from one store read each shared digest off the backend
+exactly once.  Content addressing makes this trivially safe — the bytes
+behind a digest never change, so there is no invalidation problem; the
+only lifecycle event is GC deleting an unreferenced object, for which
+the store calls :meth:`discard`.
+
+Semantics:
+
+- **LRU under a byte budget** — same move-to-MRU-on-hit discipline as
+  the store's canonical-payload cache; entries larger than the whole
+  budget bypass caching entirely (counted in ``stats["bypassed"]``)
+  instead of wiping everything else out.
+- **In-flight coalescing** — concurrent ``get``\\ s of one digest run the
+  loader once; the winners' peers block on an event and share the
+  result (``stats["coalesced"]``).  Unlike a ReadSession, a loader
+  *failure* is NOT memoized: a process-lifetime cache must not turn one
+  transient backend blip into a permanently poisoned digest, so every
+  later ``get`` retries the loader.
+- **Optional /dev/shm backing** (``shm=True``) — entry bytes live in
+  tmpfs segments named with the repo-wide ``repro-io-<pid:x>-`` owner
+  prefix (suffix ``-cache-``), so the existing shared-memory leak
+  guards (tests/conftest.py, scripts/check.sh) cover cache segments
+  exactly like worker arenas and staging slots.  ``close()`` unlinks
+  everything.
+
+``stats`` is a plain counter dict (hits/misses/evictions/...) read by
+``serve.py``'s ``last_swap_stats`` plumbing and the bench gates.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from pathlib import Path
+from typing import Callable, Dict, Optional
+
+SHM_DIR = Path("/dev/shm")
+
+
+def _shm_prefix() -> str:
+    """Owner-pid segment prefix shared with the IO-worker arena and the
+    staging slots — one glob covers every repo-owned segment."""
+    return f"repro-io-{os.getpid():x}-cache-"
+
+
+class BlockCache:
+    """Process-lifetime digest -> object-blob cache (LRU, coalescing)."""
+
+    def __init__(self, budget_bytes: int, *, shm: bool = False):
+        if budget_bytes <= 0:
+            raise ValueError("BlockCache needs a positive byte budget")
+        self.budget_bytes = int(budget_bytes)
+        self.shm = bool(shm)
+        self._lock = threading.Lock()
+        # digest -> bytes (RAM mode) or Path (shm mode); dict order is
+        # the LRU order (reinserted on hit, head = least recent).
+        self._entries: Dict[str, object] = {}
+        self._sizes: Dict[str, int] = {}
+        self._bytes = 0
+        self._seq = 0
+        self._closed = False
+        # digest -> in-flight load cell {"event", "value", "error"}
+        self._inflight: Dict[str, Dict[str, object]] = {}
+        self.stats: Dict[str, int] = {
+            "hits": 0, "misses": 0, "evictions": 0,
+            "coalesced": 0, "bypassed": 0}
+
+    # ------------------------------------------------------------ internals
+    def _fetch_locked(self, digest: str) -> Optional[bytes]:
+        """Hit path under the lock: returns the blob and refreshes LRU."""
+        slot = self._entries.pop(digest, None)
+        if slot is None:
+            return None
+        self._entries[digest] = slot  # move to MRU position
+        if isinstance(slot, Path):
+            try:
+                return slot.read_bytes()
+            except OSError:
+                # segment vanished underneath us (external cleanup):
+                # treat as a miss rather than failing the read
+                self._drop_locked(digest)
+                return None
+        return slot  # type: ignore[return-value]
+
+    def _drop_locked(self, digest: str) -> None:
+        slot = self._entries.pop(digest, None)
+        self._bytes -= self._sizes.pop(digest, 0)
+        if isinstance(slot, Path):
+            try:
+                slot.unlink()
+            except OSError:
+                pass
+
+    def _store_locked(self, digest: str, blob: bytes) -> None:
+        if self._closed or digest in self._entries:
+            return
+        if len(blob) > self.budget_bytes:
+            self.stats["bypassed"] += 1
+            return
+        while self._bytes + len(blob) > self.budget_bytes and self._entries:
+            lru = next(iter(self._entries))
+            self._drop_locked(lru)
+            self.stats["evictions"] += 1
+        if self.shm:
+            self._seq += 1
+            path = SHM_DIR / f"{_shm_prefix()}{self._seq:06d}"
+            tmp = path.with_name(path.name + ".tmp")
+            try:
+                tmp.write_bytes(blob)
+                tmp.rename(path)
+            except OSError:
+                # tmpfs unavailable/full: serve uncached rather than fail
+                try:
+                    tmp.unlink()
+                except OSError:
+                    pass
+                return
+            self._entries[digest] = path
+        else:
+            self._entries[digest] = blob
+        self._sizes[digest] = len(blob)
+        self._bytes += len(blob)
+
+    # ------------------------------------------------------------------ api
+    def get(self, digest: str, loader: Callable[[], bytes]) -> bytes:
+        """The blob for ``digest``, via ``loader`` on a miss.  Concurrent
+        misses of one digest coalesce onto a single loader call."""
+        while True:
+            with self._lock:
+                blob = self._fetch_locked(digest)
+                if blob is not None:
+                    self.stats["hits"] += 1
+                    return blob
+                cell = self._inflight.get(digest)
+                if cell is None:
+                    cell = {"event": threading.Event(), "value": None,
+                            "error": None}
+                    self._inflight[digest] = cell
+                    owner = True
+                else:
+                    owner = False
+            if not owner:
+                cell["event"].wait()  # type: ignore[union-attr]
+                if cell["error"] is not None:
+                    raise cell["error"]  # type: ignore[misc]
+                with self._lock:
+                    self.stats["coalesced"] += 1
+                return cell["value"]  # type: ignore[return-value]
+            try:
+                blob = loader()
+            except BaseException as e:  # noqa: BLE001 - propagate, unpoisoned
+                cell["error"] = e
+                with self._lock:
+                    self._inflight.pop(digest, None)
+                cell["event"].set()  # type: ignore[union-attr]
+                raise
+            with self._lock:
+                cell["value"] = blob
+                self.stats["misses"] += 1
+                self._store_locked(digest, blob)
+                self._inflight.pop(digest, None)
+            cell["event"].set()  # type: ignore[union-attr]
+            return blob
+
+    def peek(self, digest: str) -> bool:
+        with self._lock:
+            return digest in self._entries
+
+    def discard(self, digest: str) -> None:
+        """Drop a digest (GC deleted its object)."""
+        with self._lock:
+            self._drop_locked(digest)
+
+    def clear(self) -> None:
+        with self._lock:
+            for d in list(self._entries):
+                self._drop_locked(d)
+
+    def snapshot(self) -> Dict[str, int]:
+        """Point-in-time copy of the counters plus occupancy."""
+        with self._lock:
+            out = dict(self.stats)
+            out["entries"] = len(self._entries)
+            out["bytes"] = self._bytes
+            out["budget_bytes"] = self.budget_bytes
+            return out
+
+    def close(self) -> None:
+        """Unlink every shm segment; the cache stays usable as a no-op
+        pass-through (loads run, nothing is retained)."""
+        with self._lock:
+            for d in list(self._entries):
+                self._drop_locked(d)
+            self._closed = True
+
+    def __enter__(self) -> "BlockCache":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -67,7 +67,8 @@ import json
 import threading
 from collections import Counter
 from pathlib import Path
-from typing import Any, Dict, Iterable, Iterator, Optional, Tuple
+from typing import (TYPE_CHECKING, Any, Dict, Iterable, Iterator, Optional,
+                    Tuple)
 
 import msgpack
 
@@ -80,6 +81,9 @@ from repro.checkpoint.backends.retry import RetryPolicy
 # atomic-write protocol from here; the implementation now lives with the
 # rest of the filesystem IO in the backends package.
 from repro.checkpoint.backends.localfs import atomic_write as _atomic_write  # noqa: F401,E501
+
+if TYPE_CHECKING:
+    from repro.checkpoint.block_cache import BlockCache
 
 PyTree = Any
 
@@ -321,7 +325,8 @@ class ChunkStore:
                  hot_budget_bytes: Optional[int] = None,
                  read_retry: Optional[RetryPolicy] = None,
                  remote_opts: Optional[Dict[str, Any]] = None,
-                 dispatch: Optional[IoDispatch] = None):
+                 dispatch: Optional[IoDispatch] = None,
+                 block_cache: Optional["BlockCache"] = None):
         self.root = Path(root)
         self.codec = compression.resolve_codec(codec)
         self.fsync = fsync
@@ -338,6 +343,14 @@ class ChunkStore:
                                     dispatch=self.dispatch)
         self.read_retry = read_retry if read_retry is not None \
             else READ_RETRY
+        # Process-lifetime digest->blob cache underneath every backend
+        # read (serving fleets: K variants/hot-swaps share one copy of
+        # each dedup object — see checkpoint/block_cache.py).  The cache
+        # may be shared across stores; the store never closes it.
+        self.block_cache = block_cache
+        # Monotonic count of reads that actually reached the backend
+        # (cache hits excluded) — the bench gate's "object reads" axis.
+        self.backend_reads = 0
         self.delta = delta
         self.delta_ratio = delta_ratio
         self.rebase_every = max(1, rebase_every)
@@ -472,6 +485,15 @@ class ChunkStore:
 
     # ---- object io ----
     def _backend_read(self, digest: str) -> bytes:
+        """Object blob by digest: the block cache when one is attached
+        (content addressing makes cached blobs immutable-safe), the
+        retried backend read otherwise."""
+        if self.block_cache is not None:
+            return self.block_cache.get(
+                digest, lambda: self._backend_read_direct(digest))
+        return self._backend_read_direct(digest)
+
+    def _backend_read_direct(self, digest: str) -> bytes:
         """Backend read with bounded transient-IO retries.
 
         A flaky-but-alive backend (remote blip, injected error rate)
@@ -484,6 +506,8 @@ class ChunkStore:
             with self._lock:
                 self.io_retries += 1
 
+        with self._lock:
+            self.backend_reads += 1
         try:
             return self.read_retry.run(
                 lambda: self.backend.read(digest), key=digest,
@@ -1014,6 +1038,8 @@ class ChunkStore:
                 old = self._canon_cache.pop(digest, None)
                 if old is not None:
                     self._canon_cache_bytes -= len(old)
+            if self.block_cache is not None:
+                self.block_cache.discard(digest)
         return freed
 
     # ---- usage / tier passthroughs ----

@@ -35,6 +35,10 @@ Catalog (``CRASH_POINTS``) — where each named point fires:
 ``spread_slice``      ``OverlappedSaver`` tick: before a spread slice
                       materializes/writes its share of staged units
                       (mid-spread, some units written, no commit yet)
+``swap_apply``        ``swap.WeightService.swap``: before each changed
+                      unit's delta is applied onto the staged device
+                      tree (mid-swap — the OLD weights must keep
+                      serving, never a half-applied tensor)
 ==================== ======================================================
 
 plus the generic transfer-layer points ``pool:<lane>`` fired by
@@ -85,6 +89,7 @@ CRASH_POINTS = (
     "manifest_latest",
     "snapshot_overlap",
     "spread_slice",
+    "swap_apply",
 )
 
 

@@ -59,7 +59,7 @@ from repro.checkpoint.sharded import (
     spec_overlaps,
 )
 from repro.core.layer_registry import OPT_KINDS, LayerRegistry
-from repro.core.manifest import ManifestStore, entry_refs, is_sharded
+from repro.core.manifest import Manifest, ManifestStore, entry_refs, is_sharded
 from repro.optim.groups import get_at, set_at
 
 log = logging.getLogger("repro.checkpoint.restore")
@@ -157,7 +157,8 @@ def plan_restore(manifests: ManifestStore, store: ChunkStore,
                  step: Optional[int] = None,
                  parts: Sequence[str] = PARTS_ALL,
                  units: Optional[Sequence[str]] = None,
-                 owned: Optional[WantedFn] = None) -> RestorePlan:
+                 owned: Optional[WantedFn] = None,
+                 manifest: Optional[Manifest] = None) -> RestorePlan:
     """Resolve the manifest chain into a deduplicated, fallback-aware
     read plan.
 
@@ -183,7 +184,13 @@ def plan_restore(manifests: ManifestStore, store: ChunkStore,
                                f"expected subset of {PARTS_ALL}")
     if not parts:
         raise RestoreError("restore needs at least one part")
-    manifest = manifests.load(step)
+    # ``manifest`` restores from a caller-supplied (possibly synthetic)
+    # manifest instead of loading one by ``step`` — the variant-serving
+    # path (``core.tailor.variant_manifest``): entries are picked from
+    # several committed manifests of the SAME store, and the older-
+    # manifest fallback chains of that store still apply.
+    if manifest is None:
+        manifest = manifests.load(step)
     if manifest is None:
         raise RestoreError(f"no manifest found in {manifests.root}")
 
@@ -586,7 +593,8 @@ class RestoreEngine:
                 parts: Sequence[str] = PARTS_ALL,
                 units: Optional[Sequence[str]] = None,
                 pipelined: bool = True,
-                owned: Optional[WantedFn] = None) -> Dict[str, PyTree]:
+                owned: Optional[WantedFn] = None,
+                manifest: Optional[Manifest] = None) -> Dict[str, PyTree]:
         """Rebuild a train state from the manifest chain (the implicit
         Frankenstein merge), streaming units device-ward as they decode.
 
@@ -606,7 +614,8 @@ class RestoreEngine:
         workers0 = dispatch.stats()  # None under the thread backend
         plan = plan_restore(self.manifests, self.store,
                             self.registry.unit_names(), step=step,
-                            parts=parts, units=units, owned=owned)
+                            parts=parts, units=units, owned=owned,
+                            manifest=manifest)
         session = ReadSession(self.store, verify=self.verify)
         placer = _Placer(self.registry, state_like, shardings, plan)
         fallbacks: Dict[str, int] = {}

@@ -69,6 +69,7 @@ from repro.checkpoint.async_io import (
     TransferPool,
 )
 from repro.checkpoint.backends import StorageBackend, make_backend
+from repro.checkpoint.block_cache import BlockCache
 from repro.checkpoint.chunk_store import ChunkRef, ChunkStore
 from repro.checkpoint.restore import (  # noqa: F401 - RestoreError re-export
     DEFAULT_IO_THREADS,
@@ -117,6 +118,9 @@ class CheckpointManager:
         remote_opts: Optional[Dict[str, Any]] = None,
         io_backend: str = "thread",
         io_workers: Optional[int] = None,
+        block_cache: Optional[BlockCache] = None,
+        block_cache_bytes: Optional[int] = None,
+        block_cache_shm: bool = False,
     ):
         self.root = Path(root)
         self.registry = registry
@@ -163,8 +167,21 @@ class CheckpointManager:
                                hot_budget_bytes=hot_budget_bytes,
                                remote_opts=remote_opts,
                                dispatch=dispatch)
+        # Digest-keyed host-RAM object cache underneath backend reads —
+        # the serving-fleet knob (docs/serving.md): pass an existing
+        # ``block_cache`` to share one across managers/variants, or
+        # ``block_cache_bytes`` to have this manager own a fresh one
+        # (``block_cache_shm`` backs its entries with /dev/shm segments
+        # under the repo-wide owner-pid prefix).
+        self._own_block_cache = block_cache is None \
+            and block_cache_bytes is not None
+        if self._own_block_cache:
+            block_cache = BlockCache(int(block_cache_bytes),
+                                     shm=block_cache_shm)
+        self.block_cache = block_cache
         self.store = ChunkStore(self.root, codec=codec, delta=delta,
-                                backend=backend, dispatch=dispatch)
+                                backend=backend, dispatch=dispatch,
+                                block_cache=block_cache)
         self.manifests = ManifestStore(self.root)
         self.keep = keep
         self.async_save = async_save
@@ -607,7 +624,8 @@ class CheckpointManager:
                 parts: Tuple[str, ...] = PARTS_ALL,
                 units: Optional[Tuple[str, ...]] = None,
                 pipelined: bool = True,
-                owned: Optional[WantedFn] = None) -> Dict[str, PyTree]:
+                owned: Optional[WantedFn] = None,
+                manifest: Optional[Manifest] = None) -> Dict[str, PyTree]:
         """Rebuild a train state from the manifest chain (the implicit
         merge) via the streaming restore engine — thin wrapper over
         :class:`repro.checkpoint.restore.RestoreEngine`.
@@ -626,7 +644,7 @@ class CheckpointManager:
         return self.restorer.restore(state_like, step=step,
                                      shardings=shardings, parts=parts,
                                      units=units, pipelined=pipelined,
-                                     owned=owned)
+                                     owned=owned, manifest=manifest)
 
     @property
     def last_restore_stats(self) -> Dict[str, Any]:
@@ -672,6 +690,10 @@ class CheckpointManager:
         self.store.close()
         if self.transfer_pool is not None:
             self.transfer_pool.close()
+        # Only a cache this manager created is closed here — a shared
+        # cache outlives any one manager by design.
+        if self._own_block_cache and self.block_cache is not None:
+            self.block_cache.close()
 
     # -------------------------------------------------------------- metrics
     def disk_usage(self) -> Dict[str, int]:

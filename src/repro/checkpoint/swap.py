@@ -1,0 +1,377 @@
+"""Delta-push weight hot-swap + multi-variant serving (docs/serving.md).
+
+The reader-side perf surface complementing the writer-side pipeline:
+promoting a new checkpoint to N serving replicas should transfer
+*drift*, not model size.  The store already knows exactly which digests
+changed — a manifest is a unit -> digest map — so a running server can
+diff the latest manifest against what it currently serves and touch only
+the units whose content moved:
+
+- **unchanged unit** (same digest): zero object reads, zero H2D.
+- **block-delta unit whose base is exactly what we serve**: read only
+  the BD02 object (never its full base — the device already holds those
+  bytes) and *scatter* the dirty blocks onto the live device leaf with
+  a functional ``at[...].set``; H2D cost is dirty elements + indices.
+- **anything else** (rebased full object, XOR delta against an unseen
+  base, shard set, dtype/shape oddity): fall back to a normal
+  session-cached read of that unit and replace it wholesale.
+
+Crash safety is the restore-side mirror of the manifest-last commit
+protocol: every per-unit update lands in a *staged* functional copy of
+the params tree while the served tree stays untouched; only after every
+changed unit applied (and the device finished materializing) does one
+atomic reference swap publish {params, digest map, step} together.  The
+``swap_apply`` crash point (see faults.py) fires before each unit apply
+— a crash mid-swap leaves the old weights serving and the next ``poll``
+simply redoes the whole swap (digest diffing makes it idempotent).
+
+Multi-variant serving builds on the same digest discipline:
+:class:`VariantSet` materializes tailor merge recipes
+(``core.tailor.variant_manifest`` — the zero-copy composite checkpoint)
+as named :class:`WeightService` instances sharing one store, so with a
+:class:`~repro.checkpoint.block_cache.BlockCache` attached, K variants
+read each shared dedup digest off the backend exactly once.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import compression, faults, serial
+from repro.checkpoint.chunk_store import ReadSession
+from repro.checkpoint.sharded import assemble_shards
+from repro.core.manifest import Manifest, entry_refs, is_sharded
+from repro.core.tailor import variant_manifest
+from repro.optim.groups import get_at, set_at
+
+PyTree = Any
+
+
+class SwapError(RuntimeError):
+    pass
+
+
+class _ScatterUnsupported(Exception):
+    """Internal: this unit can't take the in-place scatter fast path;
+    fall back to a full session read (never user-visible)."""
+
+
+def _entry_key(entry) -> Any:
+    """The served-content identity of a manifest entry: the object
+    digest for a global entry, the sorted digest tuple for a shard set.
+    Equal keys == bit-identical served bytes (content addressing)."""
+    if is_sharded(entry):
+        return tuple(sorted(r.digest for r in entry_refs(entry)))
+    return entry.digest
+
+
+def _scatter_leaf(arr: jax.Array, rec: Dict[str, Any]) -> Tuple[jax.Array, int]:
+    """Scatter one BD02 record's dirty blocks onto a live device leaf.
+
+    Element math mirrors ``fingerprint.patch_tree`` exactly: record
+    ``data`` holds the dirty blocks back to back, each padded to the
+    full block size; the tail block's padding beyond ``nbytes`` is
+    truncated.  Returns (patched leaf, H2D bytes moved)."""
+    dtype = np.dtype(compression.np_dtype(rec["dtype"]))
+    block = int(rec["block"])
+    nbytes = int(rec["nbytes"])
+    if (block % dtype.itemsize or nbytes % dtype.itemsize
+            or tuple(rec["shape"]) != tuple(arr.shape)
+            or dtype != arr.dtype):
+        raise _ScatterUnsupported
+    be = block // dtype.itemsize          # elements per block
+    n_elems = nbytes // dtype.itemsize
+    data = np.frombuffer(rec["data"], np.uint8)
+    idx_parts: List[np.ndarray] = []
+    val_parts: List[np.ndarray] = []
+    for j, bi in enumerate(rec["idx"]):
+        start = int(bi) * be
+        end = min(start + be, n_elems)
+        if end <= start:
+            raise _ScatterUnsupported  # corrupt index; let full path verify
+        raw = data[j * block:j * block + (end - start) * dtype.itemsize]
+        # int32 indices halve-to-quarter the H2D side channel; leaves
+        # with >2^31 elements take the full-read path instead.
+        if end > np.iinfo(np.int32).max:
+            raise _ScatterUnsupported
+        idx_parts.append(np.arange(start, end, dtype=np.int32))
+        val_parts.append(np.frombuffer(raw.tobytes(), dtype))
+    if not idx_parts:
+        return arr, 0
+    idx = np.concatenate(idx_parts)
+    vals = np.concatenate(val_parts)
+    flat = jnp.reshape(arr, (-1,))
+    out = flat.at[jnp.asarray(idx)].set(jnp.asarray(vals))
+    return jnp.reshape(out, arr.shape), int(idx.nbytes + vals.nbytes)
+
+
+def _fresh_stats() -> Dict[str, Any]:
+    return {"units_swapped": 0, "units_skipped": 0, "units_scattered": 0,
+            "units_full": 0, "blocks_applied": 0, "h2d_bytes": 0,
+            "bytes_read": 0, "objects_read": 0}
+
+
+class WeightService:
+    """One served weight set with live delta-push promotion.
+
+    Wraps a :class:`~repro.checkpoint.saver.CheckpointManager`'s store/
+    manifests: the constructor cold-loads ``params`` (weights-only
+    partial restore) from ``step``/``manifest``, then :meth:`poll`
+    follows the manifest chain and :meth:`swap` applies digest diffs in
+    place.  ``self.params`` is always a *complete, consistent* device
+    tree — readers grab it with :meth:`current` (one reference read)
+    and are never exposed to a half-applied swap.
+
+    ``last_swap_stats`` mirrors the restore engine's ``last_stats``:
+    bytes/objects read, H2D bytes, per-path unit counts, wall seconds,
+    and — when the store carries a BlockCache — the hit/miss/eviction
+    delta of this swap.
+    """
+
+    def __init__(self, manager, state_like: Dict[str, PyTree], *,
+                 step: Optional[int] = None,
+                 manifest: Optional[Manifest] = None,
+                 verify: bool = True):
+        self.mgr = manager
+        self.registry = manager.registry
+        self.store = manager.store
+        self.manifests = manager.manifests
+        self.verify = verify
+        self._lock = threading.Lock()
+        if manifest is None:
+            manifest = self.manifests.load(step)
+            if manifest is None:
+                raise SwapError(f"no manifest at step {step!r} under "
+                                f"{self.manifests.root}")
+        state = manager.restore({"params": state_like["params"]},
+                                parts=("params",), manifest=manifest)
+        self.params: PyTree = state["params"]
+        self.step: int = int(manifest.step)
+        self.restore_stats = dict(manager.last_restore_stats)
+        self._served: Dict[str, Any] = self._digest_keys(manifest)
+        self.last_swap_stats: Dict[str, Any] = {}
+
+    # ------------------------------------------------------------- helpers
+    def _digest_keys(self, manifest: Manifest) -> Dict[str, Any]:
+        keys: Dict[str, Any] = {}
+        for unit in self.registry.unit_names():
+            kinds = manifest.entries.get(unit)
+            if kinds is None or "weights" not in kinds:
+                raise SwapError(f"manifest {manifest.step} has no weights "
+                                f"entry for unit {unit!r}")
+            keys[unit] = _entry_key(kinds["weights"])
+        return keys
+
+    def current(self) -> PyTree:
+        """The served params tree (atomic reference read)."""
+        with self._lock:
+            return self.params
+
+    def _cache_delta(self, before: Optional[Dict[str, int]]
+                     ) -> Optional[Dict[str, int]]:
+        cache = self.store.block_cache
+        if cache is None or before is None:
+            return None
+        after = cache.snapshot()
+        return {k: after[k] - before.get(k, 0)
+                for k in ("hits", "misses", "evictions")}
+
+    # ---------------------------------------------------------------- poll
+    def poll(self) -> Optional[Dict[str, Any]]:
+        """Follow the manifest chain: swap to LATEST if it moved.
+        Returns the swap stats, or None when already current (zero
+        reads, zero H2D — not even a manifest parse)."""
+        latest = self.manifests.latest_step()
+        if latest is None or latest == self.step:
+            return None
+        manifest = self.manifests.load(latest)
+        if manifest is None:
+            return None  # torn commit in progress; next poll catches up
+        return self.swap(manifest)
+
+    # ---------------------------------------------------------------- swap
+    def swap(self, manifest: Manifest) -> Dict[str, Any]:
+        """Promote ``manifest``: apply per-unit digest diffs onto a
+        staged copy of the served tree, then publish atomically.
+
+        Digest diffing (not step arithmetic) drives the plan, so
+        swapping across several skipped manifests — or backwards, for a
+        rollback — is the same single pass; a delta chain is only read
+        when the entry's base is exactly what the device holds.
+        """
+        t0 = time.time()
+        cache = self.store.block_cache
+        cache0 = cache.snapshot() if cache is not None else None
+        session = ReadSession(self.store, verify=self.verify)
+        stats = _fresh_stats()
+        step_from = self.step
+        params = self.current()
+        staged_keys: Dict[str, Any] = {}
+        for unit in self.registry.unit_names():
+            kinds = manifest.entries.get(unit)
+            if kinds is None or "weights" not in kinds:
+                raise SwapError(f"manifest {manifest.step} has no weights "
+                                f"entry for unit {unit!r}")
+            entry = kinds["weights"]
+            key = _entry_key(entry)
+            if key == self._served.get(unit):
+                stats["units_skipped"] += 1
+                continue
+            # The drill point: a crash here (any unit deep into the
+            # loop) must leave self.params untouched and re-swappable.
+            faults.crash_point("swap_apply")
+            params = self._apply_unit(params, unit, entry, session, stats)
+            staged_keys[unit] = key
+            stats["units_swapped"] += 1
+        # Materialize every staged update BEFORE publishing: readers of
+        # self.params must never observe donated/incomplete buffers.
+        jax.block_until_ready(jax.tree.leaves(params))
+        with self._lock:
+            self.params = params
+            self._served.update(staged_keys)
+            self.step = int(manifest.step)
+        stats.update(
+            step_from=step_from, step_to=int(manifest.step),
+            seconds=time.time() - t0,
+            bytes_read=session.stats["bytes_read"],
+            objects_read=session.stats["object_reads"],
+            cache=self._cache_delta(cache0),
+        )
+        self.last_swap_stats = stats
+        return stats
+
+    # ---------------------------------------------------------- unit apply
+    def _apply_unit(self, params: PyTree, unit: str, entry,
+                    session: ReadSession, stats: Dict[str, Any]) -> PyTree:
+        refs = entry_refs(entry)
+        if is_sharded(entry):
+            # Shard sets always reload whole (assembling a global array
+            # from shard objects is already element-addressed IO; a
+            # per-shard scatter would buy nothing on a single host).
+            parts = []
+            for ref in refs:
+                tree, _ = session.read(ref.digest)
+                parts.append((ref.spec, tree))
+            stats["units_full"] += 1
+            return self._replace_unit(params, unit,
+                                      assemble_shards(parts, partial=False),
+                                      stats)
+        ref = refs[0]
+        served = self._served.get(unit)
+        if (isinstance(served, str) and served
+                and ref.stored == "delta" and ref.delta_base == served):
+            # Fast path candidate: the new object is a delta whose base
+            # is EXACTLY the content this server already holds on device
+            # — never read the base, scatter only the dirty blocks.
+            env = session.envelope(ref.digest)
+            if env.get("format") == "block_delta" \
+                    and env.get("fp") is not None:
+                try:
+                    return self._scatter_unit(params, unit, env, stats)
+                except _ScatterUnsupported:
+                    pass  # full read below (and its verify) decides
+        tree, _ = session.read(ref.digest)
+        stats["units_full"] += 1
+        return self._replace_unit(params, unit, tree, stats)
+
+    def _scatter_unit(self, params: PyTree, unit: str,
+                      env: Dict[str, Any], stats: Dict[str, Any]) -> PyTree:
+        records = compression.block_delta_decode(env["payload"])
+        u = self.registry.by_name[unit]
+        sub = get_at(params, u.path)
+        current = sub if u.index is None \
+            else jax.tree.map(lambda x: x[u.index], sub)
+        # Pair serial's path flatten with jax's leaf flatten: both order
+        # dicts by sorted key and sequences positionally, so index i of
+        # one is index i of the other.  Any structural surprise bails to
+        # the full-read path rather than guessing.
+        paths = [p for p, _ in serial.flatten_with_paths(current)]
+        leaves, treedef = jax.tree.flatten(current)
+        if len(paths) != len(leaves):
+            raise _ScatterUnsupported
+        by_path = {p: i for i, p in enumerate(paths)}
+        for rec in records:
+            i = by_path.get(rec["name"])
+            if i is None:
+                raise _ScatterUnsupported
+            leaves[i], h2d = _scatter_leaf(leaves[i], rec)
+            stats["h2d_bytes"] += h2d
+            stats["blocks_applied"] += len(rec["idx"])
+        patched = jax.tree.unflatten(treedef, leaves)
+        stats["units_scattered"] += 1
+        if u.index is None:
+            return set_at(params, u.path, patched)
+        new_sub = jax.tree.map(
+            lambda stacked, piece: stacked.at[u.index].set(piece),
+            sub, patched)
+        return set_at(params, u.path, new_sub)
+
+    def _replace_unit(self, params: PyTree, unit: str, value: PyTree,
+                      stats: Dict[str, Any]) -> PyTree:
+        """Wholesale unit replacement from a decoded host tree (H2D is
+        the unit's full byte size — the slow path the digest diff and
+        the scatter exist to avoid)."""
+        u = self.registry.by_name[unit]
+        sub = get_at(params, u.path)
+
+        def place(spec_leaf: jax.Array, host_leaf) -> jax.Array:
+            arr = np.asarray(host_leaf)
+            stats["h2d_bytes"] += arr.nbytes
+            return jnp.asarray(arr.astype(spec_leaf.dtype, copy=False))
+
+        if u.index is None:
+            return set_at(params, u.path, jax.tree.map(place, sub, value))
+        new_sub = jax.tree.map(
+            lambda stacked, piece: stacked.at[u.index].set(
+                place(stacked, piece)),
+            sub, value)
+        return set_at(params, u.path, new_sub)
+
+
+class VariantSet:
+    """K named weight variants served from ONE store.
+
+    Each :meth:`materialize` builds a zero-copy composite manifest
+    (``variant_manifest``) and cold-loads it as a :class:`WeightService`
+    through the shared manager — so with a BlockCache on the store,
+    digests shared between variants (most of them: unchanged units dedup
+    to identical digests across steps) hit the cache instead of the
+    backend.  Every variant keeps full hot-swap ability via its service.
+    """
+
+    def __init__(self, manager, state_like: Dict[str, PyTree], *,
+                 verify: bool = True):
+        self.mgr = manager
+        self.state_like = state_like
+        self.verify = verify
+        self.services: Dict[str, WeightService] = {}
+
+    def materialize(self, name: str, *, base_step: Optional[int] = None,
+                    select: Any = ()) -> WeightService:
+        manifest = variant_manifest(self.mgr.manifests,
+                                    base_step=base_step, select=select,
+                                    name=name)
+        svc = WeightService(self.mgr, self.state_like, manifest=manifest,
+                            verify=self.verify)
+        self.services[name] = svc
+        return svc
+
+    def __getitem__(self, name: str) -> WeightService:
+        return self.services[name]
+
+    def params(self, name: str) -> PyTree:
+        return self.services[name].current()
+
+    def stats(self) -> Dict[str, Any]:
+        cache = self.mgr.store.block_cache
+        return {
+            "variants": {n: dict(s.restore_stats)
+                         for n, s in self.services.items()},
+            "cache": cache.snapshot() if cache is not None else None,
+            "backend_reads": self.mgr.store.backend_reads,
+        }

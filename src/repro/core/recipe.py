@@ -26,6 +26,35 @@ from repro.core import jsonutil, yamlish
 _RANGE_RE = re.compile(r"^(.*?)(\d+)\.\.(.*?)(\d+)$")
 
 
+def expand_patterns(patterns: Sequence[str],
+                    all_units: Sequence[str]) -> List[str]:
+    """Resolve recipe unit patterns against the known unit names.
+
+    Three forms, matching the YAML schema above: a zero-padded range
+    (``block_000..block_013``), a glob-ish prefix (``block_*``), or an
+    exact name.  Unknown exact names raise — a recipe (or a serving
+    variant selection, which reuses this) naming a unit the model does
+    not have is a configuration error, not an empty match.
+    """
+    out: List[str] = []
+    for pat in patterns:
+        m = _RANGE_RE.match(pat)
+        if m and m.group(1) == m.group(3):
+            prefix, lo, hi = m.group(1), int(m.group(2)), int(m.group(4))
+            width = len(m.group(2))
+            for i in range(lo, hi + 1):
+                name = f"{prefix}{i:0{width}d}"
+                if name in all_units:
+                    out.append(name)
+        elif pat.endswith("*"):
+            out.extend(u for u in all_units if u.startswith(pat[:-1]))
+        elif pat in all_units:
+            out.append(pat)
+        else:
+            raise KeyError(f"recipe names unknown unit {pat!r}")
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class CheckpointRef:
     root: Path
@@ -49,23 +78,7 @@ class SelectRule:
     source: CheckpointRef
 
     def expand(self, all_units: Sequence[str]) -> List[str]:
-        out: List[str] = []
-        for pat in self.units:
-            m = _RANGE_RE.match(pat)
-            if m and m.group(1) == m.group(3):
-                prefix, lo, hi = m.group(1), int(m.group(2)), int(m.group(4))
-                width = len(m.group(2))
-                for i in range(lo, hi + 1):
-                    name = f"{prefix}{i:0{width}d}"
-                    if name in all_units:
-                        out.append(name)
-            elif pat.endswith("*"):
-                out.extend(u for u in all_units if u.startswith(pat[:-1]))
-            elif pat in all_units:
-                out.append(pat)
-            else:
-                raise KeyError(f"recipe names unknown unit {pat!r}")
-        return out
+        return expand_patterns(self.units, all_units)
 
 
 @dataclasses.dataclass

@@ -39,11 +39,74 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.checkpoint.chunk_store import ChunkRef, ChunkStore
 from repro.core.manifest import Manifest, ManifestStore, entry_refs, is_sharded
-from repro.core.recipe import CheckpointRef, Recipe
+from repro.core.recipe import CheckpointRef, Recipe, expand_patterns
 
 
 class MergeError(RuntimeError):
     pass
+
+
+VariantSelect = Tuple[Any, int]  # (pattern or [patterns], source step)
+
+
+def variant_manifest(manifests: ManifestStore, *,
+                     base_step: Optional[int] = None,
+                     select: Any = (),
+                     name: str = "variant") -> Manifest:
+    """The zero-copy sibling of :func:`merge` for serving variants.
+
+    Assembles a synthetic in-memory :class:`Manifest` whose entries are
+    picked from several *committed* manifests of ONE store — the paper's
+    composite checkpoint served virtually: no object is copied, no new
+    manifest is committed, and every entry keeps its original digest, so
+    K variants behind one :class:`~repro.checkpoint.block_cache.BlockCache`
+    share each dedup object.  Feed the result to
+    ``CheckpointManager.restore(..., manifest=...)`` (or a
+    ``swap.WeightService``).
+
+    ``select`` is a sequence of ``(patterns, step)`` pairs (or dicts with
+    ``units``/``step`` keys — the recipe-YAML shape); patterns use the
+    recipe syntax (``block_000..block_013``, ``block_*``, exact names)
+    and later rules win.  Unselected units come from ``base_step``
+    (LATEST when None).
+    """
+    base = manifests.load(base_step)
+    if base is None:
+        raise MergeError(f"no manifest at step {base_step!r} "
+                         f"under {manifests.root}")
+    all_units = sorted(base.entries)
+    assignment: Dict[str, int] = {u: base.step for u in all_units}
+    for item in select:
+        if isinstance(item, dict):
+            pats, step = item["units"], int(item["step"])
+        else:
+            pats, step = item[0], int(item[1])
+        if isinstance(pats, str):
+            pats = [pats]
+        for u in expand_patterns(list(pats), all_units):
+            assignment[u] = step
+    sources: Dict[int, Manifest] = {base.step: base}
+    entries: Dict[str, Dict[str, Any]] = {}
+    for unit in all_units:
+        step = assignment[unit]
+        m = sources.get(step)
+        if m is None:
+            m = manifests.load(step)
+            if m is None:
+                raise MergeError(f"variant {name!r}: no manifest at step "
+                                 f"{step} under {manifests.root}")
+            sources[step] = m
+        if unit not in m.entries:
+            raise MergeError(f"variant {name!r}: unit {unit!r} missing "
+                             f"from manifest {step}")
+        entries[unit] = dict(m.entries[unit])
+    return Manifest(
+        step=base.step,
+        entries=entries,
+        meta=dict(base.meta,
+                  variant={"name": name, "assignment": assignment}),
+        saved_units=[],
+    )
 
 
 def _load_manifest(ref: CheckpointRef,

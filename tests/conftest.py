@@ -29,10 +29,11 @@ def pytest_configure(config):
 def shm_clean_guard():
     """/dev/shm hygiene: every ``repro-io-*`` shared-memory segment this
     test process created — worker arena/scratch files (process-backed IO
-    lanes) and ``-stage-`` staging slots (overlapped saves) share the
-    owner-pid prefix — must be unlinked by the time the session ends; a
-    leak means some TransferPool, ProcessWorkerPool, or StagingArena
-    was never closed."""
+    lanes), ``-stage-`` staging slots (overlapped saves), and ``-cache-``
+    block-cache segments (shm-backed BlockCache, docs/serving.md) share
+    the owner-pid prefix — must be unlinked by the time the session ends;
+    a leak means some TransferPool, ProcessWorkerPool, StagingArena, or
+    BlockCache was never closed."""
     import glob
     prefix = f"/dev/shm/repro-io-{os.getpid():x}-"
     yield

@@ -150,6 +150,43 @@ def test_crash_then_retry_same_step_commits(setup, tmp_path):
     mgr.close()
 
 
+def test_swap_apply_crash_keeps_serving_previous_weights(setup, tmp_path):
+    """The reader-side entry of the crash catalog: ``swap_apply`` fires
+    mid-promotion inside ``swap.WeightService.swap``.  The server must
+    keep answering from the PREVIOUS weights (never a half-applied
+    tensor) and the next poll must complete the identical swap."""
+    from repro.checkpoint.swap import WeightService
+
+    model, registry, state1, state2 = setup
+    pol = make_policy("full", model.layer_units())
+    mgr = CheckpointManager(tmp_path, registry, pol, async_save=False,
+                            fp_block_bytes=4096)
+    mgr.save(state1, step=10)
+    mgr.save(state2, step=20)
+    like = steps_lib.state_specs(model)
+    svc = WeightService(mgr, like, step=10)
+    cold10 = mgr.restore(like, parts=("params",), step=10)
+
+    # Die on the SECOND changed unit: some units already staged — none
+    # of them may be visible to readers.
+    with faults.scoped("swap_apply", hit=2):
+        with pytest.raises(InjectedCrash):
+            svc.poll()
+    assert not faults.pending()
+    assert svc.step == 10
+    _assert_states_equal({"params": svc.current()},
+                         {"params": cold10["params"]}, parts=("params",))
+
+    # Recovery: digest diffing makes the redo idempotent — one clean
+    # poll lands the full promotion, bit-exact vs a cold restore of 20.
+    stats = svc.poll()
+    assert stats is not None and svc.step == 20
+    cold20 = mgr.restore(like, parts=("params",), step=20)
+    _assert_states_equal({"params": svc.current()},
+                         {"params": cold20["params"]}, parts=("params",))
+    mgr.close()
+
+
 # ----------------------------------------------------------- trainer CLI
 def test_fail_at_crash_point_reaches_mid_save_and_resumes(tmp_path):
     """--fail-at N@point dies INSIDE the save pipeline (here: between

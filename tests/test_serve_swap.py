@@ -1,0 +1,446 @@
+"""Serving fleet: delta-push hot-swap (checkpoint/swap.py), the
+digest-keyed BlockCache (checkpoint/block_cache.py), zero-copy variant
+manifests (core.tailor.variant_manifest), and concurrent fleet restore
+from one store.  See docs/serving.md."""
+import glob
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import faults
+from repro.checkpoint.block_cache import BlockCache
+from repro.checkpoint.faults import InjectedCrash
+from repro.checkpoint.saver import CheckpointManager
+from repro.checkpoint.swap import VariantSet, WeightService, _entry_key
+from repro.configs import get_config
+from repro.core import LayerRegistry, make_policy
+from repro.core.tailor import MergeError, variant_manifest
+from repro.launch import steps as steps_lib
+from repro.models import build_model
+
+ARCH = "mamba2-370m"
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    faults.disarm()
+    yield
+    faults.disarm()
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config(ARCH, reduced=True)
+    model = build_model(cfg)
+    state1 = steps_lib.init_state(model, jax.random.key(0))
+
+    def poke(x):
+        x = np.array(x)
+        x.flat[:1] += 1
+        return x
+
+    # Every weight leaf drifts by one element: with 4 KiB fingerprint
+    # blocks the second event lands as block-sparse deltas, the exact
+    # shape the scatter fast path exists for.
+    state2 = {"step": np.array(state1["step"]),
+              "params": jax.tree.map(poke, state1["params"]),
+              "opt": jax.tree.map(poke, state1["opt"])}
+    return model, LayerRegistry(model), state1, state2
+
+
+def _mgr(root, registry, model, **kw):
+    kw.setdefault("async_save", False)
+    kw.setdefault("fp_block_bytes", 4096)
+    return CheckpointManager(root, registry,
+                             make_policy("full", model.layer_units()), **kw)
+
+
+def _assert_params_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------------ hot-swap core
+@pytest.mark.parametrize("backend", ["local", "tiered", "remote3"])
+def test_swap_parity_bit_exact(tmp_path, setup, backend):
+    """Swap-vs-cold-restore parity on every store composition: load step
+    10, hot-swap to 20, compare bit-exact against a cold restore of 20."""
+    model, reg, s1, s2 = setup
+    kw = {"store_backend": backend}
+    if backend == "remote3":
+        kw["remote_opts"] = {"latency": 0.0, "seed": 7}
+    mgr = _mgr(tmp_path, reg, model, **kw)
+    try:
+        mgr.save(s1, step=10)
+        mgr.save(s2, step=20)
+        like = steps_lib.state_specs(model)
+        svc = WeightService(mgr, like, step=10)
+        assert svc.step == 10
+        stats = svc.poll()
+        assert stats is not None and svc.step == 20
+        assert stats["units_swapped"] > 0
+        cold = mgr.restore(like, parts=("params",), step=20)
+        _assert_params_equal(svc.current(), cold["params"])
+        # promotion must transfer drift, not model size
+        assert stats["bytes_read"] < mgr.last_restore_stats["bytes_read"]
+    finally:
+        mgr.close()
+
+
+def test_swap_scatter_is_dirty_block_sized(tmp_path, setup):
+    """The BD02 scatter path: swapped bytes/H2D scale with dirty blocks,
+    unchanged units are zero-read zero-H2D, and a repeat poll no-ops."""
+    model, reg, s1, s2 = setup
+    mgr = _mgr(tmp_path, reg, model)
+    try:
+        mgr.save(s1, step=10)
+        # Drift exactly one unit; everything else dedups to step 10.
+        unit = model.layer_units()[1].name
+        p2 = dict(s1["params"])
+        sub = reg.extract_unit(s1["params"], unit)
+        poked = jax.tree.map(lambda x: np.array(x), sub)
+        for leaf in jax.tree.leaves(poked):
+            leaf.flat[:1] += 1
+        mgr.save({"step": s1["step"],
+                  "params": reg.insert_unit(p2, unit, poked),
+                  "opt": s1["opt"]}, step=20)
+        like = steps_lib.state_specs(model)
+        svc = WeightService(mgr, like, step=10)
+        stats = svc.poll()
+        n_units = len(model.layer_units())
+        assert stats["units_swapped"] == 1
+        assert stats["units_skipped"] == n_units - 1
+        assert stats["units_scattered"] == 1 and stats["units_full"] == 0
+        total = sum(np.asarray(x).nbytes
+                    for x in jax.tree.leaves(svc.current()))
+        assert 0 < stats["h2d_bytes"] < total // 10
+        assert stats["blocks_applied"] > 0
+        cold = mgr.restore(like, parts=("params",), step=20)
+        _assert_params_equal(svc.current(), cold["params"])
+        # already current: poll is a pure no-op (not even a manifest load)
+        assert svc.poll() is None
+    finally:
+        mgr.close()
+
+
+def test_swap_across_skipped_manifests(tmp_path, setup):
+    """Delta-chain promotion across several manifests the server never
+    saw: 10 -> 40 in one swap, parity with a cold restore of 40."""
+    model, reg, s1, _ = setup
+    mgr = _mgr(tmp_path, reg, model)
+    try:
+        state = s1
+        mgr.save(state, step=10)
+        for step in (20, 30, 40):
+            state = {"step": state["step"],
+                     "params": jax.tree.map(
+                         lambda x: np.array(x) + np.ones(1, np.asarray(
+                             x).dtype), state["params"]),
+                     "opt": state["opt"]}
+            mgr.save(state, step=step)
+        like = steps_lib.state_specs(model)
+        svc = WeightService(mgr, like, step=10)
+        stats = svc.poll()
+        assert stats["step_from"] == 10 and stats["step_to"] == 40
+        cold = mgr.restore(like, parts=("params",), step=40)
+        _assert_params_equal(svc.current(), cold["params"])
+    finally:
+        mgr.close()
+
+
+def test_swap_rollback_to_older_manifest(tmp_path, setup):
+    """Demotion is promotion backwards: pointing LATEST at an older step
+    swaps the fleet back bit-exact (digest diff, not step arithmetic)."""
+    model, reg, s1, s2 = setup
+    mgr = _mgr(tmp_path, reg, model)
+    try:
+        mgr.save(s1, step=10)
+        mgr.save(s2, step=20)
+        like = steps_lib.state_specs(model)
+        svc = WeightService(mgr, like, step=20)
+        # roll LATEST back to 10 (what an operator rollback does)
+        m10 = mgr.manifests.load(10)
+        mgr.manifests.commit(m10)
+        stats = svc.poll()
+        assert stats["step_to"] == 10
+        cold = mgr.restore(like, parts=("params",), step=10)
+        _assert_params_equal(svc.current(), cold["params"])
+    finally:
+        mgr.close()
+
+
+def test_swap_apply_crash_leaves_old_weights_serving(tmp_path, setup):
+    """The swap_apply drill: a crash mid-swap must leave the previous
+    weights served (never a half-applied tensor) and the next poll must
+    complete the identical swap cleanly."""
+    model, reg, s1, s2 = setup
+    mgr = _mgr(tmp_path, reg, model)
+    try:
+        mgr.save(s1, step=10)
+        mgr.save(s2, step=20)
+        like = steps_lib.state_specs(model)
+        svc = WeightService(mgr, like, step=10)
+        before = svc.current()
+        served_before = dict(svc._served)
+        # hit=2: die on the SECOND changed unit — some units already
+        # staged, none may be published.
+        with faults.scoped("swap_apply", hit=2):
+            with pytest.raises(InjectedCrash):
+                svc.poll()
+        assert svc.step == 10
+        assert svc._served == served_before
+        _assert_params_equal(svc.current(), before)
+        cold10 = mgr.restore(like, parts=("params",), step=10)
+        _assert_params_equal(svc.current(), cold10["params"])
+        # recovery: the next poll redoes the whole swap (idempotent diff)
+        stats = svc.poll()
+        assert stats is not None and svc.step == 20
+        cold20 = mgr.restore(like, parts=("params",), step=20)
+        _assert_params_equal(svc.current(), cold20["params"])
+    finally:
+        mgr.close()
+
+
+# ------------------------------------------------------------- block cache
+def test_block_cache_lru_budget_and_eviction():
+    c = BlockCache(100)
+    reads = {"n": 0}
+
+    def loader(blob):
+        def go():
+            reads["n"] += 1
+            return blob
+        return go
+
+    assert c.get("a", loader(b"a" * 40)) == b"a" * 40
+    assert c.get("b", loader(b"b" * 40)) == b"b" * 40
+    assert c.get("a", loader(b"a" * 40)) == b"a" * 40  # hit, refreshes LRU
+    assert reads["n"] == 2
+    # 40+40+40 > 100: evicts the LRU entry, which is now "b"
+    c.get("c", loader(b"c" * 40))
+    snap = c.snapshot()
+    assert snap["evictions"] == 1
+    assert c.peek("a") and c.peek("c") and not c.peek("b")
+    # oversized entries bypass instead of wiping the cache
+    c.get("huge", loader(b"x" * 500))
+    snap = c.snapshot()
+    assert snap["bypassed"] == 1 and snap["entries"] == 2
+    # a failed load is NOT memoized: the next get retries and succeeds
+    with pytest.raises(RuntimeError):
+        c.get("flaky", (lambda: (_ for _ in ()).throw(RuntimeError("io"))))
+    assert c.get("flaky", loader(b"f")) == b"f"
+
+
+def test_block_cache_coalesces_concurrent_misses():
+    c = BlockCache(1 << 20)
+    started = threading.Event()
+    release = threading.Event()
+    loads = {"n": 0}
+
+    def slow_loader():
+        loads["n"] += 1
+        started.set()
+        release.wait(5)
+        return b"payload"
+
+    results = []
+
+    def get():
+        results.append(c.get("d", slow_loader))
+
+    threads = [threading.Thread(target=get) for _ in range(4)]
+    threads[0].start()
+    assert started.wait(5)
+    for t in threads[1:]:
+        t.start()
+    time.sleep(0.05)  # let the followers reach the wait
+    release.set()
+    for t in threads:
+        t.join(5)
+    assert loads["n"] == 1
+    assert results == [b"payload"] * 4
+    snap = c.snapshot()
+    assert snap["misses"] == 1 and snap["coalesced"] >= 1
+
+
+def test_block_cache_shm_segments_cleaned():
+    """shm=True entries live under the repo-wide repro-io-<pid>- prefix
+    (one glob covers worker arenas, staging slots, AND cache segments)
+    and close() unlinks them — the conftest leak guard enforces this
+    for every test in the session."""
+    pattern = f"/dev/shm/repro-io-{os.getpid():x}-cache-*"
+    c = BlockCache(1 << 20, shm=True)
+    c.get("a", lambda: b"x" * 128)
+    assert glob.glob(pattern)
+    assert c.get("a", lambda: b"never") == b"x" * 128
+    c.close()
+    assert not glob.glob(pattern)
+
+
+def test_store_reads_through_cache_and_gc_discards(tmp_path, setup):
+    """ChunkStore._backend_read consults the cache (second manager-level
+    read of one digest never touches the backend) and gc drops deleted
+    digests from the cache."""
+    model, reg, s1, _ = setup
+    cache = BlockCache(64 << 20)
+    # full objects only: a delta would pin its step-10 base past the gc
+    mgr = _mgr(tmp_path, reg, model, block_cache=cache, keep=1,
+               delta=False, fingerprint=False)
+    try:
+        mgr.save(s1, step=10)
+        digest = next(iter(mgr.manifests.load(10).referenced_digests()))
+        mgr.store.read_object_bytes(digest)
+        before = mgr.store.backend_reads
+        mgr.store.read_object_bytes(digest)
+        assert mgr.store.backend_reads == before  # served from cache
+        assert cache.peek(digest)
+        # retire the manifest; gc must evict its digests from the cache
+        poked = {"step": s1["step"],
+                 "params": jax.tree.map(lambda x: np.array(x) + 1,
+                                        s1["params"]),
+                 "opt": s1["opt"]}
+        mgr.save(poked, step=20)
+        mgr.gc()
+        assert not mgr.store.has(digest)
+        assert not cache.peek(digest)
+    finally:
+        mgr.close()
+        cache.close()
+
+
+# ---------------------------------------------------------------- variants
+def test_variant_manifest_expansion_and_errors(tmp_path, setup):
+    model, reg, s1, s2 = setup
+    mgr = _mgr(tmp_path, reg, model)
+    try:
+        mgr.save(s1, step=10)
+        mgr.save(s2, step=20)
+        units = [u.name for u in model.layer_units()]
+        blocks = [u for u in units if u.startswith("block_")]
+        m = variant_manifest(
+            mgr.manifests, base_step=20,
+            select=[(f"{blocks[0]}..{blocks[-1]}", 10)], name="v")
+        assert m.step == 20
+        assert m.meta["variant"]["name"] == "v"
+        m10, m20 = mgr.manifests.load(10), mgr.manifests.load(20)
+        for u in units:
+            want = m10 if u in blocks else m20
+            assert _entry_key(m.entries[u]["weights"]) \
+                == _entry_key(want.entries[u]["weights"])
+        with pytest.raises(KeyError):
+            variant_manifest(mgr.manifests, base_step=20,
+                             select=[("no_such_unit", 10)])
+        with pytest.raises(MergeError):
+            variant_manifest(mgr.manifests, base_step=20,
+                             select=[(blocks[0], 999)])
+    finally:
+        mgr.close()
+
+
+def test_variants_share_digest_reads_through_cache(tmp_path, setup):
+    """K variants behind one BlockCache read each shared digest off the
+    backend exactly once (spying on the backend read layer)."""
+    model, reg, s1, s2 = setup
+    mgr = _mgr(tmp_path, reg, model, block_cache_bytes=64 << 20)
+    try:
+        mgr.save(s1, step=10)
+        mgr.save(s2, step=20)
+        seen = []
+        real = mgr.store.backend.read
+
+        def spy(digest):
+            seen.append(digest)
+            return real(digest)
+
+        mgr.store.backend.read = spy
+        like = steps_lib.state_specs(model)
+        units = [u.name for u in model.layer_units()]
+        vs = VariantSet(mgr, like)
+        vs.materialize("a", base_step=20)
+        vs.materialize("b", base_step=20, select=[(units[0], 10)])
+        vs.materialize("c", base_step=20, select=[(units[-1], 10)])
+        assert len(seen) == len(set(seen)), \
+            f"digest read more than once across variants: {seen}"
+        cache = mgr.block_cache.snapshot()
+        assert cache["hits"] > 0
+        assert cache["misses"] == len(set(seen))
+        # parity: variant b's overridden unit serves step-10 content
+        cold10 = mgr.restore(like, parts=("params",), step=10)
+        _assert_params_equal(
+            reg.extract_unit(vs.params("b"), units[0]),
+            reg.extract_unit(cold10["params"], units[0]))
+    finally:
+        mgr.store.backend.read = real
+        mgr.close()
+
+
+def test_uncached_variants_read_more(tmp_path, setup):
+    """The bench gate's property at test scale: 3 uncached loads issue
+    strictly more backend reads than 3 cached loads from one store."""
+    model, reg, s1, s2 = setup
+    like = steps_lib.state_specs(model)
+    units = [u.name for u in model.layer_units()]
+    selects = [(), [(units[0], 10)], [(units[-1], 10)]]
+
+    def load_k(root, cache_bytes):
+        mgr = _mgr(root, reg, model, block_cache_bytes=cache_bytes)
+        try:
+            mgr.save(s1, step=10)
+            mgr.save(s2, step=20)
+            base = mgr.store.backend_reads
+            vs = VariantSet(mgr, like)
+            for i, sel in enumerate(selects):
+                vs.materialize(f"v{i}", base_step=20, select=sel)
+            return mgr.store.backend_reads - base
+        finally:
+            mgr.close()
+
+    cached = load_k(tmp_path / "cached", 64 << 20)
+    uncached = load_k(tmp_path / "uncached", None)
+    assert cached < uncached
+
+
+# ------------------------------------------------------------ fleet restore
+def test_concurrent_fleet_restore_one_store(tmp_path, setup):
+    """Several server 'replicas' (one manager each, same root) restoring
+    concurrently from one store all land bit-exact."""
+    model, reg, s1, _ = setup
+    writer = _mgr(tmp_path, reg, model)
+    writer.save(s1, step=10)
+    writer.close()
+    like = steps_lib.state_specs(model)
+    ref = None
+    results = [None] * 3
+    errors = []
+
+    def replica(i):
+        try:
+            m = _mgr(tmp_path, reg, model)
+            try:
+                st = m.restore(like, parts=("params",), step=10)
+                results[i] = st["params"]
+            finally:
+                m.close()
+        except BaseException as e:  # noqa: BLE001 - surfaced below
+            errors.append(e)
+
+    threads = [threading.Thread(target=replica, args=(i,)) for i in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(120)
+    assert not errors, errors
+    ref_mgr = _mgr(tmp_path, reg, model)
+    try:
+        ref = ref_mgr.restore(like, parts=("params",), step=10)["params"]
+    finally:
+        ref_mgr.close()
+    for got in results:
+        assert got is not None
+        _assert_params_equal(got, ref)
